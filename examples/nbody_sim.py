@@ -1,0 +1,30 @@
+"""N-body example (§5.5): three simultaneous forwarding contexts.
+
+Runs the distributed Barnes-Hut-style simulation on 8 ranks (2×2×2 grid
+decomposition) and reports conservation + accuracy against direct sum —
+the Fig. 7 analogue.
+
+Run:  PYTHONPATH=src python examples/nbody_sim.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.apps import nbody
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+cfg = nbody.NBodyConfig(num_particles=256, steps=8, dt=5e-4, theta=0.3)
+
+pos, vel, stats = nbody.run(mesh, cfg)
+po, vo = nbody.oracle(cfg)
+
+print(f"rank grid: {stats['dims']}, particles per step: {stats['totals']}")
+print(f"queue drops: {stats['drops']}")
+print(f"max position error vs direct sum: {np.abs(pos-po).max():.2e}")
+print(f"rms velocity error vs direct sum: {np.sqrt(((vel-vo)**2).mean()):.2e}")
+assert stats["totals"][-1] == cfg.num_particles, "particles lost!"
+print("OK — particles conserved through migration, three contexts coexisting")

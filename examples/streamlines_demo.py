@@ -1,0 +1,32 @@
+"""Streamlines example (§5.4): RK4 particle advection with forwarding.
+
+Advects particle sets through three analytic vector fields (ABC flow,
+tornado, Taylor-Green) on an 8-rank slab partition — the Fig. 6 analogue —
+and verifies against the single-device oracle.
+
+Run:  PYTHONPATH=src python examples/streamlines_demo.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.apps import streamlines as sl
+from repro.kernels.rk4_advect import ops as rk4
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+
+for name, fid in [("ABC", rk4.ABC), ("tornado", rk4.TORNADO), ("taylor-green", rk4.TAYLOR_GREEN)]:
+    cfg = sl.StreamlineConfig(num_particles=48, max_steps=60, dt=0.12, field_id=fid)
+    traces, lengths, stats = sl.run(mesh, cfg)
+    orc = sl.oracle(cfg)
+    m = np.isfinite(traces) & np.isfinite(orc)
+    err = np.abs(traces[m] - orc[m]).max() if m.any() else 0.0
+    ok = np.array_equal(np.isfinite(traces), np.isfinite(orc)) and err < 5e-4
+    print(
+        f"{name:>13}: mean streamline length {lengths.mean():6.1f} steps, "
+        f"rounds {stats['rounds']:3d}, oracle max err {err:.1e} -> {'OK' if ok else 'FAIL'}"
+    )

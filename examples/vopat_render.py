@@ -1,0 +1,36 @@
+"""VoPaT example: distributed volume path tracing with ray forwarding (§5.1).
+
+Renders the blob scene on 1 rank and on 8 ranks, checks the images are
+bitwise identical (the paper's "images will not differ in any way"), and
+writes PPMs — the Fig. 2 analogue.
+
+Run:  PYTHONPATH=src python examples/vopat_render.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.apps import vopat
+from repro.apps.fields import write_ppm
+
+scene = vopat.VopatScene(width=96, height=96, spp=1, max_bounces=4, albedo=0.85)
+m1 = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+m8 = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+
+t0 = time.time()
+img8, s8 = vopat.render(m8, scene)
+print(f"8-rank render: {time.time()-t0:.1f}s  rounds={s8['rounds']} drops={s8['drops']}")
+t0 = time.time()
+img1, s1 = vopat.render(m1, scene)
+print(f"1-rank render: {time.time()-t0:.1f}s  rounds={s1['rounds']}")
+print("bitwise identical across rank counts:", np.array_equal(img1, img8))
+
+out = os.path.join(os.path.dirname(__file__), "vopat_8rank.ppm")
+write_ppm(out, img8)
+print("wrote", out)

@@ -1,0 +1,10 @@
+"""Sample applications (paper §5) built on the repro.core forwarding layer.
+
+  vopat.py        §5.1 data-parallel volume path tracer (Woodcock tracking,
+                  wavefront self-forwarding, distributed framebuffer)
+  lander.py       §5.2 non-convex-partition volume renderer: RaFI forwarding
+                  vs the deep-compositing baseline it replaces
+  schlieren.py    §5.3 data-parallel Schlieren renderer (knife-edge filters)
+  streamlines.py  §5.4 RK4 particle advection with particle forwarding
+  nbody.py        §5.5 multi-phase N-body with three simultaneous contexts
+"""

@@ -1,0 +1,152 @@
+"""Shared scene infrastructure for the sample apps.
+
+* a procedural scalar field (Gaussian-blob mixture) with analytic gradient —
+  the stand-in for the papers' volume data (rotstrat / thunderstorm / Mars
+  Lander); procedural fields keep TPU kernels gather-free (DESIGN.md §2);
+* slab domain partitions (the 1-D special case of VoPaT's k-d partitioning)
+  with *proxy* arithmetic: every rank knows every slab's bounds, so "tracing
+  against proxies" (OptiX in the paper) becomes closed-form slab arithmetic;
+* a pinhole camera for the renderers.
+
+Domain: the unit cube [0,1]³ unless stated otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ------------------------------------------------------------------ fields
+
+def default_blobs(num: int = 6, seed: int = 0) -> jax.Array:
+    """(G, 5) rows (cx, cy, cz, sigma, amplitude) inside the unit cube."""
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(0.2, 0.8, size=(num, 3))
+    s = rng.uniform(0.05, 0.15, size=(num, 1))
+    a = rng.uniform(1.0, 3.0, size=(num, 1))
+    return jnp.asarray(np.concatenate([c, s, a], axis=1), jnp.float32)
+
+
+def density(p: jax.Array, blobs: jax.Array) -> jax.Array:
+    """σ(p) for p (..., 3); blobs (G,5)."""
+    d = p[..., None, :] - blobs[..., :, :3]
+    r2 = jnp.sum(d * d, axis=-1)
+    s2 = blobs[..., :, 3] ** 2
+    return jnp.sum(blobs[..., :, 4] * jnp.exp(-0.5 * r2 / s2), axis=-1)
+
+
+def density_gradient(p: jax.Array, blobs: jax.Array) -> jax.Array:
+    """∇σ(p) (..., 3), closed form for the Gaussian mixture."""
+    d = p[..., None, :] - blobs[..., :, :3]
+    r2 = jnp.sum(d * d, axis=-1)
+    s2 = blobs[..., :, 3] ** 2
+    w = blobs[..., :, 4] * jnp.exp(-0.5 * r2 / s2) / s2  # (..., G)
+    return -jnp.sum(w[..., None] * d, axis=-2)
+
+
+def majorant(blobs: jax.Array) -> float:
+    """A safe global majorant: Σ amplitudes (blob peaks can coincide)."""
+    return float(jnp.sum(blobs[:, 4]) * 1.05)
+
+
+# ------------------------------------------------------------- slab proxies
+
+@dataclasses.dataclass(frozen=True)
+class SlabPartition:
+    """``num_slabs`` equal x-slabs of [0,1]³, owned round-robin by R ranks.
+
+    ``num_slabs == R`` gives convex per-rank domains (VoPaT §5.1);
+    ``num_slabs == k·R`` with k > 1 gives the *non-convex* interleaved
+    ownership of the Mars-Lander scenario (§5.2): rank r owns slabs
+    {r, r+R, r+2R, ...} so a ray re-enters the same rank many times.
+    """
+
+    num_slabs: int
+    num_ranks: int
+
+    @property
+    def width(self) -> float:
+        return 1.0 / self.num_slabs
+
+    def slab_of(self, x) -> jax.Array:
+        return jnp.clip((x / self.width).astype(jnp.int32), 0, self.num_slabs - 1)
+
+    def owner_of_slab(self, slab) -> jax.Array:
+        return (slab % self.num_ranks).astype(jnp.int32)
+
+    def owner_of(self, p) -> jax.Array:
+        return self.owner_of_slab(self.slab_of(p[..., 0]))
+
+    def bounds(self, slab) -> Tuple[jax.Array, jax.Array]:
+        lo = slab.astype(jnp.float32) * self.width
+        return lo, lo + self.width
+
+
+def ray_box_exit(o, d, t, lo_x, hi_x):
+    """First exit of ray p = o + t·d (current param ``t``) from the box
+    [lo_x,hi_x]×[0,1]×[0,1].  Returns (t_exit, axis, positive_side):
+    axis ∈ {0,1,2}; for axis 0 the ray crosses an x-plane (slab face)."""
+    eps = 1e-12
+    inv = 1.0 / jnp.where(jnp.abs(d) < eps, jnp.where(d >= 0, eps, -eps), d)
+    lo = jnp.stack([lo_x, jnp.zeros_like(lo_x), jnp.zeros_like(lo_x)], -1)
+    hi = jnp.stack([hi_x, jnp.ones_like(hi_x), jnp.ones_like(hi_x)], -1)
+    t_far = jnp.where(d >= 0, (hi - o) * inv, (lo - o) * inv)  # (..., 3)
+    t_exit = jnp.min(t_far, axis=-1)
+    axis = jnp.argmin(t_far, axis=-1).astype(jnp.int32)
+    pos_side = jnp.take_along_axis(d, axis[..., None], axis=-1)[..., 0] >= 0
+    return jnp.maximum(t_exit, t), axis, pos_side
+
+
+def ray_domain_entry(o, d):
+    """Entry parameter of the ray into [0,1]³ (-inf..; clip at 0), and a hit
+    mask.  Rays starting inside enter at t=0."""
+    eps = 1e-12
+    inv = 1.0 / jnp.where(jnp.abs(d) < eps, jnp.where(d >= 0, eps, -eps), d)
+    t0 = (0.0 - o) * inv
+    t1 = (1.0 - o) * inv
+    t_near = jnp.max(jnp.minimum(t0, t1), axis=-1)
+    t_far = jnp.min(jnp.maximum(t0, t1), axis=-1)
+    t_entry = jnp.maximum(t_near, 0.0)
+    return t_entry, (t_far > t_entry)
+
+
+# ----------------------------------------------------------------- camera
+
+def camera_rays(width: int, height: int, *, eye=(-1.2, 0.5, 0.5), look=(1.0, 0.0, 0.0), fov: float = 0.9):
+    """Pinhole camera: returns (origins (H·W,3), dirs (H·W,3) normalized)."""
+    eye = jnp.asarray(eye, jnp.float32)
+    fwd = jnp.asarray(look, jnp.float32)
+    fwd = fwd / jnp.linalg.norm(fwd)
+    up0 = jnp.asarray([0.0, 0.0, 1.0], jnp.float32)
+    right = jnp.cross(fwd, up0)
+    right = right / jnp.linalg.norm(right)
+    up = jnp.cross(right, fwd)
+    ys, xs = jnp.meshgrid(
+        jnp.linspace(-1, 1, height), jnp.linspace(-1, 1, width), indexing="ij"
+    )
+    d = fwd[None, :] + jnp.tan(fov / 2) * (
+        xs.reshape(-1)[:, None] * right[None, :] + ys.reshape(-1)[:, None] * up[None, :]
+    )
+    d = d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+    o = jnp.broadcast_to(eye, d.shape)
+    return o, d
+
+
+def sky(d: jax.Array) -> jax.Array:
+    """Simple gradient environment light (grayscale)."""
+    return 0.5 + 0.5 * jnp.clip(d[..., 2], -1.0, 1.0)
+
+
+def write_ppm(path: str, img: np.ndarray) -> None:
+    """Write a grayscale or RGB float image in [0,1] as binary PPM."""
+    img = np.asarray(img)
+    if img.ndim == 2:
+        img = np.repeat(img[..., None], 3, axis=-1)
+    u8 = (np.clip(img, 0, 1) * 255).astype(np.uint8)
+    h, w, _ = u8.shape
+    with open(path, "wb") as f:
+        f.write(f"P6\n{w} {h}\n255\n".encode())
+        f.write(u8.tobytes())

@@ -1,0 +1,112 @@
+"""Fault-tolerant checkpointing: atomic, integrity-checked, mesh-elastic.
+
+* **Atomic**: a checkpoint is written to ``step_<k>.tmp/`` and renamed to
+  ``step_<k>/`` only after every file (and the manifest) is fsync'd — a
+  crash mid-write can never leave a half checkpoint that restore would read.
+* **Integrity**: the manifest stores a SHA-256 per tensor file; restore
+  verifies before deserializing (detects bit-rot / truncation — at 1000+
+  nodes storage corruption is a when, not an if).
+* **Elastic**: tensors are saved in their *logical* (unsharded) layout, so
+  restore can land them on ANY mesh — restart with a different pod count or
+  (data, model) factorization just passes different shardings.  (At real
+  scale this becomes per-shard files + resharding on read; the logical-layout
+  contract is what matters and is what the elastic test exercises.)
+* **Retention**: keep the latest k checkpoints, delete older ones.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _hash(b: bytes) -> str:
+    return hashlib.sha256(b).hexdigest()
+
+
+def save_checkpoint(ckpt_dir, step: int, tree: Any, *, keep: int = 3) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    final = ckpt_dir / f"step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    leaves, treedef = _flatten(tree)
+    manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        path = tmp / f"leaf_{i:05d}.npy"
+        with open(path, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["leaves"].append(
+            {
+                "file": path.name,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "sha256": _hash(path.read_bytes()),
+            }
+        )
+    mpath = tmp / "manifest.json"
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+
+    # retention
+    ckpts = sorted(p for p in ckpt_dir.iterdir() if p.name.startswith("step_") and not p.name.endswith(".tmp"))
+    for old in ckpts[:-keep]:
+        shutil.rmtree(old)
+    return final
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in ckpt_dir.iterdir()
+        if p.name.startswith("step_") and not p.name.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir, step: int, like: Any, *, shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``; optionally device_put with
+    ``shardings`` (a pytree of NamedShardings — the elastic-rescale path)."""
+    final = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((final / "manifest.json").read_text())
+    leaves_like, treedef = _flatten(like)
+    assert len(manifest["leaves"]) == len(leaves_like), "checkpoint/model mismatch"
+    out = []
+    for i, (entry, ref) in enumerate(zip(manifest["leaves"], leaves_like)):
+        raw = (final / entry["file"]).read_bytes()
+        if _hash(raw) != entry["sha256"]:
+            raise IOError(f"checkpoint corruption in {entry['file']}")
+        arr = np.load(final / entry["file"])
+        assert list(arr.shape) == list(ref.shape), (
+            f"leaf {i}: shape {arr.shape} != expected {ref.shape}"
+        )
+        out.append(arr)
+    tree = jax.tree.unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree

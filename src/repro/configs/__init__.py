@@ -1,0 +1,1 @@
+from repro.configs.registry import ARCHS, get_config, get_smoke_config, input_specs, shape_suite  # noqa: F401

@@ -1,0 +1,132 @@
+"""Architecture registry + per-(arch × shape) input specs for the dry-run.
+
+``input_specs(arch, shape, mesh)`` returns ShapeDtypeStructs for every model
+input — weak-type-correct, shardable, zero allocation — plus which step
+function (train / prefill / decode) the shape lowers, and whether the cell
+is skipped (with the reason), per DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models.common import ModelConfig
+
+_MODULES = {
+    "qwen2-7b": "qwen2_7b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "glm4-9b": "glm4_9b",
+    "gemma3-1b": "gemma3_1b",
+    "llama4-scout-17b-16e": "llama4_scout_17b_16e",
+    "dbrx-132b": "dbrx_132b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "rwkv6-3b": "rwkv6_3b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+}
+
+ARCHS = tuple(_MODULES)
+
+# archs that can run 524k-token decode (sub-quadratic sequence mixing)
+SUB_QUADRATIC = ("rwkv6-3b", "recurrentgemma-2b")
+
+
+def _module(arch: str):
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def shape_suite(arch: str):
+    """(shape_name -> ShapeSpec | skip reason) for one architecture."""
+    out: Dict[str, Any] = {}
+    for name, spec in SHAPES.items():
+        if name == "long_500k" and arch not in SUB_QUADRATIC:
+            out[name] = (
+                "SKIP: full-range attention layers are quadratic at 524k "
+                "context (DESIGN.md §Arch-applicability)"
+            )
+        else:
+            out[name] = spec
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    step: str                 # train | prefill | decode
+    batch: Dict[str, Any]     # ShapeDtypeStructs for step inputs
+    skip: Optional[str] = None
+
+
+def input_specs(arch: str, shape_name: str, cfg: Optional[ModelConfig] = None) -> Cell:
+    """ShapeDtypeStruct stand-ins for every input of the (arch × shape) cell."""
+    cfg = cfg or get_config(arch)
+    suite = shape_suite(arch)
+    entry = suite[shape_name]
+    if isinstance(entry, str):
+        return Cell(arch, SHAPES[shape_name], "skip", {}, skip=entry)
+    spec: ShapeSpec = entry
+    b, s = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+
+    if spec.step == "train":
+        if cfg.kind == "encdec":
+            batch = {
+                "frames": jax.ShapeDtypeStruct((b, s // 8, cfg.d_model), cfg.jdtype),
+                "tokens": jax.ShapeDtypeStruct((b, s // 8), i32),
+            }
+        elif cfg.frontend == "vision":
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.jdtype),
+                "labels": jax.ShapeDtypeStruct((b, s - 1), i32),
+            }
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return Cell(arch, spec, "train", batch)
+
+    if spec.step == "prefill":
+        if cfg.kind == "encdec":
+            batch = {
+                "frames": jax.ShapeDtypeStruct((b, s // 8, cfg.d_model), cfg.jdtype),
+                "tokens": jax.ShapeDtypeStruct((b, s // 8), i32),
+            }
+        elif cfg.frontend == "vision":
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.jdtype),
+            }
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return Cell(arch, spec, "prefill", batch)
+
+    # decode: one new token against a seq_len-deep cache
+    batch = {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.kind == "encdec":
+        batch["memory"] = jax.ShapeDtypeStruct((b, 1024, cfg.d_model), cfg.jdtype)
+    return Cell(arch, spec, "decode", batch)
+
+
+def batch_shardings(cell: Cell, mesh, cfg: ModelConfig):
+    """NamedShardings for the cell's batch inputs (batch dim over data axes)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    baxes = tuple(a for a in mesh.axis_names if a != "model")
+
+    def shard_first(_path_unused, s):
+        return NamedSharding(mesh, P(baxes, *([None] * (len(s.shape) - 1))))
+
+    return {k: shard_first(k, v) for k, v in cell.batch.items()}

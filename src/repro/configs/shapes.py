@@ -1,0 +1,28 @@
+"""The assigned input-shape suite (shared by all 10 LM architectures).
+
+  train_4k      seq 4,096  × global batch 256   → lowers train_step
+  prefill_32k   seq 32,768 × global batch 32    → lowers prefill
+  decode_32k    KV ctx 32,768 × global batch 128 → lowers serve_step (1 token)
+  long_500k     KV ctx 524,288 × global batch 1  → serve_step; SUB-QUADRATIC
+                archs only (rwkv6, recurrentgemma) — see DESIGN.md
+                §Arch-applicability for the skip rationale per arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,48 @@
+"""repro.core — the paper's contribution: a work-forwarding infrastructure.
+
+Public surface (the JAX analogue of RaFI's two headers):
+
+Device interface (usable inside any traced kernel):
+  WorkQueue, make_queue, enqueue, get_incoming, num_incoming, DISCARD
+
+Host context:
+  RafiContext (mesh plumbing), ForwardConfig, forward_work (inside shard_map),
+  run_until_done (on-device drive loop), rebalance (beyond-paper).
+
+Item typing:
+  work_item (dataclass registry), item_nbytes.
+"""
+from repro.core.context import RafiContext
+from repro.core.cycling import cycle_step, deliver_by_cycling
+from repro.core.forwarding import ForwardConfig, forward_work
+from repro.core.queue import (
+    DISCARD,
+    WorkQueue,
+    clear,
+    enqueue,
+    get_incoming,
+    make_queue,
+    num_incoming,
+)
+from repro.core.rebalance import rebalance
+from repro.core.termination import run_until_done
+from repro.core.types import batched_zeros, item_nbytes, item_spec, work_item
+
+__all__ = [
+    "DISCARD",
+    "ForwardConfig",
+    "RafiContext",
+    "WorkQueue",
+    "batched_zeros",
+    "clear",
+    "enqueue",
+    "forward_work",
+    "get_incoming",
+    "item_nbytes",
+    "item_spec",
+    "make_queue",
+    "num_incoming",
+    "rebalance",
+    "run_until_done",
+    "work_item",
+]

@@ -1,0 +1,168 @@
+"""Host-side RaFI context (paper §3.4) — mesh plumbing around the core.
+
+``RafiContext`` is the JAX analogue of ``HostContext<T>``: it owns the static
+configuration (item type, capacities, exchange backend, mesh axis), builds
+per-rank queues, and wraps the collective entry points in ``shard_map`` so
+applications never touch sharding specs.  The paper's three host operations
+map directly:
+
+  resizeRayQueues(N)     → ``capacity``/``peer_capacity`` in the constructor
+                           (static shapes; see DESIGN.md on why this is the
+                           faithful mapping of the paper's §6.3 contract)
+  getDeviceInterface()   → ``repro.core.queue`` (enqueue/get/num_incoming) —
+                           plain functions usable inside any traced kernel
+  forwardRays()          → :meth:`forward` (single round) /
+                           :meth:`run_until_done` (whole drive loop on device)
+
+Multiple contexts with different item types in the same program are fully
+supported (the N-body app uses three, §5.5) — contexts are just values.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import queue as Q
+from repro.core import termination as term
+from repro.core.forwarding import ForwardConfig, forward_work
+from repro.core.types import item_nbytes
+
+__all__ = ["RafiContext"]
+
+
+def _axis_size(mesh: Mesh, axis_name) -> int:
+    if isinstance(axis_name, (tuple, list)):
+        n = 1
+        for a in axis_name:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis_name]
+
+
+class RafiContext:
+    """A typed work-forwarding context bound to one mesh axis."""
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        proto: Any,
+        *,
+        axis_name: Any = "data",
+        capacity: int,
+        peer_capacity: int = 0,
+        exchange: str = "padded",
+        sort_method: str = "pack",
+        use_pallas: bool = False,
+    ):
+        self.mesh = mesh
+        self.proto = proto
+        self.item_nbytes = item_nbytes(proto)
+        self.cfg = ForwardConfig(
+            axis_name=axis_name,
+            num_ranks=_axis_size(mesh, axis_name),
+            capacity=capacity,
+            peer_capacity=peer_capacity,
+            exchange=exchange,
+            sort_method=sort_method,
+            use_pallas=use_pallas,
+        )
+        self._spec = P(axis_name)
+
+    # -- queue construction -------------------------------------------------
+    @property
+    def num_ranks(self) -> int:
+        return self.cfg.num_ranks
+
+    def local_queue(self) -> Q.WorkQueue:
+        """Per-rank empty queue (for use *inside* shard_map'ed code)."""
+        return Q.make_queue(self.proto, self.cfg.capacity)
+
+    def global_queue(self) -> Q.WorkQueue:
+        """Global (host-visible) empty queue: leaves (R*capacity, ...) sharded
+        over the context axis."""
+        q = Q.make_queue(self.proto, self.cfg.capacity * self.num_ranks)
+        return jax.device_put(q, jax.NamedSharding(self.mesh, self._spec))
+
+    def queue_specs(self):
+        """PartitionSpecs of a global queue (items leaves, dest: sharded;
+        count/drops: per-rank scalars stacked — see shard wrappers below)."""
+        return Q.WorkQueue(
+            items=jax.tree.map(lambda _: self._spec, self.proto),
+            dest=self._spec,
+            count=self._spec,
+            drops=self._spec,
+        )
+
+    # -- collective entry points --------------------------------------------
+    def shard(self, fn: Callable, *, in_specs, out_specs) -> Callable:
+        """shard_map + jit a per-rank function over the context's mesh."""
+        return jax.jit(
+            jax.shard_map(fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs)
+        )
+
+    def forward_rays(self) -> Callable:
+        """The paper's ``forwardRays()``: a jitted global function taking a
+        stacked global queue and returning ``(forwarded_queue, total)``."""
+        cfg = self.cfg
+
+        def step(q_stacked):
+            new_q, total = forward_work(_unstack_queue(q_stacked), cfg)
+            return _stack_queue(new_q), total
+
+        return self.shard(
+            step,
+            in_specs=(self._queue_out_specs(),),
+            out_specs=(self._queue_out_specs(), P()),
+        )
+
+    def run_until_done(
+        self,
+        round_fn: Callable,
+        *,
+        aux_specs: Any,
+        max_rounds: int = 64,
+    ) -> Callable:
+        """Jitted global driver: ``(q0_stacked, aux0) -> (q, aux, rounds)``.
+
+        ``round_fn(in_queue, aux, round_idx) -> (out_queue, aux)`` is per-rank
+        traced code using the device interface (enqueue/get_incoming).
+        """
+        cfg = self.cfg
+
+        def drive(q0_stacked, aux0):
+            q0 = _unstack_queue(q0_stacked)
+            q, aux, rounds = term.run_until_done(
+                round_fn, q0, aux0, cfg, max_rounds=max_rounds
+            )
+            return _stack_queue(q), aux, rounds
+
+        return self.shard(
+            drive,
+            in_specs=(self._queue_out_specs(), aux_specs),
+            out_specs=(self._queue_out_specs(), aux_specs, P()),
+        )
+
+    def _queue_out_specs(self):
+        return Q.WorkQueue(
+            items=jax.tree.map(lambda _: self._spec, self.proto),
+            dest=self._spec,
+            count=self._spec,
+            drops=self._spec,
+        )
+
+
+def _stack_queue(q: Q.WorkQueue) -> Q.WorkQueue:
+    """Per-rank queue -> globally concatenable form (scalars become (1,))."""
+    return Q.WorkQueue(
+        items=q.items, dest=q.dest, count=q.count[None], drops=q.drops[None]
+    )
+
+
+def _unstack_queue(q: Q.WorkQueue) -> Q.WorkQueue:
+    return Q.WorkQueue(
+        items=q.items, dest=q.dest, count=q.count[0], drops=q.drops[0]
+    )

@@ -1,0 +1,89 @@
+"""Ray-queue cycling — the paper's §6.3 alternative communication pattern.
+
+"…the NVIDIA Barney renderer instead uses *ray queue cycling*, in which
+every rank always communicates with exactly one other rank."  Instead of a
+sorted all-to-all, the *entire* queue migrates around a ring; each rank
+absorbs the items addressed to it and forwards the rest on the next cycle.
+One `collective_permute` per round — the cheapest possible collective, at
+the cost of R rounds for full delivery.
+
+Provided as a first-class alternative so applications can trade latency
+(forwarding: 1 round) against collective simplicity (cycling: R rounds of
+nearest-neighbour traffic) — useful when the interconnect is a ring and
+all-to-all congestion dominates.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import types as T
+from repro.core.forwarding import ForwardConfig
+from repro.core.queue import DISCARD, WorkQueue, enqueue, make_queue
+
+__all__ = ["cycle_step", "deliver_by_cycling"]
+
+
+def _ring_permute(x: jax.Array, axis_name, num_ranks: int) -> jax.Array:
+    perm = [(i, (i + 1) % num_ranks) for i in range(num_ranks)]
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
+def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, WorkQueue]:
+    """One ring hop: absorb items addressed to this rank, pass the rest on.
+
+    Returns ``(in_flight_queue_after_hop, absorbed_queue)``; both fixed
+    capacity.  Must run inside shard_map.
+    """
+    me = jax.lax.axis_index(cfg.axis_name)
+    lane = jnp.arange(q.capacity)
+    valid = lane < q.count
+    mine = valid & (q.dest == me)
+    passing = valid & ~mine
+
+    absorbed = enqueue(absorbed, q.items, jnp.where(mine, me, DISCARD).astype(jnp.int32), valid)
+
+    # compact the passing items, then ship the whole queue one hop
+    from repro.core.sorting import sort_by_destination
+
+    # stable compaction: give passing items key 0, others key 1 (tail)
+    fake_dest = jnp.where(passing, 0, DISCARD).astype(jnp.int32)
+    items_c, _, counts = sort_by_destination(q.items, fake_dest, q.count, 1)
+    dest_c, _, _ = sort_by_destination({"d": q.dest}, fake_dest, q.count, 1)
+    n_pass = counts[0]
+
+    shipped = jax.tree.map(
+        lambda a: _ring_permute(a, cfg.axis_name, cfg.num_ranks), items_c
+    )
+    shipped_dest = _ring_permute(dest_c["d"], cfg.axis_name, cfg.num_ranks)
+    shipped_count = _ring_permute(n_pass, cfg.axis_name, cfg.num_ranks)
+    nq = WorkQueue(
+        items=shipped,
+        dest=shipped_dest,
+        count=shipped_count.astype(jnp.int32),
+        drops=q.drops,
+    )
+    return nq, absorbed
+
+
+def deliver_by_cycling(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array]:
+    """Deliver every item by cycling the queue through the full ring (R-1
+    hops) — the drop-in 'Barney-style' replacement for one forward_work
+    round.  Returns (absorbed_queue, total_delivered_globally)."""
+    from repro.core.termination import _vary
+
+    absorbed = make_queue(jax.tree.map(lambda a: a[0], q.items), cfg.capacity)
+
+    def body(i, c):
+        nq, na = cycle_step(c[0], c[1], cfg)
+        return _vary(nq, cfg.axis_name), _vary(na, cfg.axis_name)
+
+    q, absorbed = jax.lax.fori_loop(
+        0, cfg.num_ranks,
+        body,
+        (_vary(q, cfg.axis_name), _vary(absorbed, cfg.axis_name)),
+    )
+    total = jax.lax.psum(absorbed.count, cfg.axis_name)
+    return absorbed, total

@@ -1,0 +1,174 @@
+"""Payload exchange — the TPU adaptation of RaFI §4.2.2 (MPI_Alltoallv).
+
+Three interchangeable backends, all called *inside* ``shard_map`` with a bound
+mesh axis:
+
+* ``ragged`` — ``jax.lax.ragged_all_to_all``: the exact XLA analogue of
+  ``MPI_Alltoallv`` and the TPU production path (single variable-size
+  exchange over contiguous per-peer segments — the whole point of sorting
+  first).  XLA:CPU cannot execute the op (verified UNIMPLEMENTED), so on CPU
+  this backend is only ``.lower()``-validated.
+* ``padded`` — fixed per-peer slots of size ``peer_capacity`` exchanged with a
+  single tiled ``jax.lax.all_to_all``.  Portable (runs on CPU; used by the
+  dry-run compile) at the cost of padding bandwidth.  This is also the
+  natural MoE-dispatch form (capacity-factor semantics).
+* ``onehot`` — an all-gather reference oracle with a deliberately different
+  code path, used only by tests.
+
+All backends share the contract: input items are *sorted by destination*
+(contiguous per-peer segments, offsets = exclusive-cumsum of counts); output
+is a compacted receive buffer plus per-peer receive counts.  Segment overflow
+(sender-side ``> peer_capacity``, or receiver-side total ``> capacity``) is
+dropped and counted — the queue-capacity contract of §3.3/§6.3.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import types as T
+
+__all__ = ["exchange_counts", "exchange_padded", "exchange_ragged", "exchange_onehot"]
+
+
+def _a2a(x: jax.Array, axis_name) -> jax.Array:
+    """all_to_all over leading axis: out[p] = what peer p sent me (block p)."""
+    return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=False)
+
+
+def exchange_counts(send_counts: jax.Array, axis_name) -> jax.Array:
+    """§4.2.2 step 2 — MPI_Alltoall of per-peer counts.
+
+    ``send_counts``: (R,) — how many items *I* send to each peer.
+    Returns (R,): how many items each peer sends *me*.
+    """
+    return _a2a(send_counts[:, None], axis_name).reshape(-1)
+
+
+def exchange_padded(
+    sorted_items: Any,
+    send_counts: jax.Array,  # (R,) valid-destination counts (histogram[:R])
+    *,
+    axis_name,
+    num_ranks: int,
+    capacity: int,
+    peer_capacity: int,
+) -> Tuple[Any, jax.Array, jax.Array, jax.Array]:
+    """Padded-slot exchange. Returns (recv_items, recv_counts, total, drops)."""
+    R, S = num_ranks, peer_capacity
+    clamped = jnp.minimum(send_counts, S)
+    send_drops = jnp.sum(send_counts - clamped)
+    off = jnp.cumsum(send_counts) - send_counts  # segment starts in sorted buffer
+
+    # Marshal: gather each peer's segment into its fixed (S,) slot.  src index
+    # for (peer r, slot s) is off[r] + s; lanes s >= clamped[r] carry garbage
+    # that the receiver masks out via counts.
+    r_idx = jnp.repeat(jnp.arange(R, dtype=jnp.int32), S)
+    s_idx = jnp.tile(jnp.arange(S, dtype=jnp.int32), R)
+    src = off[r_idx] + s_idx
+    send_buf = T.tree_take(sorted_items, src)  # leaves (R*S, ...)
+
+    recv_counts = exchange_counts(clamped, axis_name)  # (R,)
+    recv_buf = jax.tree.map(
+        lambda a: _a2a(a.reshape((R, S) + a.shape[1:]), axis_name), send_buf
+    )  # leaves (R, S, ...): block p = segment from peer p
+
+    # Compact: out[roff[p] + s] = recv_buf[p, s] for s < recv_counts[p].
+    roff = jnp.cumsum(recv_counts) - recv_counts
+    dstpos = roff[r_idx] + s_idx
+    ok = s_idx < recv_counts[r_idx]
+    slot = jnp.where(ok & (dstpos < capacity), dstpos, capacity)
+    out = T.batched_zeros(jax.tree.map(lambda a: a[0], sorted_items), capacity)
+    flat_recv = jax.tree.map(lambda a: a.reshape((R * S,) + a.shape[2:]), recv_buf)
+    out = T.tree_scatter(out, slot, flat_recv, capacity=capacity)
+
+    total_recv = jnp.sum(recv_counts)
+    new_count = jnp.minimum(total_recv, capacity)
+    recv_drops = total_recv - new_count
+    return out, recv_counts, new_count, send_drops + recv_drops
+
+
+def exchange_ragged(
+    sorted_items: Any,
+    send_counts: jax.Array,  # (R,)
+    *,
+    axis_name,
+    num_ranks: int,
+    capacity: int,
+    peer_capacity: int = 0,  # unused; signature parity
+) -> Tuple[Any, jax.Array, jax.Array, jax.Array]:
+    """ragged_all_to_all exchange — the MPI_Alltoallv / GPU-RDMA analogue.
+
+    Contiguous per-peer segments go out in ONE variable-size collective; the
+    receive side is written compacted directly (no unpack pass), which is the
+    paper's "large contiguous blocks at very high bandwidth" property.
+    """
+    del peer_capacity
+    R = num_ranks
+    off = jnp.cumsum(send_counts) - send_counts
+
+    # Receiver-capacity clamp: compute receive layout first, clamp segments to
+    # fit ``capacity``, and tell senders the allowed sizes (one tiny a2a).
+    recv_counts_raw = exchange_counts(send_counts, axis_name)
+    roff_raw = jnp.cumsum(recv_counts_raw) - recv_counts_raw
+    allowed_recv = jnp.clip(jnp.minimum(recv_counts_raw, capacity - roff_raw), 0)
+    roff = jnp.cumsum(allowed_recv) - allowed_recv
+    allowed_send = exchange_counts(allowed_recv, axis_name)  # my clamped send sizes
+    output_offsets = exchange_counts(roff, axis_name)  # where my block lands on peer r
+    send_drops = jnp.sum(send_counts - allowed_send)
+
+    proto = jax.tree.map(lambda a: a[0], sorted_items)
+    out = T.batched_zeros(proto, capacity)
+    out = jax.tree.map(
+        lambda op, o: jax.lax.ragged_all_to_all(
+            op,
+            o,
+            input_offsets=off,
+            send_sizes=allowed_send,
+            output_offsets=output_offsets,
+            recv_sizes=allowed_recv,
+            axis_name=axis_name,
+        ),
+        sorted_items,
+        out,
+    )
+    new_count = jnp.sum(allowed_recv)
+    return out, allowed_recv, new_count, send_drops
+
+
+def exchange_onehot(
+    sorted_items: Any,
+    send_counts: jax.Array,
+    *,
+    axis_name,
+    num_ranks: int,
+    capacity: int,
+    peer_capacity: int = 0,
+) -> Tuple[Any, jax.Array, jax.Array, jax.Array]:
+    """All-gather reference oracle (tests only): every rank sees everything,
+    selects what is addressed to it, and compacts stably by (source, lane).
+    Deliberately a different code path from the production backends.
+    """
+    del peer_capacity
+    R = num_ranks
+    me = jax.lax.axis_index(axis_name)
+    off = jnp.cumsum(send_counts) - send_counts
+    cap = jax.tree.leaves(sorted_items)[0].shape[0]
+    lane = jnp.arange(cap, dtype=jnp.int32)
+    # reconstruct per-item dest from segments: dest[i] = r iff off[r] <= i < off[r]+cnt
+    seg_end = off + send_counts
+    dest = jnp.sum((lane[:, None] >= seg_end[None, :]).astype(jnp.int32), axis=1)
+    dest = jnp.where(lane < jnp.sum(send_counts), dest, R)
+
+    all_items = jax.tree.map(lambda a: jax.lax.all_gather(a, axis_name), sorted_items)
+    all_dest = jax.lax.all_gather(dest, axis_name)  # (R, cap)
+    mine = (all_dest == me).reshape(-1)
+    order = jnp.argsort(~mine, stable=True)  # mine first, stable (src, lane) order
+    flat = jax.tree.map(lambda a: a.reshape((R * cap,) + a.shape[2:]), all_items)
+    gathered = T.tree_take(flat, order[:capacity])
+    total = jnp.sum(mine.astype(jnp.int32))
+    new_count = jnp.minimum(total, capacity)
+    recv_counts = jnp.sum((all_dest == me).astype(jnp.int32), axis=1)
+    return gathered, recv_counts, new_count, total - new_count

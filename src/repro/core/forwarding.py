@@ -1,0 +1,110 @@
+"""``forwardRays()`` — the full RaFI §4.2 pipeline, on-device.
+
+Per round, inside ``shard_map`` (so collectives bind to a real mesh axis):
+
+  1. sort emitted items by destination (§4.2.1, ``core.sorting``),
+  2. exchange per-peer counts (MPI_Alltoall analogue) and the payload
+     (MPI_Alltoallv analogue) (§4.2.2, ``core.exchange``),
+  3. wrap up (§4.2.3): the received buffer becomes the next input queue,
+     destinations reset to DISCARD, the emit counter resets, and a ``psum``
+     of received counts yields the *global* in-flight total for distributed
+     termination.
+
+Beyond the paper: because sort, exchange and termination test are all traced
+into one XLA program, a full multi-round computation runs under a single
+``jax.lax.while_loop`` with zero host round-trips (the CUDA/MPI original
+synchronises with the host every round to read back segment offsets).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exchange as X
+from repro.core import sorting as S
+from repro.core.queue import DISCARD, WorkQueue
+
+__all__ = ["ForwardConfig", "forward_work"]
+
+_EXCHANGES = {
+    "padded": X.exchange_padded,
+    "ragged": X.exchange_ragged,
+    "onehot": X.exchange_onehot,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ForwardConfig:
+    """Static configuration of a forwarding context.
+
+    Attributes:
+      axis_name: mesh axis (or tuple of axes) the queue is distributed over.
+      num_ranks: number of shards on that axis (R).
+      capacity: per-rank queue capacity (paper: ``resizeRayQueues(N)``).
+      peer_capacity: per-(src,dst) slot size for the padded backend.
+      exchange: "ragged" (TPU production) | "padded" (portable) | "onehot".
+      sort_method: "pack" (paper-faithful packed keys) | "argsort".
+      use_pallas: route sort/compact hot spots through the Pallas kernels.
+    """
+
+    axis_name: Any
+    num_ranks: int
+    capacity: int
+    peer_capacity: int = 0
+    exchange: str = "padded"
+    sort_method: str = "pack"
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        if self.exchange not in _EXCHANGES:
+            raise ValueError(f"unknown exchange {self.exchange!r}")
+        if self.peer_capacity <= 0 and self.exchange == "padded":
+            object.__setattr__(
+                self, "peer_capacity", max(1, -(-self.capacity // self.num_ranks) * 2)
+            )
+
+
+def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array]:
+    """One collective forwarding round. Must run inside ``shard_map``.
+
+    Returns ``(new_queue, total_in_flight)`` where ``total_in_flight`` is the
+    paper's §4.2.3 global reduce — the number of items alive across *all*
+    ranks after the exchange, used for distributed-termination detection.
+    """
+    R = cfg.num_ranks
+    if cfg.use_pallas:
+        from repro.kernels.sort_keys import ops as sk_ops
+
+        sorted_items, sorted_dest, send_counts = sk_ops.sort_by_destination(
+            q.items, q.dest, q.count, R
+        )
+    else:
+        sorted_items, sorted_dest, send_counts = S.sort_by_destination(
+            q.items, q.dest, q.count, R, method=cfg.sort_method
+        )
+    del sorted_dest  # segments are fully described by the histogram
+
+    fn = _EXCHANGES[cfg.exchange]
+    recv_items, recv_counts, new_count, drops = fn(
+        sorted_items,
+        send_counts[:R],
+        axis_name=cfg.axis_name,
+        num_ranks=R,
+        capacity=cfg.capacity,
+        peer_capacity=cfg.peer_capacity,
+    )
+    del recv_counts
+
+    new_q = WorkQueue(
+        items=recv_items,
+        dest=jnp.full((cfg.capacity,), DISCARD, jnp.int32),
+        count=new_count.astype(jnp.int32),
+        drops=q.drops + drops.astype(jnp.int32),
+    )
+    # §4.2.3: "a final MPI reduce-add on the number of rays received" —
+    # the global in-flight total for distributed termination.
+    total = jax.lax.psum(new_q.count, cfg.axis_name)
+    return new_q, total

@@ -1,0 +1,58 @@
+"""Work rebalancing — beyond-paper straggler mitigation on the RaFI core.
+
+The paper notes (§6.3) that RaFI "does not inherently address issues such as
+bottlenecks, starvation, or long-tail problems".  This module adds exactly
+that, *using the forwarding machinery itself*: given a (possibly wildly
+imbalanced) per-rank queue population, compute a balanced target layout and
+re-destination the surplus so one ``forward_work`` round equalises load.
+
+Strategy (deterministic, collective-free planning):
+  * global layout via ``all_gather`` of per-rank counts (R ints — tiny);
+  * target per rank = ceil(total / R);
+  * ranks are laid out on a virtual line of cumulative counts; item ``j`` of
+    the global order moves to rank ``j // target`` — an order-preserving
+    balanced re-assignment (comparable to work-stealing, but oblivious and
+    single-round, which suits a lock-step SPMD machine).
+
+Items whose destination is already set (``dest >= 0``) are left alone; only
+"resident" work (dest == DISCARD after a round, i.e. work the rank would
+process locally next round) is rebalanced.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.forwarding import ForwardConfig, forward_work
+from repro.core.queue import DISCARD, WorkQueue
+
+__all__ = ["plan_rebalance", "rebalance"]
+
+
+def plan_rebalance(count: jax.Array, axis_name, num_ranks: int) -> Tuple[jax.Array, jax.Array]:
+    """Per-rank (start, target): my items [0,count) map to global positions
+    [start, start+count) and global position j belongs on rank j // target."""
+    counts = jax.lax.all_gather(count, axis_name)  # (R,)
+    me = jax.lax.axis_index(axis_name)
+    start = (jnp.cumsum(counts) - counts)[me]
+    total = jnp.sum(counts)
+    target = jnp.maximum((total + num_ranks - 1) // num_ranks, 1)
+    return start.astype(jnp.int32), target.astype(jnp.int32)
+
+
+def rebalance(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array]:
+    """One balanced redistribution round.  Must run inside ``shard_map``.
+
+    Returns ``(balanced_queue, total)``.  After this call every rank holds
+    either ``floor`` or ``ceil`` of the mean population (subject to the usual
+    capacity clamps).
+    """
+    start, target = plan_rebalance(q.count, cfg.axis_name, cfg.num_ranks)
+    lane = jnp.arange(q.capacity, dtype=jnp.int32)
+    valid = lane < q.count
+    new_dest = jnp.where(valid, (start + lane) // target, DISCARD)
+    new_dest = jnp.minimum(new_dest, cfg.num_ranks - 1)
+    q = WorkQueue(items=q.items, dest=new_dest.astype(jnp.int32), count=q.count, drops=q.drops)
+    return forward_work(q, cfg)

@@ -1,0 +1,95 @@
+"""Distributed-termination drive loop (paper §4.2.3 / Chandy-Lamport note).
+
+The paper's applications loop: launch kernel → ``forwardRays()`` → check the
+reduced global count → repeat.  Because every stage here is traced JAX, the
+whole loop lives on device in one ``jax.lax.while_loop`` — each rank keeps
+iterating (possibly with an empty local queue) until the *global* in-flight
+count hits zero, which is exactly the paper's observation that "even if a
+rank does not receive any work during the current iteration, it may still be
+assigned more work from other ranks later on".
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.forwarding import ForwardConfig, forward_work
+from repro.core.queue import WorkQueue
+
+__all__ = ["run_until_done"]
+
+
+def _vary(tree: Any, axis_name) -> Any:
+    """Mark every leaf as device-varying over ``axis_name`` so the while-loop
+    carry types stay stable even if the app's aux starts out replicated."""
+    axes = tuple(axis_name) if isinstance(axis_name, (tuple, list)) else (axis_name,)
+
+    def cast(x):
+        x = jnp.asarray(x)
+        missing = tuple(a for a in axes if a not in jax.typeof(x).vma)
+        return jax.lax.pcast(x, missing, to="varying") if missing else x
+
+    return jax.tree.map(cast, tree)
+
+
+def run_until_done(
+    round_fn: Callable[[WorkQueue, Any, jax.Array], Tuple[WorkQueue, Any]],
+    q0: WorkQueue,
+    aux0: Any,
+    cfg: ForwardConfig,
+    *,
+    max_rounds: int = 64,
+) -> Tuple[WorkQueue, Any, jax.Array]:
+    """Iterate ``round_fn`` + ``forward_work`` until global termination.
+
+    Args:
+      round_fn: ``(in_queue, aux, round_idx) -> (out_queue, aux)`` — consumes
+        the input queue and *emits* into a fresh output queue (the paper's
+        separate in/out arrays, §3.2).  ``aux`` is arbitrary app state
+        (framebuffer, particle traces, ...).
+      q0: initial queue (already filled by the app's ray-gen stage).
+      aux0: initial app state.
+      cfg: forwarding configuration.
+      max_rounds: hard bound (XLA while loops need no bound, but runaway
+        protection mirrors the paper's capacity pragmatism).
+
+    Returns ``(final_queue, final_aux, rounds_executed)``.
+    """
+
+    def cond(carry):
+        _q, _aux, total, rnd, _drops = carry
+        return (total > 0) & (rnd < max_rounds)
+
+    def body(carry):
+        q, aux, _total, rnd, drops = carry
+        out_q, aux = round_fn(q, aux, rnd)
+        new_q, total = forward_work(out_q, cfg)
+        # Per-round queues are fresh, so cumulative overflow drops must ride
+        # the loop carry (observability: silent loss is a capacity bug).
+        drops = drops + new_q.drops
+        return (
+            _vary(new_q, cfg.axis_name),
+            _vary(aux, cfg.axis_name),
+            total,
+            rnd + 1,
+            _vary(drops, cfg.axis_name),
+        )
+
+    # Initial forward: route the ray-gen output to its owners (the paper's
+    # VoPaT does exactly this — primary rays are "forwarded to itself").
+    q1, total0 = forward_work(q0, cfg)
+    q, aux, _, rounds, drops = jax.lax.while_loop(
+        cond,
+        body,
+        (
+            _vary(q1, cfg.axis_name),
+            _vary(aux0, cfg.axis_name),
+            total0,
+            jnp.zeros((), jnp.int32),
+            _vary(q1.drops, cfg.axis_name),
+        ),
+    )
+    q = WorkQueue(items=q.items, dest=q.dest, count=q.count, drops=drops)
+    return q, aux, rounds

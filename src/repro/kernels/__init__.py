@@ -1,0 +1,34 @@
+"""Pallas TPU kernels for the forwarding hot spots and app compute cores.
+
+Layout: one subpackage per kernel —
+
+  sort_keys/       §4.2.1 key-pack + per-destination histogram (MXU one-hot)
+  compact/         cross-tile prefix-sum stream compaction (the TPU "atomic queue")
+  marshal/         §4.2.2 segment marshal/unmarshal via scalar-prefetch dynamic slices
+  nbody_forces/    §5.5 tiled O(N²) pairwise gravity (MXU-aligned)
+  rk4_advect/      §5.4 RK4 particle advection on analytic vector fields
+  delta_tracking/  §5.1 Woodcock tracking through a procedural density field
+
+Each subpackage has ``kernel.py`` (pl.pallas_call + BlockSpec VMEM tiling),
+``ops.py`` (jit'd public wrapper with an ``interpret`` switch), and ``ref.py``
+(pure-jnp oracle).  On this CPU container kernels run with ``interpret=True``;
+on TPU they compile via Mosaic.
+"""
+import jax
+
+
+def default_interpret() -> bool:
+    """Interpret Pallas kernels unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def sds(shape, dtype, *like):
+    """ShapeDtypeStruct whose varying-manual-axes (vma) is the union of the
+    inputs' — required so pallas_call composes with shard_map(check_vma=True)."""
+    vma = frozenset()
+    for x in like:
+        try:
+            vma = vma | jax.typeof(x).vma
+        except (AttributeError, TypeError):
+            pass
+    return jax.ShapeDtypeStruct(shape, dtype, vma=vma)

@@ -1,0 +1,1 @@
+from repro.kernels.compact import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,65 @@
+"""Pallas kernel: cross-tile exclusive-prefix-sum stream compaction.
+
+This is the TPU replacement for RaFI's ``atomicAdd``-append queue (§3.2): a
+mask of emitting lanes becomes a dense list of append positions.  The scan
+carry rides across sequential grid steps in SMEM scratch — the canonical
+Mosaic pattern for a decoupled-lookback-free prefix sum (TPU grid steps are
+sequential, so no lookback is needed at all; this is *simpler* than the GPU
+equivalent, which is the point of the adaptation).
+
+Outputs: positions (C,) int32 (exclusive prefix sum of the mask — the append
+slot for every emitting lane) and total (1,) int32 (the final counter value).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import sds
+
+
+def _compact_kernel(mask_ref, pos_ref, total_ref, carry_ref, *, tile, nsteps):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        carry_ref[0] = 0
+
+    m = mask_ref[...].astype(jnp.int32)
+    cs = jnp.cumsum(m)
+    pos_ref[...] = carry_ref[0] + cs - m
+    carry_ref[0] = carry_ref[0] + cs[-1]
+
+    @pl.when(step == nsteps - 1)
+    def _fin():
+        total_ref[0] = carry_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def compact_positions(mask: jax.Array, *, tile: int = 2048, interpret: bool = False):
+    """Exclusive prefix-sum of a boolean mask. Returns (pos (C,), total (1,))."""
+    cap = mask.shape[0]
+    tile = min(tile, cap)
+    while cap % tile:
+        tile //= 2
+    nsteps = cap // tile
+    kern = functools.partial(_compact_kernel, tile=tile, nsteps=nsteps)
+    return pl.pallas_call(
+        kern,
+        grid=(nsteps,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            sds((cap,), jnp.int32, mask),
+            sds((1,), jnp.int32, mask),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(mask)

@@ -1,0 +1,30 @@
+"""Public wrapper: Pallas stream compaction + scatter-apply helpers."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import types as T
+from repro.kernels import default_interpret
+from repro.kernels.compact import kernel as K
+
+
+def compact_positions(mask: jax.Array, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    pos, total = K.compact_positions(mask, interpret=interpret)
+    return pos, total[0]
+
+
+def compact(items: Any, mask: jax.Array, capacity: int, *, interpret: bool | None = None):
+    """Dense-pack the masked lanes of ``items`` into a (capacity, ...) buffer.
+
+    Returns (packed_items, count). Overflow lanes are dropped (§3.3)."""
+    pos, count = compact_positions(mask, interpret=interpret)
+    slot = jnp.where(mask & (pos < capacity), pos, capacity)
+    proto = jax.tree.map(lambda a: a[0], items)
+    out = T.batched_zeros(proto, capacity)
+    out = T.tree_scatter(out, slot, items, capacity=capacity)
+    return out, jnp.minimum(count, capacity)

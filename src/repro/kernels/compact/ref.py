@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the compact kernel."""
+import jax.numpy as jnp
+
+
+def compact_positions(mask):
+    m = mask.astype(jnp.int32)
+    cs = jnp.cumsum(m)
+    return cs - m, cs[-1:].astype(jnp.int32)

@@ -1,0 +1,1 @@
+from repro.kernels.delta_tracking import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,16 @@
+"""Public wrapper for Woodcock tracking."""
+from __future__ import annotations
+
+from repro.kernels import default_interpret
+from repro.kernels.delta_tracking import kernel as K
+
+STILL, HIT, EXITED = K.STILL, K.HIT, K.EXITED
+
+
+def track(origins, dirs, t0, t_exit, uniforms, blobs, *, majorant, steps=8, interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    return K.track(
+        origins, dirs, t0, t_exit, uniforms, blobs,
+        majorant=majorant, steps=steps, interpret=interpret,
+    )

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the delta_tracking kernel."""
+import jax.numpy as jnp
+
+STILL, HIT, EXITED = 0, 1, 2
+
+
+def density(p, blobs):
+    d = p[..., None, :] - blobs[None, :, :3]
+    r2 = jnp.sum(d * d, axis=-1)
+    s2 = blobs[None, :, 3] ** 2
+    return jnp.sum(blobs[None, :, 4] * jnp.exp(-0.5 * r2 / s2), axis=-1)
+
+
+def track(origins, dirs, t0, t_exit, uniforms, blobs, *, majorant, steps=8):
+    t = t0
+    status = jnp.zeros(t.shape, jnp.int32)
+    for k in range(steps):
+        active = status == STILL
+        t_new = t - jnp.log1p(-uniforms[:, k, 0]) / majorant
+        p = origins + t_new[:, None] * dirs
+        dens = density(p, blobs)
+        exited = active & (t_new >= t_exit)
+        hit = active & ~exited & (uniforms[:, k, 1] * majorant < dens)
+        t = jnp.where(active, t_new, t)
+        status = jnp.where(exited, EXITED, jnp.where(hit, HIT, status))
+    return t, status

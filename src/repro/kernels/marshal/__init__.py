@@ -1,0 +1,1 @@
+from repro.kernels.marshal import kernel, ops, ref  # noqa: F401

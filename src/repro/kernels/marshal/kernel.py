@@ -1,0 +1,109 @@
+"""Pallas kernels: §4.2.2 segment marshal / unmarshal around the exchange.
+
+``marshal``: gather each peer's contiguous segment of the destination-sorted
+buffer into its fixed (peer_capacity,) slot of the padded send buffer.  The
+per-peer offsets are *data-dependent*, which Pallas expresses with
+scalar-prefetch: the offset vector lands in SMEM before the grid runs, and
+each grid step r copies ``sorted[off[r] : off[r]+S]`` with a dynamic slice —
+one sequential VMEM-resident pass, no gather unit involved.  This is the TPU
+analogue of the paper's observation that RDMA needs "single, consistent
+blocks of (GPU) data".
+
+``unmarshal``: the inverse — scatter received (R, S) blocks into a compact
+buffer at data-dependent offsets via dynamic-slice stores.  Segments are
+written whole; lanes past the per-peer count are masked by a
+load-blend-store (grid steps are sequential, so the read-modify-write is
+race-free).  A trash tail of S rows absorbs receiver-side overflow, keeping
+the §3.3 drop semantics.
+
+Payload layout: items are marshalled as a flat (C, D) f32/int view — ops.py
+packs the work-item pytree into lanes (bitcast), mirroring the paper's
+"trivially copyable struct" contract on the wire.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import sds
+
+
+def _marshal_kernel(off_ref, in_ref, out_ref, *, slot):
+    r = pl.program_id(0)
+    start = off_ref[r]
+    out_ref[...] = in_ref[pl.ds(start, slot), :][None]
+
+
+@functools.partial(jax.jit, static_argnames=("num_ranks", "slot", "interpret"))
+def marshal(
+    sorted_flat: jax.Array,  # (C, D) destination-sorted payload view
+    offsets: jax.Array,  # (R,) int32 segment starts (will be clamped to C-S)
+    *,
+    num_ranks: int,
+    slot: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns the (R, S, D) padded send buffer."""
+    cap, d = sorted_flat.shape
+    if slot > cap:
+        raise ValueError(f"peer slot {slot} exceeds capacity {cap}")
+    off = jnp.clip(offsets.astype(jnp.int32), 0, cap - slot)
+    return pl.pallas_call(
+        functools.partial(_marshal_kernel, slot=slot),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(num_ranks,),
+            in_specs=[pl.BlockSpec((cap, d), lambda r, off: (0, 0))],
+            out_specs=pl.BlockSpec((1, slot, d), lambda r, off: (r, 0, 0)),
+        ),
+        out_shape=sds((num_ranks, slot, d), sorted_flat.dtype, sorted_flat, off),
+        interpret=interpret,
+    )(off, sorted_flat)
+
+
+def _unmarshal_kernel(off_ref, cnt_ref, in_ref, out_ref, *, slot):
+    r = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    start = off_ref[r]
+    cnt = cnt_ref[r]
+    blk = in_ref[0]
+    cur = out_ref[pl.ds(start, slot), :]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (slot, 1), 0)
+    out_ref[pl.ds(start, slot), :] = jnp.where(lane < cnt, blk, cur)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
+def unmarshal(
+    recv_buf: jax.Array,  # (R, S, D) received padded blocks
+    recv_offsets: jax.Array,  # (R,) compact output offsets
+    recv_counts: jax.Array,  # (R,) valid rows per block
+    *,
+    capacity: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns the (capacity, D) compacted receive buffer (drop-tail applied)."""
+    num_ranks, slot, d = recv_buf.shape
+    # Trash tail: segments that start past `capacity` (or spill over it) write
+    # into the extra S rows, which are cut off below — §3.3 drop semantics.
+    padded = capacity + slot
+    off = jnp.clip(recv_offsets.astype(jnp.int32), 0, capacity)
+    out = pl.pallas_call(
+        functools.partial(_unmarshal_kernel, slot=slot),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(num_ranks,),
+            in_specs=[pl.BlockSpec((1, slot, d), lambda r, off, cnt: (r, 0, 0))],
+            out_specs=pl.BlockSpec((padded, d), lambda r, off, cnt: (0, 0)),
+        ),
+        out_shape=sds((padded, d), recv_buf.dtype, recv_buf, off),
+        interpret=interpret,
+    )(off, recv_counts.astype(jnp.int32), recv_buf)
+    return out[:capacity]

@@ -1,0 +1,49 @@
+"""Public wrapper: per-leaf marshal/unmarshal over work-item pytrees."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.marshal import kernel as K
+
+
+def _to2d(a: jax.Array):
+    lead = a.shape[0]
+    return a.reshape(lead, -1), a.shape[1:]
+
+
+def marshal_items(
+    sorted_items: Any, offsets: jax.Array, *, num_ranks: int, slot: int,
+    interpret: bool | None = None,
+) -> Any:
+    """Pytree of (C, ...) destination-sorted leaves → pytree of (R, S, ...)."""
+    if interpret is None:
+        interpret = default_interpret()
+
+    def one(a):
+        flat, tail = _to2d(a)
+        buf = K.marshal(flat, offsets, num_ranks=num_ranks, slot=slot, interpret=interpret)
+        return buf.reshape((num_ranks, slot) + tail)
+
+    return jax.tree.map(one, sorted_items)
+
+
+def unmarshal_items(
+    recv_buf: Any, recv_offsets: jax.Array, recv_counts: jax.Array, *, capacity: int,
+    interpret: bool | None = None,
+) -> Any:
+    """Pytree of (R, S, ...) received blocks → pytree of (capacity, ...)."""
+    if interpret is None:
+        interpret = default_interpret()
+
+    def one(a):
+        r, s = a.shape[:2]
+        tail = a.shape[2:]
+        flat = a.reshape(r, s, -1)
+        out = K.unmarshal(flat, recv_offsets, recv_counts, capacity=capacity, interpret=interpret)
+        return out.reshape((capacity,) + tail)
+
+    return jax.tree.map(one, recv_buf)

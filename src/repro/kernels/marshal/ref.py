@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the marshal/unmarshal kernels."""
+import jax.numpy as jnp
+
+
+def marshal(sorted_flat, offsets, *, num_ranks, slot):
+    cap, _ = sorted_flat.shape
+    off = jnp.clip(offsets.astype(jnp.int32), 0, cap - slot)
+    src = off[:, None] + jnp.arange(slot, dtype=jnp.int32)[None, :]
+    return jnp.take(sorted_flat, src.reshape(-1), axis=0, mode="clip").reshape(
+        num_ranks, slot, -1
+    )
+
+
+def unmarshal(recv_buf, recv_offsets, recv_counts, *, capacity):
+    num_ranks, slot, d = recv_buf.shape
+    off = jnp.clip(recv_offsets.astype(jnp.int32), 0, capacity)
+    s = jnp.arange(slot, dtype=jnp.int32)
+    dstpos = off[:, None] + s[None, :]
+    ok = s[None, :] < recv_counts[:, None]
+    dstpos = jnp.where(ok & (dstpos < capacity), dstpos, capacity)
+    out = jnp.zeros((capacity, d), recv_buf.dtype)
+    return out.at[dstpos.reshape(-1)].set(recv_buf.reshape(-1, d), mode="drop")

@@ -1,0 +1,1 @@
+from repro.kernels.nbody_forces import kernel, ops, ref  # noqa: F401

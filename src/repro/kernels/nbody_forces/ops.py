@@ -1,0 +1,13 @@
+"""Public wrapper for pairwise gravity."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import default_interpret
+from repro.kernels.nbody_forces import kernel as K
+
+
+def pairwise_accel(xi, xj, mj, *, eps2: float = 1e-4, interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return K.pairwise_accel(xi, xj, mj, eps2=eps2, interpret=interpret)

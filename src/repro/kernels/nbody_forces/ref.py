@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the nbody_forces kernel."""
+import jax.numpy as jnp
+
+
+def pairwise_accel(xi, xj, mj, *, eps2=1e-4):
+    dx = xj[None, :, :] - xi[:, None, :]
+    r2 = jnp.sum(dx * dx, axis=-1) + eps2
+    w = mj[None, :] * r2 ** (-1.5)
+    return jnp.sum(w[:, :, None] * dx, axis=1)

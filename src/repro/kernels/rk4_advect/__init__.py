@@ -1,0 +1,1 @@
+from repro.kernels.rk4_advect import kernel, ops, ref  # noqa: F401

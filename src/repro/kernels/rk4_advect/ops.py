@@ -1,0 +1,13 @@
+"""Public wrapper for RK4 advection."""
+from __future__ import annotations
+
+from repro.kernels import default_interpret
+from repro.kernels.rk4_advect import kernel as K
+
+ABC, TORNADO, TAYLOR_GREEN = K.ABC, K.TORNADO, K.TAYLOR_GREEN
+
+
+def rk4_step(pos, *, dt, field_id=K.ABC, params=(1.0, 0.8, 0.6), interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    return K.rk4_step(pos, dt=dt, field_id=field_id, params=tuple(params), interpret=interpret)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the rk4_advect kernel."""
+import jax.numpy as jnp
+
+ABC, TORNADO, TAYLOR_GREEN = 0, 1, 2
+
+
+def velocity(p, field_id, params=(1.0, 0.8, 0.6)):
+    x, y, z = p[..., 0], p[..., 1], p[..., 2]
+    a, b, c = params
+    if field_id == ABC:
+        return jnp.stack(
+            [a * jnp.sin(z) + c * jnp.cos(y),
+             b * jnp.sin(x) + a * jnp.cos(z),
+             c * jnp.sin(y) + b * jnp.cos(x)],
+            axis=-1,
+        )
+    if field_id == TORNADO:
+        r2 = x * x + y * y + 1e-3
+        swirl = a / r2
+        return jnp.stack([-y * swirl, x * swirl, b + c * jnp.sqrt(r2)], axis=-1)
+    if field_id == TAYLOR_GREEN:
+        return jnp.stack(
+            [a * jnp.cos(x) * jnp.sin(y) * jnp.sin(z),
+             -a * jnp.sin(x) * jnp.cos(y) * jnp.sin(z),
+             c * jnp.sin(x) * jnp.sin(y) * jnp.cos(z)],
+            axis=-1,
+        )
+    raise ValueError(field_id)
+
+
+def rk4_step(pos, *, dt, field_id=ABC, params=(1.0, 0.8, 0.6)):
+    k1 = velocity(pos, field_id, params)
+    k2 = velocity(pos + 0.5 * dt * k1, field_id, params)
+    k3 = velocity(pos + 0.5 * dt * k2, field_id, params)
+    k4 = velocity(pos + dt * k3, field_id, params)
+    return pos + (dt / 6.0) * (k1 + 2 * k2 + 2 * k3 + k4), k1

@@ -1,0 +1,1 @@
+from repro.kernels.sort_keys import kernel, ops, ref  # noqa: F401

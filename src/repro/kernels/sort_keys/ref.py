@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the sort_keys kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pack_and_histogram(dest, count, *, num_ranks: int, idx_bits: int):
+    cap = dest.shape[0]
+    lane = jnp.arange(cap, dtype=jnp.int32)
+    valid = (lane < count) & (dest >= 0) & (dest < num_ranks)
+    d_clean = jnp.where(valid, dest, num_ranks)
+    keys = (d_clean.astype(jnp.uint32) << idx_bits) | lane.astype(jnp.uint32)
+    hist = jnp.zeros((num_ranks + 1,), jnp.int32).at[d_clean].add(1)
+    return keys, hist

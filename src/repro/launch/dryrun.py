@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh).
+
+The two lines above MUST precede any other import (jax locks the device
+count on first init); 512 placeholder host devices let ``jax.make_mesh``
+build the production meshes.  For every cell this driver:
+
+  1. builds the full-size config and abstract inputs (ShapeDtypeStruct — no
+     allocation anywhere),
+  2. ``jax.jit(step).lower(...)`` with the production in/out shardings,
+  3. ``.compile()`` — sharding mismatches, OOM-at-compile, or unsupported
+     collectives fail HERE, which is the point,
+  4. records memory_analysis / cost_analysis / per-collective bytes and the
+     derived roofline terms into ``artifacts/dryrun/<cell>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --sweep [--multi-pod] [--force]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _probe_costs(cfg, arch, shape_name, mesh, chips, overrides=None):
+    """Per-pattern-period incremental cost via differencing two shallow models.
+
+    XLA's cost_analysis counts a while-loop (scan) body ONCE regardless of
+    trip count, so deep scanned models under-report flops/bytes/collectives.
+    Lowering the same cell at 1 and 2 pattern periods and differencing gives
+    the exact per-period increment; the full-depth totals are then
+      total = full_reported + (n_blocks - 1) · period_increment.
+    """
+    import dataclasses
+
+    from repro.configs.registry import input_specs
+    from repro.launch.steps import lower_cell
+    from repro.models.api import build_model
+    from repro.roofline.analysis import collective_bytes
+
+    period = len(cfg.pattern)
+    out = []
+    for mult in (1, 2):
+        repl = {"num_layers": period * mult, "scan_unroll": True}
+        if cfg.kind == "encdec":
+            repl["encoder_layers"] = mult
+            repl["num_layers"] = mult
+        pcfg = dataclasses.replace(cfg, **repl)
+        cell = input_specs(arch, shape_name, pcfg)
+        model = build_model(pcfg)
+        with mesh:
+            lowered = lower_cell(model, mesh, cell)
+            compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        out.append(
+            {
+                "flops": float(cost.get("flops", 0.0)) * chips,
+                "bytes": float(cost.get("bytes accessed", 0.0)) * chips,
+                "coll": float(sum(coll.values())) * chips,
+            }
+        )
+    inc = {k: max(out[1][k] - out[0][k], 0.0) for k in out[0]}
+    return inc
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, force: bool = False,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    import jax
+
+    from repro.configs.registry import get_config, input_specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_cell
+    from repro.models.api import build_model
+    from repro.roofline.analysis import analyze_lowered, model_flops
+
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    name = f"{arch}__{shape_name}__{mesh_tag}{tag}"
+    out_path = ARTIFACTS / f"{name}.json"
+    if out_path.exists() and not force:
+        cached = json.loads(out_path.read_text())
+        if cached.get("status") != "error":  # errors are retried after fixes
+            return cached
+
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = input_specs(arch, shape_name, cfg)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_tag,
+        "step": cell.step,
+        "tag": tag,
+    }
+    if cell.skip:
+        rec["status"] = "skip"
+        rec["reason"] = cell.skip
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = int(mesh.devices.size)
+        model = build_model(cfg)
+        with mesh:
+            lowered = lower_cell(model, mesh, cell)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            print(f"[{name}] memory_analysis:", mem)
+            cost = compiled.cost_analysis()
+            print(f"[{name}] cost_analysis: flops={cost.get('flops', 0):.3e} "
+                  f"bytes={cost.get('bytes accessed', 0):.3e}")
+            terms = analyze_lowered(lowered, compiled, chips)
+        # scan-body trip-count correction (see _probe_costs)
+        period = len(cfg.pattern)
+        n_blocks = (
+            cfg.num_layers if cfg.kind == "encdec" else cfg.num_layers // period
+        )
+        if n_blocks > 1:
+            inc = _probe_costs(cfg, arch, shape_name, mesh, chips, overrides)
+            extra = n_blocks - 1
+            terms.flops += extra * inc["flops"]
+            terms.bytes_accessed += extra * inc["bytes"]
+            terms.coll_bytes += extra * inc["coll"]
+        if cell.step == "train" and cfg.microbatches > 1:
+            # the gradient-accumulation scan is another once-counted loop;
+            # everything except the (small) optimizer update runs m times
+            m = cfg.microbatches
+            terms.flops *= m
+            terms.bytes_accessed *= m
+            terms.coll_bytes *= m
+        mf = model_flops(cfg, cell.shape)
+        rec.update(
+            status="ok",
+            chips=chips,
+            n_params=model.param_count(),
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "peak_bytes_per_device": int(
+                    mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                ),
+            },
+            roofline=terms.as_dict(),
+            model_flops=mf,
+            useful_flops_ratio=(mf / terms.flops if terms.flops else None),
+        )
+    except Exception as e:  # noqa: BLE001 — a failed cell is a recorded result
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        print(f"[{name}] FAILED: {rec['error']}")
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    from repro.configs.registry import ARCHS, shape_suite
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact suffix for variants")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig overrides key=value (repeatable)")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.set:
+        from repro.configs.registry import get_config
+
+        for kv in args.set:
+            k, v = kv.split("=", 1)
+            overrides[k] = eval(v)  # noqa: S307 — trusted CLI input
+
+    if args.sweep:
+        results = []
+        for arch in ARCHS:
+            for shape_name in shape_suite(arch):
+                r = run_cell(arch, shape_name, multi_pod=args.multi_pod, force=args.force)
+                status = r.get("status")
+                extra = (
+                    f" dominant={r['roofline']['dominant']}"
+                    if status == "ok" else f" ({r.get('reason', r.get('error', ''))[:60]})"
+                )
+                print(f"{arch:>22} × {shape_name:<12} [{r['mesh']}] → {status}{extra}",
+                      flush=True)
+                results.append(r)
+        ok = sum(1 for r in results if r["status"] == "ok")
+        skip = sum(1 for r in results if r["status"] == "skip")
+        err = sum(1 for r in results if r["status"] == "error")
+        print(f"\nsweep done: {ok} ok, {skip} skip, {err} error")
+        raise SystemExit(1 if err else 0)
+
+    r = run_cell(args.arch, args.shape, multi_pod=args.multi_pod, force=args.force,
+                 overrides=overrides, tag=args.tag)
+    print(json.dumps(r, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state.  Single pod: (data=16, model=16) = 256 chips of a
+v5e pod; multi-pod adds a leading "pod" axis (2 × 256 = 512 chips), which is
+pure data parallelism across the pod boundary (DCN-class links).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 2, model: int = 4):
+    """Small CPU mesh for tests/examples."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

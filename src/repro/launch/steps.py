@@ -1,0 +1,219 @@
+"""Jitted step builders shared by the trainer, server, and dry-run.
+
+Each builder returns (fn, in_shardings, out_shardings, abstract_inputs) so
+the dry-run can ``jax.jit(fn, ...).lower(*abstract).compile()`` without
+allocating anything, and the real trainer can feed concrete arrays through
+the identical code path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import Cell
+from repro.models.api import Model
+from repro.models.common import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+
+
+def resolve_spec(shape, spec: P, mesh, *, allow_move: bool = True) -> P:
+    """Make a PartitionSpec legal for ``shape`` on ``mesh``.
+
+    pjit input shardings require every sharded dim to divide evenly.  Axes
+    that don't fit are dropped from that dim and — when ``allow_move`` —
+    relocated to the first unsharded dim they do divide (e.g. a KV cache
+    whose 4 heads can't split 16 ways shards its 128-wide head_dim instead;
+    rwkv's 40-head ``u`` shards its channel dim; a 256206 vocab embedding
+    shards d_model).  This keeps memory balanced instead of silently
+    replicating whole tensors.
+    """
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    placed = []
+    pending = []
+    for dim, part in zip(shape, parts):
+        axes = () if part is None else (part if isinstance(part, tuple) else (part,))
+        keep = []
+        factor = 1
+        for ax in axes:
+            size = mesh.shape[ax]
+            if dim % (factor * size) == 0:
+                keep.append(ax)
+                factor *= size
+            else:
+                pending.append(ax)
+        placed.append(tuple(keep))
+    if allow_move:
+        for ax in pending:
+            used = {a for p in placed for a in p}
+            if ax in used:
+                continue
+            for i, dim in enumerate(shape):
+                if not placed[i] and dim % mesh.shape[ax] == 0 and mesh.shape[ax] > 1:
+                    placed[i] = (ax,)
+                    break
+    return P(*[(p[0] if len(p) == 1 else p) if p else None for p in placed])
+
+
+def _named(mesh, tree_specs, tree_shapes, *, allow_move: bool = True):
+    """NamedShardings with divisibility resolution against abstract shapes."""
+    specs = jax.tree.map(
+        lambda s, a: resolve_spec(a.shape, s, mesh, allow_move=allow_move),
+        tree_specs,
+        tree_shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _batch_shardings(mesh, batch: Dict[str, Any], cfg=None):
+    baxes = tuple(
+        a for a in mesh.axis_names
+        if a != "model" or (cfg is not None and cfg.dp_over_model)
+    )
+    return {
+        k: NamedSharding(
+            mesh,
+            resolve_spec(
+                v.shape,
+                P(baxes, *([None] * (len(v.shape) - 1))),
+                mesh,
+                allow_move=False,
+            ),
+        )
+        for k, v in batch.items()
+    }
+
+
+def build_train_step(model: Model, mesh, opt_cfg: AdamWConfig = AdamWConfig()):
+    """train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``cfg.microbatches > 1`` enables gradient accumulation: the global batch
+    is scanned in slices, which divides activation memory by the slice count
+    at the cost of re-reading the weights per slice (compute/comm overlap
+    across slices is XLA's job — the slices are a sequential scan)."""
+    loss_fn = model.loss_fn(mesh=mesh)
+    m = max(1, model.cfg.microbatches)
+
+    def train_step(params, opt_state, batch):
+        if m == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return jax.tree.map(jnp.add, acc, (l, g)), None
+
+            zero = (
+                jnp.zeros(()),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params),
+            )
+            (loss_sum, gsum), _ = jax.lax.scan(body, zero, micro)
+            loss = loss_sum / m
+            grads = jax.tree.map(lambda g: g / m, gsum)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+    pspecs = model.specs()
+    ospecs = opt_state_specs(pspecs, opt_cfg)
+    pabs = model.abstract()
+    oabs = abstract_opt_state(model, opt_cfg)
+    shardings = {
+        "params": _named(mesh, pspecs, pabs),
+        "opt": _named(mesh, ospecs, oabs),
+    }
+    return train_step, shardings
+
+
+def build_prefill_step(model: Model, mesh):
+    fn = model.prefill_fn(mesh=mesh)
+    return fn, {"params": _named(mesh, model.specs(serve=True), model.abstract())}
+
+
+def build_decode_step(model: Model, mesh, *, batch: int = 1, max_len: int = 128):
+    fn = model.decode_fn(mesh=mesh)
+    caches_abs = abstract_caches(model, batch, max_len)
+    return fn, {
+        "params": _named(mesh, model.specs(serve=True), model.abstract()),
+        "caches": _named(mesh, model.cache_specs(), caches_abs),
+    }
+
+
+def abstract_opt_state(model: Model, opt_cfg: AdamWConfig = AdamWConfig()):
+    """ShapeDtypeStructs of the optimizer state (no allocation) — mirrors
+    adamw_init exactly (incl. optional master copies / compression residuals)."""
+    return jax.eval_shape(lambda p: adamw_init(p, opt_cfg), model.abstract())
+
+
+def abstract_caches(model: Model, batch: int, max_len: int):
+    return jax.eval_shape(lambda: model.init_caches(batch, max_len))
+
+
+def lower_cell(model: Model, mesh, cell: Cell, *, donate: bool = True):
+    """Lower the cell's step with fully-abstract inputs. Returns `lowered`."""
+    cfg = model.cfg
+    params_abs = model.abstract()
+    batch_shard = _batch_shardings(mesh, cell.batch, model.cfg)
+
+    if cell.step == "train":
+        step, shardings = build_train_step(model, mesh)
+        opt_abs = abstract_opt_state(model)  # default cfg matches build_train_step default
+        jitted = jax.jit(
+            step,
+            in_shardings=(shardings["params"], shardings["opt"], batch_shard),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        return jitted.lower(params_abs, opt_abs, cell.batch)
+
+    if cell.step == "prefill":
+        fn, shardings = build_prefill_step(model, mesh)
+        jitted = jax.jit(fn, in_shardings=(shardings["params"], batch_shard))
+        return jitted.lower(params_abs, cell.batch)
+
+    # decode
+    fn, shardings = build_decode_step(
+        model, mesh, batch=cell.shape.global_batch, max_len=cell.shape.seq_len
+    )
+    caches_abs = abstract_caches(model, cell.shape.global_batch, cell.shape.seq_len)
+    baxes = tuple(
+        a for a in mesh.axis_names if a != "model" or cfg.dp_over_model
+    )
+    token_shard = NamedSharding(
+        mesh,
+        resolve_spec(
+            cell.batch["token"].shape, P(baxes, None), mesh, allow_move=False
+        ),
+    )
+    if cfg.kind == "encdec":
+        mem_shard = NamedSharding(
+            mesh,
+            resolve_spec(
+                cell.batch["memory"].shape, P(baxes, None, None), mesh,
+                allow_move=False,
+            ),
+        )
+        jitted = jax.jit(
+            fn,
+            in_shardings=(
+                shardings["params"], token_shard, shardings["caches"], mem_shard
+            ),
+            donate_argnums=(2,) if donate else (),
+        )
+        return jitted.lower(
+            params_abs, cell.batch["token"], caches_abs, cell.batch["memory"]
+        )
+    jitted = jax.jit(
+        fn,
+        in_shardings=(shardings["params"], token_shard, shardings["caches"]),
+        donate_argnums=(2,) if donate else (),
+    )
+    return jitted.lower(params_abs, cell.batch["token"], caches_abs)

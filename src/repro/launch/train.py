@@ -1,0 +1,112 @@
+"""End-to-end training driver: data → jitted train_step → checkpoints.
+
+Fault-tolerance contract exercised here (and in tests/test_train_e2e.py):
+  * auto-resume: on start, the trainer restores the latest checkpoint and
+    continues from its step; the data pipeline is a pure function of step,
+    so a killed-and-restarted run reproduces the uninterrupted run exactly;
+  * periodic atomic checkpoints (``--ckpt-every``);
+  * elastic restart: pass a different mesh factorization and restore lands
+    the same logical tensors on the new layout.
+
+Usage (CPU demo, ~25M params):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
+      --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.ckpt import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config, get_smoke_config
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_test_mesh
+from repro.launch.steps import build_train_step
+from repro.models.api import build_model
+from repro.optim import AdamWConfig, adamw_init
+
+
+def train(
+    *,
+    arch: str = "qwen2-7b",
+    smoke: bool = True,
+    steps: int = 50,
+    batch: int = 8,
+    seq: int = 128,
+    ckpt_dir: str = "/tmp/repro_ckpt",
+    ckpt_every: int = 20,
+    mesh=None,
+    log_every: int = 10,
+    opt_cfg: AdamWConfig = AdamWConfig(warmup_steps=20),
+    verbose: bool = True,
+):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    model = build_model(cfg)
+    mesh = mesh or make_test_mesh()
+    ds = SyntheticLM(cfg.vocab_size, seq, batch)
+
+    step_fn, shardings = build_train_step(model, mesh, opt_cfg)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(shardings["params"], shardings["opt"], None),
+        donate_argnums=(0, 1),
+    )
+
+    start = latest_step(ckpt_dir)
+    if start is not None:
+        if verbose:
+            print(f"[train] resuming from checkpoint step {start}")
+        params = model.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params, opt_cfg)
+        state = restore_checkpoint(ckpt_dir, start, {"params": params, "opt": opt})
+        params, opt = state["params"], state["opt"]
+        start_step = start
+    else:
+        params = model.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params, opt_cfg)
+        start_step = 0
+
+    params = jax.device_put(params, shardings["params"])
+    opt = jax.device_put(opt, shardings["opt"])
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, steps):
+        batch_np = ds.batch_at(step)
+        params, opt, metrics = jitted(params, opt, batch_np)
+        loss = float(metrics["loss"])
+        losses.append((step, loss))
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            dt = time.time() - t0
+            print(f"[train] step {step:5d} loss {loss:8.4f} ({dt:.1f}s)", flush=True)
+        if ckpt_every and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1, {"params": params, "opt": opt})
+    if ckpt_every:
+        save_checkpoint(ckpt_dir, steps, {"params": params, "opt": opt})
+    return params, opt, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    args = ap.parse_args()
+    train(
+        arch=args.arch, smoke=args.smoke, steps=args.steps, batch=args.batch,
+        seq=args.seq, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""LM substrate: the assigned architectures as composable JAX modules.
+
+  common.py      ModelConfig, params/sharding rules, norms, MLPs
+  rope.py        RoPE / M-RoPE position embeddings
+  attention.py   GQA attention (global/local window), cross-attn, KV caches
+  moe.py         MoE: RaFI expert-parallel dispatch (the paper's technique)
+                 and the dense tensor-parallel baseline
+  rwkv6.py       RWKV-6 "Finch" data-dependent-decay linear attention
+  griffin.py     RG-LRU recurrent block (RecurrentGemma)
+  transformer.py decoder-only assembly (dense / moe / ssm / hybrid)
+  encdec.py      encoder-decoder assembly (Seamless-M4T backbone)
+  api.py         build_model(config) → init / train / prefill / decode fns
+"""

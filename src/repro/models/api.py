@@ -1,0 +1,152 @@
+"""Model API: build a config into init / loss / prefill / decode functions.
+
+All entry points are pure functions over explicit params (and caches), ready
+for ``jax.jit(..., in_shardings=...)`` with the spec trees provided here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+from repro.models.common import (
+    ModelConfig,
+    abstract_params,
+    cross_entropy_loss,
+    init_params,
+    param_specs,
+)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    defs: Dict[str, Any]
+
+    # ---------------------------------------------------------- parameters
+    def init(self, key):
+        return init_params(self.defs, key, self.cfg.jdtype)
+
+    def abstract(self):
+        return abstract_params(self.defs, self.cfg.jdtype)
+
+    def specs(self, *, serve: bool = False):
+        """Parameter PartitionSpecs.  ``serve=True`` drops FSDP: inference
+        wants weights resident (model-axis sharded), not gathered per layer —
+        ZeRO-style data-axis sharding only pays off against optimizer state,
+        which serving doesn't have."""
+        cfg = self.cfg
+        if serve and cfg.fsdp:
+            cfg = dataclasses.replace(cfg, fsdp=False)
+        return param_specs(self.defs, cfg)
+
+    def param_count(self) -> int:
+        import numpy as np
+
+        return int(
+            sum(np.prod(l.shape, dtype=np.int64) for l in jax.tree.leaves(self.abstract()))
+        )
+
+    # --------------------------------------------------------------- steps
+    def loss_fn(self, mesh=None) -> Callable:
+        cfg = self.cfg
+
+        if cfg.kind == "encdec":
+            def loss(params, batch):
+                memory = ED.encode(params, batch["frames"], cfg)
+                logits, _ = ED.decode(params, batch["tokens"], memory, cfg)
+                return cross_entropy_loss(
+                    logits[:, :-1], batch["tokens"][:, 1:], vocab=cfg.vocab_size
+                )
+
+            return loss
+
+        def loss(params, batch):
+            logits, _, drops = TF.forward(
+                params, batch["tokens"], cfg, mesh=mesh,
+                frontend_embeds=batch.get("embeds"),
+            )
+            labels = batch["labels"] if "labels" in batch else batch["tokens"][:, 1:]
+            if logits.shape[1] != labels.shape[1]:
+                logits = logits[:, : labels.shape[1]]
+            return cross_entropy_loss(logits, labels, vocab=cfg.vocab_size)
+
+        return loss
+
+    def prefill_fn(self, mesh=None) -> Callable:
+        cfg = self.cfg
+
+        if cfg.kind == "encdec":
+            def prefill(params, batch):
+                memory = ED.encode(params, batch["frames"], cfg)
+                logits, _ = ED.decode(params, batch["tokens"], memory, cfg)
+                return logits[:, -1]
+
+            return prefill
+
+        def prefill(params, batch):
+            logits, _, _ = TF.forward(
+                params, batch["tokens"], cfg, mesh=mesh,
+                frontend_embeds=batch.get("embeds"),
+            )
+            return logits[:, -1]
+
+        return prefill
+
+    def decode_fn(self, mesh=None) -> Callable:
+        """One token step with caches: (params, token (B,1), caches) →
+        (logits (B,V), new_caches)."""
+        cfg = self.cfg
+
+        if cfg.kind == "encdec":
+            def step(params, token, caches, memory):
+                positions = caches["pos"][0][:, None].astype(jnp.int32)  # (B, 1)
+                logits, new_caches = ED.decode(
+                    params, token, memory, cfg, caches=caches, positions=positions
+                )
+                return logits[:, -1], new_caches
+
+            return step
+
+        def step(params, token, caches):
+            pos0 = _first_cache_pos(caches, token.shape[0])
+            positions = pos0[:, None].astype(jnp.int32)  # (B, 1) per-row depth
+            logits, new_caches, _ = TF.forward(
+                params, token, cfg, mesh=mesh, caches=caches, positions=positions
+            )
+            return logits[:, -1], new_caches
+
+        return step
+
+    # --------------------------------------------------------------- caches
+    def init_caches(self, batch: int, max_len: int):
+        if self.cfg.kind == "encdec":
+            return ED.init_dec_caches(self.cfg, batch, max_len)
+        return TF.init_caches(self.cfg, batch, max_len)
+
+    def cache_specs(self):
+        if self.cfg.kind == "encdec":
+            return ED.dec_cache_specs(self.cfg)
+        return TF.cache_specs_tree(self.cfg)
+
+
+def _first_cache_pos(caches, batch: int) -> jax.Array:
+    """(B,) current decode positions from any attention cache (all agree)."""
+    for key, c in caches["blocks"].items():
+        if isinstance(c, dict) and "pos" in c:
+            return c["pos"][0]
+    for key, c in caches["tail"].items():
+        if isinstance(c, dict) and "pos" in c:
+            return c["pos"]
+    return jnp.zeros((batch,), jnp.int32)  # pure-SSM models: position-free
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.kind == "encdec":
+        return Model(cfg, ED.encdec_defs(cfg))
+    return Model(cfg, TF.model_defs(cfg))

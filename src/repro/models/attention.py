@@ -1,0 +1,246 @@
+"""GQA attention with global / local-window masks, KV caches, cross-attention.
+
+Sharding: heads over the "model" axis (q heads and kv heads both divide the
+axis for every assigned config), batch over "data".  Decode uses a static
+(B, S_max, Hkv, Dh) cache updated with dynamic_update_slice at the current
+position.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import rope as R
+from repro.models.common import MODEL_AXIS, ModelConfig, ParamDef, batch_axes, shard
+
+
+def attn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, h * hd), P(None, MODEL_AXIS)),
+        "wk": ParamDef((d, kv * hd), P(None, MODEL_AXIS)),
+        "wv": ParamDef((d, kv * hd), P(None, MODEL_AXIS)),
+        "wo": ParamDef((h * hd, d), P(MODEL_AXIS, None), scale=1.0 / np.sqrt(h * hd)),
+    }
+    if cfg.qkv_bias:
+        defs.update(
+            bq=ParamDef((h * hd,), P(MODEL_AXIS), init="zeros"),
+            bk=ParamDef((kv * hd,), P(MODEL_AXIS), init="zeros"),
+            bv=ParamDef((kv * hd,), P(MODEL_AXIS), init="zeros"),
+        )
+    return defs
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _angles(cfg: ModelConfig, positions, theta=None):
+    theta = theta or cfg.rope_theta
+    if cfg.rope_kind == "mrope":
+        if positions.ndim == 2:  # text-only: same position in all 3 streams
+            positions = jnp.repeat(positions[..., None], 3, axis=-1)
+        return R.mrope_angles(positions, cfg.head_dim, theta)
+    return R.rope_angles(positions, cfg.head_dim, theta)
+
+
+def _sdpa(q, k, v, mask, dtype):
+    """q (B,S,H,D), k/v (B,T,Hkv,D) with GQA broadcast; mask (B,S,T) or (S,T).
+
+    Reference (materializing) attention — used for decode (S == 1) and tiny
+    sequences; long sequences go through :func:`_sdpa_blocked`."""
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, s, hkv, group, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / np.sqrt(dh)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, dh).astype(dtype)
+
+
+BLOCK_KV = 1024
+
+
+def _sdpa_blocked(q, k, v, dtype, *, causal: bool, window: int, block: int = BLOCK_KV):
+    """Online-softmax attention, scanned over KV blocks — (S, T) is never
+    materialized, which removes the S² f32 temps and the score all-gathers
+    that dominated the baseline roofline (§Perf iter 1).
+
+    q (B,S,H,D); k/v (B,T,Hkv,D); T % block == 0.  Accumulation is f32,
+    operands stay bf16 on the MXU path.
+    """
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    block = min(block, t)
+    while t % block:
+        block //= 2
+    nb = t // block
+    qg = q.reshape(b, s, hkv, g, dh)
+    scale = 1.0 / np.sqrt(dh)
+
+    kb = jnp.moveaxis(k.reshape(b, nb, block, hkv, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, block, hkv, dh), 1, 0)
+    q_idx = jnp.arange(s)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, j0 = xs
+        srow = jnp.einsum(
+            "bskgd,btkd->bkgst", qg, kblk, preferred_element_type=jnp.float32
+        ) * scale  # (b,hkv,g,s,block)
+        kv_idx = j0 + jnp.arange(block)
+        ok = jnp.ones((s, block), bool)
+        if causal:
+            ok &= kv_idx[None, :] <= q_idx[:, None]
+        if window > 0:
+            ok &= kv_idx[None, :] > q_idx[:, None] - window
+        srow = jnp.where(ok[None, None, None], srow, -1e30)
+        m_new = jnp.maximum(m, jnp.max(srow, axis=-1))
+        p = jnp.exp(srow - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, s, dh), jnp.float32)
+    j0s = jnp.arange(nb) * block
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kb, vb, j0s))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (b,hkv,g,s,dh)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, h, dh).astype(dtype)
+
+
+def causal_mask(s: int, window: int = 0) -> jax.Array:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window > 0:
+        m &= j > i - window
+    return m
+
+
+def self_attention(
+    params: Dict,
+    x: jax.Array,                     # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,             # (B, S) or (B, S, 3) for mrope
+    window: int = 0,
+    theta: Optional[float] = None,
+    cache: Optional[Dict] = None,     # {"k","v": (B,Smax,Hkv,Dh), "pos": ()}
+) -> Tuple[jax.Array, Optional[Dict]]:
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    # constrain only the FLAT head×dim axis (always divisible by the model
+    # axis) — per-head constraints on small kv-head counts provoked GSPMD
+    # "involuntary full rematerialization" resharding (§Perf iter 1)
+    if cfg.dp_over_model:
+        q = shard(q, batch_axes(cfg), None, None)
+        k = shard(k, batch_axes(cfg), None, None)
+        v = shard(v, batch_axes(cfg), None, None)
+    else:
+        q = shard(q, "data", None, MODEL_AXIS)
+        k = shard(k, "data", None, MODEL_AXIS)
+        v = shard(v, "data", None, MODEL_AXIS)
+    q = _split_heads(q, h, hd)
+    k = _split_heads(k, kv, hd)
+    v = _split_heads(v, kv, hd)
+
+    cos, sin = _angles(cfg, positions, theta)
+    q = R.apply_rope(q, cos, sin)
+    k = R.apply_rope(k, cos, sin)
+
+    if cache is None:
+        if cfg.blocked_attention and s > 1024:
+            # context-parallel attention (§Perf iter 2): queries sharded over
+            # the model axis on the SEQUENCE dim — legal for any head count,
+            # keeps the score contraction local (no all-reduce), and bounds
+            # per-chip score temps to s/tp rows.  K/V replicate over model
+            # (one bf16 all-gather per layer); GSPMD inserts the in/out
+            # reshards.
+            if not cfg.dp_over_model:
+                q = shard(q, "data", MODEL_AXIS, None, None)
+                k = shard(k, "data", None, None, None)
+                v = shard(v, "data", None, None, None)
+            out = _sdpa_blocked(q, k, v, x.dtype, causal=True, window=window)
+        else:
+            mask = causal_mask(s, window)
+            out = _sdpa(q, k, v, mask, x.dtype)
+        new_cache = None
+    else:
+        # decode: s == 1; write k/v at each row's own position (slots in a
+        # serving batch sit at different depths), attend over each prefix
+        pos = cache["pos"]  # (B,) int32
+        rows = jnp.arange(b)
+        ck = cache["k"].at[rows, pos].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, pos].set(v[:, 0].astype(cache["v"].dtype))
+        t = ck.shape[1]
+        j = jnp.arange(t)[None, :]
+        m = j <= pos[:, None]
+        if window > 0:
+            m &= j > (pos[:, None] - window)
+        mask = m[:, None, :]  # (B, 1, T)
+        out = _sdpa(q, ck, cv, mask, x.dtype)
+        new_cache = {"k": ck, "v": cv, "pos": jnp.minimum(pos + 1, t - 1)}
+
+    out = out.reshape(b, s, h * hd)
+    return out @ params["wo"], new_cache
+
+
+def cross_attention(
+    params: Dict,
+    x: jax.Array,        # (B, S, D) decoder states
+    memory: jax.Array,   # (B, T, D) encoder output
+    cfg: ModelConfig,
+) -> jax.Array:
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _split_heads(x @ params["wq"], h, hd)
+    k = _split_heads(memory @ params["wk"], kv, hd)
+    v = _split_heads(memory @ params["wv"], kv, hd)
+    t = memory.shape[1]
+    mask = jnp.ones((s, t), bool)
+    out = _sdpa(q, k, v, mask, x.dtype).reshape(b, s, h * hd)
+    return out @ params["wo"]
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig) -> Dict:
+    # KV caches shard along the SEQUENCE dim over the model axis: context
+    # lengths always divide the axis (head counts don't), per-chip decode
+    # score temps shrink by tp, and the only cross-chip cost is the tiny
+    # softmax max/denominator + output partial reductions.  Batch over data.
+    return {
+        "k": P("data", MODEL_AXIS, None, None),
+        "v": P("data", MODEL_AXIS, None, None),
+        "pos": P("data"),
+    }

@@ -1,0 +1,144 @@
+"""Encoder-decoder assembly (Seamless-M4T medium backbone, arXiv:2308.11596).
+
+Per the assignment spec the modality frontend is a STUB: the encoder consumes
+precomputed frame embeddings (B, T_enc, D) from ``input_specs()``.  The
+backbone is the transformer pair: a bidirectional encoder and a causal
+decoder with cross-attention, both 12L / d=1024 / 16H / ff=4096.
+
+Decode: self-attention KV caches plus the static encoder memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models.common import (
+    DATA_AXIS,
+    MODEL_AXIS,
+    ModelConfig,
+    ParamDef,
+    batch_axes,
+    glu_mlp,
+    mlp_defs,
+    rmsnorm,
+    shard,
+)
+from repro.models.transformer import _gamma, _stack_defs
+
+
+def encdec_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    enc_layer = {
+        "ln1": _gamma(cfg), "attn": A.attn_defs(cfg),
+        "ln2": _gamma(cfg), "mlp": mlp_defs(cfg),
+    }
+    dec_layer = {
+        "ln1": _gamma(cfg), "attn": A.attn_defs(cfg),
+        "lnx": _gamma(cfg), "xattn": A.attn_defs(cfg),
+        "ln2": _gamma(cfg), "mlp": mlp_defs(cfg),
+    }
+    return {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), P(MODEL_AXIS, None), scale=0.02),
+        "enc_blocks": _stack_defs(enc_layer, cfg.encoder_layers),
+        "enc_ln": _gamma(cfg),
+        "dec_blocks": _stack_defs(dec_layer, cfg.num_layers),
+        "final_ln": _gamma(cfg),
+        "lm_head": ParamDef((cfg.d_model, cfg.vocab_size), P(None, MODEL_AXIS), scale=0.02),
+    }
+
+
+def _bidir_attention(params, x, cfg, positions):
+    """Encoder self-attention: full (non-causal) mask."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    from repro.models import rope as R
+
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (x @ params["wk"]).reshape(b, s, kv, hd)
+    v = (x @ params["wv"]).reshape(b, s, kv, hd)
+    cos, sin = R.rope_angles(positions, hd, cfg.rope_theta)
+    q = R.apply_rope(q, cos, sin)
+    k = R.apply_rope(k, cos, sin)
+    mask = jnp.ones((s, s), bool)
+    out = A._sdpa(q, k, v, mask, x.dtype).reshape(b, s, h * hd)
+    return out @ params["wo"]
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames (B, T, D) stub embeddings → encoder memory (B, T, D)."""
+    x = frames.astype(cfg.jdtype)
+    x = shard(x, batch_axes(cfg), None, None)
+    b, t = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    def body(x, blk):
+        h = rmsnorm(x, blk["ln1"])
+        x = x + _bidir_attention(blk["attn"], h, cfg, positions)
+        h = rmsnorm(x, blk["ln2"])
+        x = x + glu_mlp(h, blk["mlp"]["wi"], blk["mlp"]["wg"], blk["mlp"]["wo"], cfg.act)
+        return shard(x, batch_axes(cfg), None, None), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(
+        body_fn, x, params["enc_blocks"],
+        unroll=cfg.encoder_layers if cfg.scan_unroll else 1,
+    )
+    return rmsnorm(x, params["enc_ln"])
+
+
+def decode(
+    params, tokens, memory, cfg: ModelConfig, *,
+    caches: Optional[Any] = None, positions=None,
+):
+    """Causal decoder over ``tokens`` with cross-attention to ``memory``.
+
+    caches=None → parallel (training). Else stacked decoder KV caches."""
+    x = params["embed"][tokens].astype(cfg.jdtype)
+    x = shard(x, batch_axes(cfg), None, None)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, xs):
+        x = carry
+        blk, cache = xs
+        h = rmsnorm(x, blk["ln1"])
+        y, nc = A.self_attention(
+            blk["attn"], h, cfg, positions=positions, cache=cache
+        )
+        x = x + y
+        h = rmsnorm(x, blk["lnx"])
+        x = x + A.cross_attention(blk["xattn"], h, memory, cfg)
+        h = rmsnorm(x, blk["ln2"])
+        x = x + glu_mlp(h, blk["mlp"]["wi"], blk["mlp"]["wg"], blk["mlp"]["wo"], cfg.act)
+        return shard(x, batch_axes(cfg), None, None), nc
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, new_caches = jax.lax.scan(
+        body_fn, x, (params["dec_blocks"], caches),
+        unroll=cfg.num_layers if cfg.scan_unroll else 1,
+    )
+    x = rmsnorm(x, params["final_ln"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    if cfg.dp_over_model:
+        return shard(logits, batch_axes(cfg), None, None), new_caches
+    return shard(logits, DATA_AXIS, None, MODEL_AXIS), new_caches
+
+
+def init_dec_caches(cfg: ModelConfig, batch: int, max_len: int):
+    one = A.make_cache(cfg, batch, max_len, cfg.jdtype)
+    return jax.tree.map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one
+    )
+
+
+def dec_cache_specs(cfg: ModelConfig):
+    return jax.tree.map(
+        lambda s: P(*((None,) + tuple(s))),
+        A.cache_specs(cfg),
+        is_leaf=lambda x: isinstance(x, P),
+    )

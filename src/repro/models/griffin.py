@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrent branch: x → conv1d(width 4) → RG-LRU, gated by a GeLU branch:
+
+    r_t = σ(W_r ξ_t)             (recurrence gate)
+    i_t = σ(W_i ξ_t)             (input gate)
+    a_t = exp(c·softplus(Λ)·(−r_t))        — i.e. a_t = a^{c·r_t}, a = σ(Λ)
+    h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ ξ_t)
+
+Diagonal state ⇒ the training scan is O(S·D) and decode is O(1) in context
+(recurrentgemma runs ``long_500k``).  Decode state: (h, conv tail of 3
+inputs).  Layer pattern in the full model: recurrent, recurrent, local-attn
+(1:2 attention:recurrence, window 2048).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import MODEL_AXIS, ModelConfig, ParamDef
+
+CONV_W = 4
+LRU_C = 8.0
+
+
+def griffin_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    dr = d  # lru width = d_model for recurrentgemma-2b
+    return {
+        "wa": ParamDef((d, dr), P(None, MODEL_AXIS)),
+        "wb": ParamDef((d, dr), P(None, MODEL_AXIS)),
+        "conv": ParamDef((CONV_W, dr), P(None, MODEL_AXIS), scale=0.5),
+        "wr": ParamDef((dr, dr), P(None, MODEL_AXIS), scale=0.02),
+        "wi": ParamDef((dr, dr), P(None, MODEL_AXIS), scale=0.02),
+        "lam": ParamDef((dr,), P(MODEL_AXIS), init="ones"),
+        "wo": ParamDef((dr, d), P(MODEL_AXIS, None), scale=1.0 / np.sqrt(dr)),
+    }
+
+
+def _lru_coeffs(params, xi):
+    r = jax.nn.sigmoid(xi @ params["wr"])
+    i = jax.nn.sigmoid(xi @ params["wi"])
+    log_a = -LRU_C * jax.nn.softplus(params["lam"]) * r  # log a_t ≤ 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * xi)
+    return a, gated
+
+
+def _causal_conv(x, w, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv, width CONV_W. x (B,S,D); tail (B,CONV_W-1,D)."""
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], CONV_W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(CONV_W)
+    )
+    return out, xp[:, -(CONV_W - 1) :]
+
+
+def griffin_block(
+    params, x, cfg: ModelConfig, *, state: Optional[Dict] = None
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """x (B,S,D). state None → training scan; else {"h": (B,Dr), "conv": (B,3,Dr)}."""
+    b, s, d = x.shape
+    gate = jax.nn.gelu(x @ params["wa"])
+    xb = x @ params["wb"]
+    if state is None:
+        conv, _ = _causal_conv(xb, params["conv"])
+        a, gated = _lru_coeffs(params, conv.astype(jnp.float32))
+
+        def step(h, xs):
+            at, gt = xs
+            h = at * h + gt
+            return h, h
+
+        h0 = jnp.zeros((b, d), jnp.float32)
+        _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), gated.transpose(1, 0, 2)))
+        y = hs.transpose(1, 0, 2).astype(x.dtype)
+        new_state = None
+    else:
+        conv, tail = _causal_conv(xb, params["conv"], state["conv"])
+        a, gated = _lru_coeffs(params, conv.astype(jnp.float32))
+        h = a[:, 0] * state["h"] + gated[:, 0]
+        y = h[:, None].astype(x.dtype)
+        new_state = {"h": h, "conv": tail}
+    return (gate * y) @ params["wo"], new_state
+
+
+def griffin_state(cfg: ModelConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, d), jnp.float32),
+    }
+
+
+def griffin_state_spec() -> Dict:
+    return {"h": P("data", MODEL_AXIS), "conv": P("data", None, MODEL_AXIS)}

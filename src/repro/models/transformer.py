@@ -1,0 +1,293 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / hybrid wiring.
+
+Layers follow the config's repeating ``pattern`` (e.g. gemma3's 5×local +
+1×global, recurrentgemma's 2×recurrent + 1×local, dbrx's all-MoE).  Full
+pattern periods are stacked and traversed with ``jax.lax.scan`` so the HLO
+contains ONE period regardless of depth (critical for 40–80-layer dry-run
+compiles); leftover layers (depth % period) run unrolled.  Each period is
+optionally ``jax.checkpoint``-ed (activation rematerialization).
+
+Decode state is a pytree mirroring the block structure: KV caches for
+attention layers, (h, conv) for RG-LRU, (dk×dv) state for RWKV.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models import griffin as G
+from repro.models import moe as M
+from repro.models import rwkv6 as W
+from repro.models.common import (
+    DATA_AXIS,
+    MODEL_AXIS,
+    ModelConfig,
+    ParamDef,
+    batch_axes,
+    glu_mlp,
+    mlp_defs,
+    rmsnorm,
+    shard,
+)
+
+
+# ----------------------------------------------------------------- defs
+
+def _gamma(cfg):
+    return ParamDef((cfg.d_model,), P(None), init="zeros")
+
+
+def layer_defs(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    d: Dict[str, Any] = {"ln1": _gamma(cfg), "ln2": _gamma(cfg)}
+    if kind in ("global", "local"):
+        d["attn"] = A.attn_defs(cfg)
+        d["mlp"] = mlp_defs(cfg)
+    elif kind == "moe":
+        d["attn"] = A.attn_defs(cfg)
+        d["moe"] = M.moe_defs(cfg)
+    elif kind == "recurrent":
+        d["rglru"] = G.griffin_defs(cfg)
+        d["mlp"] = mlp_defs(cfg)
+    elif kind == "rwkv":
+        d["rwkv"] = W.rwkv_defs(cfg)
+        d["mlp"] = mlp_defs(cfg)
+    else:
+        raise ValueError(kind)
+    return d
+
+
+def _stack_defs(defs, n: int):
+    return jax.tree.map(
+        lambda p: ParamDef((n,) + p.shape, P(*((None,) + tuple(p.spec))),
+                           scale=p.scale, init=p.init),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    period = len(cfg.pattern)
+    n_blocks = cfg.num_layers // period
+    tail = cfg.num_layers % period
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), P(MODEL_AXIS, None), scale=0.02),
+        "final_ln": _gamma(cfg),
+        "blocks": {
+            f"k{j}_{kind}": _stack_defs(layer_defs(cfg, kind), n_blocks)
+            for j, kind in enumerate(cfg.pattern)
+        },
+        "tail": {
+            f"k{j}_{cfg.pattern[j]}": layer_defs(cfg, cfg.pattern[j])
+            for j in range(tail)
+        },
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef(
+            (cfg.d_model, cfg.vocab_size), P(None, MODEL_AXIS), scale=0.02
+        )
+    return defs
+
+
+# ----------------------------------------------------------------- apply
+
+def _theta_for(cfg: ModelConfig, kind: str):
+    # gemma3: local layers use the short-context base (1e4), global the long one
+    if kind == "local" and cfg.rope_theta > 1e5:
+        return 1e4
+    return cfg.rope_theta
+
+
+def apply_layer(
+    params, x, cfg: ModelConfig, kind: str, *,
+    positions, mesh=None, cache=None,
+):
+    """One transformer layer. Returns (x, new_cache, moe_drops)."""
+    drops = jnp.zeros((), jnp.int32)
+    h = rmsnorm(x, params["ln1"])
+    if kind in ("global", "local", "moe"):
+        window = cfg.window if kind == "local" else 0
+        attn_cache = None if cache is None else cache
+        y, new_cache = A.self_attention(
+            params["attn"], h, cfg,
+            positions=positions, window=window,
+            theta=_theta_for(cfg, kind), cache=attn_cache,
+        )
+    elif kind == "recurrent":
+        y, new_cache = G.griffin_block(params["rglru"], h, cfg, state=cache)
+    elif kind == "rwkv":
+        y, new_cache = W.rwkv_block(params["rwkv"], h, cfg, state=cache)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    h = rmsnorm(x, params["ln2"])
+    if kind == "moe":
+        y, d = M.moe_block(params["moe"], h, cfg, mesh=mesh)
+        drops = drops + d.astype(jnp.int32)
+    else:
+        y = glu_mlp(h, params["mlp"]["wi"], params["mlp"]["wg"], params["mlp"]["wo"], cfg.act)
+    x = x + y
+    # sequence-parallel residual stream (§Perf iter 3): between matmuls the
+    # activations stay sharded over (data, model) on (batch, seq) — TP
+    # boundary transitions become s/tp-sized gathers/reduce-scatters instead
+    # of full-activation all-gathers.  Decode (s == 1) stays replicated.
+    if x.shape[1] > 1 and cfg.blocked_attention and not cfg.dp_over_model:
+        x = shard(x, DATA_AXIS, MODEL_AXIS, None)
+    else:
+        x = shard(x, batch_axes(cfg), None, None)
+    return x, new_cache, drops
+
+
+def _period_apply(block_params, x, cfg, *, positions, mesh, caches=None):
+    """Apply one pattern period. caches: dict kind_key -> cache (or None)."""
+    new_caches = {}
+    drops = jnp.zeros((), jnp.int32)
+    for j, kind in enumerate(cfg.pattern):
+        key = f"k{j}_{kind}"
+        c = None if caches is None else caches.get(key)
+        x, nc, d = apply_layer(
+            block_params[key], x, cfg, kind,
+            positions=positions, mesh=mesh, cache=c,
+        )
+        drops = drops + d
+        if nc is not None:
+            new_caches[key] = nc
+    return x, (new_caches if caches is not None else None), drops
+
+
+def forward(
+    params, tokens, cfg: ModelConfig, *, mesh=None,
+    caches: Optional[Dict] = None, positions=None, frontend_embeds=None,
+):
+    """tokens (B, S) int32 (or ``frontend_embeds`` (B,S,D) for stub
+    modalities).  caches=None → parallel (train/prefill without cache);
+    else decode with S==1.  Returns (logits, new_caches, moe_drops)."""
+    if frontend_embeds is not None:
+        x = frontend_embeds.astype(cfg.jdtype)
+    else:
+        x = params["embed"][tokens]
+        if cfg.scale_embed:
+            x = x * np.float32(np.sqrt(cfg.d_model))
+        x = x.astype(cfg.jdtype)
+    x = shard(x, batch_axes(cfg), None, None)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    period = len(cfg.pattern)
+    n_blocks = cfg.num_layers // period
+    tail = cfg.num_layers % period
+    total_drops = jnp.zeros((), jnp.int32)
+
+    if n_blocks > 0:
+        def scan_body(carry, xs):
+            x, drops = carry
+            block_params, block_caches = xs
+            x, new_caches, d = _period_apply(
+                block_params, x, cfg, positions=positions, mesh=mesh,
+                caches=block_caches,
+            )
+            return (x, drops + d), new_caches
+
+        body = scan_body
+        if cfg.remat:
+            body = jax.checkpoint(scan_body)
+        block_caches = None if caches is None else caches["blocks"]
+        (x, total_drops), new_block_caches = jax.lax.scan(
+            body,
+            (x, total_drops),
+            (params["blocks"], block_caches),
+            unroll=n_blocks if cfg.scan_unroll else 1,
+        )
+    else:
+        new_block_caches = None
+
+    new_tail_caches = {}
+    for j in range(tail):
+        kind = cfg.pattern[j]
+        key = f"k{j}_{kind}"
+        c = None if caches is None else caches["tail"].get(key)
+        x, nc, d = apply_layer(
+            params["tail"][key], x, cfg, kind,
+            positions=positions, mesh=mesh, cache=c,
+        )
+        total_drops = total_drops + d
+        if nc is not None:
+            new_tail_caches[key] = nc
+
+    x = rmsnorm(x, params["final_ln"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    if cfg.dp_over_model:
+        logits = shard(logits, batch_axes(cfg), None, None)
+    else:
+        logits = shard(logits, DATA_AXIS, None, MODEL_AXIS)
+    new_caches = (
+        None if caches is None else {"blocks": new_block_caches, "tail": new_tail_caches}
+    )
+    return logits, new_caches, total_drops
+
+
+# ----------------------------------------------------------------- caches
+
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind in ("global", "local", "moe"):
+        return A.make_cache(cfg, batch, max_len, cfg.jdtype)
+    if kind == "recurrent":
+        return G.griffin_state(cfg, batch)
+    if kind == "rwkv":
+        return W.rwkv_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _layer_cache_spec(cfg: ModelConfig, kind: str):
+    if kind in ("global", "local", "moe"):
+        return A.cache_specs(cfg)
+    if kind == "recurrent":
+        return G.griffin_state_spec()
+    if kind == "rwkv":
+        return W.rwkv_state_spec()
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    period = len(cfg.pattern)
+    n_blocks = cfg.num_layers // period
+    tail = cfg.num_layers % period
+    blocks = {
+        f"k{j}_{kind}": jax.tree.map(
+            lambda a: jnp.zeros((n_blocks,) + a.shape, a.dtype),
+            _layer_cache(cfg, kind, batch, max_len),
+        )
+        for j, kind in enumerate(cfg.pattern)
+    }
+    tails = {
+        f"k{j}_{cfg.pattern[j]}": _layer_cache(cfg, cfg.pattern[j], batch, max_len)
+        for j in range(tail)
+    }
+    return {"blocks": blocks, "tail": tails}
+
+
+def cache_specs_tree(cfg: ModelConfig):
+    period = len(cfg.pattern)
+    tail = cfg.num_layers % period
+    def lift(spec_tree):
+        return jax.tree.map(
+            lambda s: P(*((None,) + tuple(s))),
+            spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    blocks = {
+        f"k{j}_{kind}": lift(_layer_cache_spec(cfg, kind))
+        for j, kind in enumerate(cfg.pattern)
+    }
+    tails = {
+        f"k{j}_{cfg.pattern[j]}": _layer_cache_spec(cfg, cfg.pattern[j])
+        for j in range(tail)
+    }
+    return {"blocks": blocks, "tail": tails}

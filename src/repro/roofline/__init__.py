@@ -1,0 +1,1 @@
+from repro.roofline.analysis import HW, RooflineTerms, analyze_lowered, model_flops  # noqa: F401

@@ -1,0 +1,119 @@
+"""HLO inspector — the dry-run 'profiler' for the perf hillclimb.
+
+Per §Perf methodology: with no TPU wall clock, the profile is the compiled
+HLO. This tool surfaces what the roofline terms are made of:
+
+  * top-k collective ops by result bytes (with shapes) — what to reshard,
+  * duplicate-fusion counts — remat-inserted recompute,
+  * largest temp buffers — what busts HBM.
+
+Usage:
+  PYTHONPATH=src python -m repro.roofline.inspect --arch qwen2-7b --shape train_4k
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import collections
+import dataclasses
+import re
+
+
+def top_collectives(hlo: str, k: int = 12):
+    pat = re.compile(
+        r"=\s*((?:[a-z0-9]+\[[0-9,]*\][^\s]*\s*,?\s*)+)\s*"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|ragged-all-to-all)"
+        r"(?:-start)?\("
+    )
+    shape_re = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    dt_bytes = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "f16": 2, "pred": 1, "s8": 1}
+    agg = collections.Counter()
+    examples = {}
+    for line in hlo.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        total = 0
+        for dt, dims in shape_re.findall(m.group(1)):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * dt_bytes.get(dt, 4)
+        key = (m.group(2), m.group(1).strip()[:70])
+        agg[key] += total
+        examples[key] = line.strip()[:160]
+    return agg.most_common(k)
+
+
+def buffer_report(compiled):
+    try:
+        mem = compiled.memory_analysis()
+        return (
+            f"args={mem.argument_size_in_bytes/1e9:.2f}GB "
+            f"out={mem.output_size_in_bytes/1e9:.2f}GB "
+            f"temp={mem.temp_size_in_bytes/1e9:.2f}GB"
+        )
+    except Exception as e:  # noqa: BLE001
+        return str(e)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="inspect the 1-period unrolled probe (per-layer view)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config overrides key=value (e.g. fsdp=True)")
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_config, input_specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_cell
+    from repro.models.api import build_model
+
+    cfg = get_config(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        cur = getattr(cfg, k)
+        overrides[k] = type(cur)(eval(v)) if not isinstance(cur, str) else v
+    if args.probe:
+        period = len(cfg.pattern)
+        overrides.update(num_layers=period, scan_unroll=True)
+        if cfg.kind == "encdec":
+            overrides.update(encoder_layers=1, num_layers=1)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    cell = input_specs(args.arch, args.shape, cfg)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    model = build_model(cfg)
+    with mesh:
+        lowered = lower_cell(model, mesh, cell)
+        compiled = lowered.compile()
+    hlo = compiled.as_text()
+    print("== memory:", buffer_report(compiled))
+    cost = compiled.cost_analysis()
+    print(f"== cost: flops={cost.get('flops', 0):.3e} bytes={cost.get('bytes accessed', 0):.3e}")
+    print("== top collectives (bytes aggregated over identical shapes):")
+    for (kind, shape), b in top_collectives(hlo):
+        print(f"  {b/1e9:9.3f} GB  {kind:<18} {shape}")
+    # remat duplicates: fusions with identical shape signatures
+    fus = collections.Counter(
+        re.sub(r"%\w+", "%", l.split("=", 1)[1])[:100]
+        for l in hlo.splitlines()
+        if " fusion(" in l
+    )
+    dups = [(c, s) for s, c in fus.items() if c > 2]
+    dups.sort(reverse=True)
+    print("== most-duplicated fusion signatures (recompute indicator):")
+    for c, s in dups[:6]:
+        print(f"  ×{c}  {s[:120]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Shared test fixtures.
+
+Tests that exercise collectives need a real multi-device mesh, so we ask the
+CPU platform for 8 devices — enough for an interesting (2, 4) mesh.  The
+production 512-device setting lives ONLY in ``repro.launch.dryrun`` (the
+dry-run harness), never here: smoke tests and benchmarks are written to work
+at whatever small device count this gives.
+"""
+import os
+
+# Must run before jax locks the backend on first init.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import pytest
+from jax.sharding import AxisType
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    """A 1-D 8-way mesh over axis 'data'."""
+    return jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+
+
+@pytest.fixture(scope="session")
+def mesh24():
+    """A 2-D (2, 4) mesh over ('data', 'model') — miniature of the pod mesh."""
+    return jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)

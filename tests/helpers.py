@@ -1,0 +1,54 @@
+"""Shared work-item types and utilities for the test suite."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import work_item
+
+
+@work_item
+@dataclasses.dataclass
+class Ray:
+    """A paper-style forwardable ray (cf. Listing 1: SchlieRaFI's FWDRay)."""
+
+    origin: jax.Array      # (3,) f32
+    direction: jax.Array   # (3,) f32
+    tmin: jax.Array        # () f32
+    pixel: jax.Array       # () i32
+    integral: jax.Array    # () f32
+
+
+@work_item
+@dataclasses.dataclass
+class Particle:
+    """Paper §5.4's particle: unique ID + position."""
+
+    uid: jax.Array  # () i32
+    pos: jax.Array  # (3,) f32
+
+
+def ray_proto():
+    return Ray(
+        origin=jnp.zeros(3),
+        direction=jnp.zeros(3),
+        tmin=jnp.zeros(()),
+        pixel=jnp.zeros((), jnp.int32),
+        integral=jnp.zeros(()),
+    )
+
+
+def particle_proto():
+    return Particle(uid=jnp.zeros((), jnp.int32), pos=jnp.zeros(3))
+
+
+def make_rays(n, seed=0, pixel_base=0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    return Ray(
+        origin=jax.random.normal(k1, (n, 3)),
+        direction=jax.random.normal(k2, (n, 3)),
+        tmin=jax.random.uniform(k3, (n,)),
+        pixel=jnp.arange(n, dtype=jnp.int32) + pixel_base,
+        integral=jnp.zeros((n,)),
+    )

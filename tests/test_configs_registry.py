@@ -1,0 +1,89 @@
+"""Registry/shape-suite tests: the 40-cell matrix is exactly as assigned."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config, input_specs, shape_suite
+from repro.configs.shapes import SHAPES
+from repro.models.api import build_model
+
+EXPECTED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+    "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+    "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+    "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+    "llama4-scout-17b-16e": (48, 5120, 40, 8, 8192, 202048),
+    "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+    "rwkv6-3b": (32, 2560, 40, 0, 8960, 65536),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+}
+
+
+def test_all_ten_archs_registered():
+    assert set(ARCHS) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_exact_assigned_configs(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = EXPECTED[arch]
+    assert cfg.num_layers == L and cfg.d_model == d
+    assert cfg.num_heads == h and cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab_size == v
+
+
+def test_moe_configs():
+    l4 = get_config("llama4-scout-17b-16e")
+    assert l4.num_experts == 16 and l4.top_k == 1
+    dbrx = get_config("dbrx-132b")
+    assert dbrx.num_experts == 16 and dbrx.top_k == 4
+    assert dbrx.moe_dispatch == "rafi_ep"  # the paper technique is default
+
+
+def test_shape_suite_skips_long500k_for_quadratic_archs():
+    for arch in ARCHS:
+        suite = shape_suite(arch)
+        entry = suite["long_500k"]
+        if arch in ("rwkv6-3b", "recurrentgemma-2b"):
+            assert not isinstance(entry, str), f"{arch} must run long_500k"
+        else:
+            assert isinstance(entry, str) and "SKIP" in entry
+
+
+def test_cell_count_is_40():
+    cells = [(a, s) for a in ARCHS for s in shape_suite(a)]
+    assert len(cells) == 40
+
+
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+def test_input_specs_shapes(shape):
+    cell = input_specs("qwen2-7b", shape)
+    spec = SHAPES[shape]
+    if cell.skip:
+        return
+    if spec.step in ("train", "prefill"):
+        assert cell.batch["tokens"].shape == (spec.global_batch, spec.seq_len)
+    else:
+        assert cell.batch["token"].shape == (spec.global_batch, 1)
+
+
+def test_frontend_stubs_provide_embeddings():
+    vl = input_specs("qwen2-vl-72b", "train_4k")
+    assert "embeds" in vl.batch  # vision stub: precomputed patch embeddings
+    sm = input_specs("seamless-m4t-medium", "train_4k")
+    assert "frames" in sm.batch  # audio stub: precomputed frame embeddings
+
+
+def test_param_counts_are_in_family_ballpark():
+    """Sanity: full configs land within ±40% of the family's nameplate."""
+    expected_b = {
+        "qwen2-7b": 7.6, "qwen2.5-14b": 14.7, "glm4-9b": 9.4, "gemma3-1b": 1.0,
+        "dbrx-132b": 132.0, "qwen2-vl-72b": 72.0, "rwkv6-3b": 3.1,
+        "recurrentgemma-2b": 2.7, "seamless-m4t-medium": 1.2,
+    }
+    for arch, nb in expected_b.items():
+        n = build_model(get_config(arch)).param_count() / 1e9
+        assert 0.6 * nb < n < 1.4 * nb, f"{arch}: {n:.2f}B vs nameplate {nb}B"

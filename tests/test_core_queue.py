@@ -1,0 +1,81 @@
+"""Unit tests for the device interface: WorkQueue emit/read semantics (§3.2-3.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DISCARD, clear, enqueue, get_incoming, make_queue, num_incoming
+
+from helpers import make_rays, ray_proto
+
+
+def test_empty_queue():
+    q = make_queue(ray_proto(), 16)
+    assert int(num_incoming(q)) == 0
+    assert q.capacity == 16
+    assert np.all(np.asarray(q.dest) == DISCARD)
+
+
+def test_enqueue_appends_in_lane_order():
+    q = make_queue(ray_proto(), 16)
+    rays = make_rays(4)
+    q = enqueue(q, rays, jnp.array([3, 1, 2, 0], jnp.int32), jnp.ones(4, bool))
+    assert int(q.count) == 4
+    np.testing.assert_array_equal(np.asarray(q.dest[:4]), [3, 1, 2, 0])
+    got = get_incoming(q, 2)
+    np.testing.assert_allclose(np.asarray(got.origin), np.asarray(rays.origin[2]))
+
+
+def test_enqueue_masked_compacts_stably():
+    q = make_queue(ray_proto(), 16)
+    rays = make_rays(6)
+    mask = jnp.array([True, False, True, False, True, False])
+    q = enqueue(q, rays, jnp.arange(6, dtype=jnp.int32), mask)
+    assert int(q.count) == 3
+    np.testing.assert_array_equal(np.asarray(q.items.pixel[:3]), [0, 2, 4])
+    np.testing.assert_array_equal(np.asarray(q.dest[:3]), [0, 2, 4])
+
+
+def test_multiple_enqueues_accumulate():
+    """A kernel may emit more than one item per lane (§3.3): e.g. a bounce
+    ray and a shadow ray from the same shading event."""
+    q = make_queue(ray_proto(), 16)
+    q = enqueue(q, make_rays(3), jnp.zeros(3, jnp.int32), jnp.ones(3, bool))
+    q = enqueue(q, make_rays(3, pixel_base=100), jnp.ones(3, jnp.int32), jnp.ones(3, bool))
+    assert int(q.count) == 6
+    np.testing.assert_array_equal(np.asarray(q.items.pixel[:6]), [0, 1, 2, 100, 101, 102])
+
+
+def test_overflow_drops_and_counts():
+    """Paper §3.3: emits past capacity 'simply get dropped'."""
+    q = make_queue(ray_proto(), 4)
+    q = enqueue(q, make_rays(6), jnp.zeros(6, jnp.int32), jnp.ones(6, bool))
+    assert int(q.count) == 4
+    assert int(q.drops) == 2
+    np.testing.assert_array_equal(np.asarray(q.items.pixel[:4]), [0, 1, 2, 3])
+
+
+def test_negative_dest_is_discard():
+    q = make_queue(ray_proto(), 16)
+    dest = jnp.array([0, -1, 1, DISCARD], jnp.int32)
+    q = enqueue(q, make_rays(4), dest, jnp.ones(4, bool))
+    assert int(q.count) == 2
+    np.testing.assert_array_equal(np.asarray(q.items.pixel[:2]), [0, 2])
+
+
+def test_clear_resets_count_keeps_drops():
+    q = make_queue(ray_proto(), 4)
+    q = enqueue(q, make_rays(6), jnp.zeros(6, jnp.int32), jnp.ones(6, bool))
+    q = clear(q)
+    assert int(q.count) == 0
+    assert int(q.drops) == 2
+    assert np.all(np.asarray(q.dest) == DISCARD)
+
+
+def test_enqueue_is_jittable_and_donatable():
+    @jax.jit
+    def step(q):
+        return enqueue(q, make_rays(2), jnp.zeros(2, jnp.int32), jnp.ones(2, bool))
+
+    q = step(make_queue(ray_proto(), 8))
+    assert int(q.count) == 2
