@@ -13,25 +13,54 @@
   moe_dispatch_*         paper technique on the LM side: RaFI-EP dispatch vs
                          dense-TP baseline wall time (tokens/s).
 
-Output: ``name,us_per_call,derived`` CSV on stdout.
+Output: ``name,us_per_call,derived`` CSV on stdout, and optionally a
+machine-readable JSON file (``--json PATH``) so successive PRs can track the
+perf trajectory::
+
+    {"meta": {...}, "rows": [{"name": ..., "us_per_call": ...,
+                              "derived": {"rays_per_s": 1.6e6, ...}}, ...]}
+
+``--smoke`` runs only the fast forwarding-walltime subset (the regression
+canary); ``--only SUBSTR`` filters sections by name.
 """
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+import argparse
 import dataclasses
+import json
+import platform
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 ROWS = []
 
 
+def _parse_derived(derived: str):
+    """'k=v;k2=v2' → dict with floats where they parse."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
 def emit(name: str, us_per_call: float, derived: str):
-    ROWS.append((name, us_per_call, derived))
+    ROWS.append(
+        {"name": name, "us_per_call": us_per_call, "derived": _parse_derived(derived)}
+    )
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
@@ -70,7 +99,7 @@ def _ray_proto():
 
 
 def _mesh8():
-    return jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    return compat.make_mesh((8,), ("data",))
 
 
 def _emit_kernel(cfg, n_emit, cap):
@@ -102,17 +131,21 @@ def fig8_efficiency():
     """Useful payload bytes ÷ total collective bytes, from the lowered HLO of
     the production 256-chip mesh — the structural analogue of Fig. 8's
     bandwidth-utilization curve (no TPU wall clock exists here)."""
-    from jax.sharding import AbstractMesh
-
     from repro.core import ForwardConfig, item_nbytes
     from repro.roofline.analysis import collective_bytes
 
     # AbstractMesh: lower for the 256-chip production mesh without devices
-    mesh = AbstractMesh((16, 16), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = compat.abstract_mesh((16, 16), ("data", "model"))
+    if mesh is None:
+        print("# fig8_efficiency skipped: no AbstractMesh in this JAX")
+        return
     R = 256
     item_b = item_nbytes(_ray_proto())
     for n_emit in (64, 512, 4096, 32768):
-        for exchange in ("padded", "ragged"):
+        exchanges = ["padded"] + (
+            ["ragged"] if compat.HAS_RAGGED_ALL_TO_ALL else []
+        )
+        for exchange in exchanges:
             cap = max(n_emit, 256)
             cfg = ForwardConfig(
                 ("data", "model"), R, cap, exchange=exchange,
@@ -121,8 +154,8 @@ def fig8_efficiency():
             kern = _emit_kernel(cfg, n_emit, cap)
             t0 = time.perf_counter()
             low = jax.jit(
-                jax.shard_map(kern, mesh=mesh, in_specs=P(("data", "model")),
-                              out_specs=P(("data", "model")))
+                compat.shard_map(kern, mesh=mesh, in_specs=P(("data", "model")),
+                                 out_specs=P(("data", "model")))
             ).lower(jnp.arange(512.0))
             lower_us = (time.perf_counter() - t0) * 1e6
             coll = collective_bytes(low.as_text())
@@ -130,7 +163,7 @@ def fig8_efficiency():
             if exchange == "ragged":
                 # ragged payload bytes are data-dependent == useful; static
                 # HLO only bounds the receive buffer.  Wire = payload +
-                # control plane (the count/offset all_to_alls).
+                # control plane (the count collective).
                 control = sum(v for k, v in coll.items() if k != "ragged-all-to-all")
                 total = useful + control
             else:
@@ -152,6 +185,8 @@ def sort_cost():
         f = jax.jit(lambda r, d: S.sort_by_destination(r, d, jnp.int32(n), 256))
         us, _ = _timeit(f, rays, dest)
         cost = f.lower(rays, dest).compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
         flops = cost.get("flops", 0.0)
         byts = cost.get("bytes accessed", 0.0)
         wire = n * 44  # what the exchange must move anyway
@@ -171,8 +206,8 @@ def fwd_walltime():
             cap = max(256, n_emit * 2)
             cfg = ForwardConfig("data", 8, cap, exchange=exchange, peer_capacity=cap)
             f = jax.jit(
-                jax.shard_map(_emit_kernel(cfg, n_emit, cap), mesh=mesh,
-                              in_specs=P("data"), out_specs=P("data"))
+                compat.shard_map(_emit_kernel(cfg, n_emit, cap), mesh=mesh,
+                                 in_specs=P("data"), out_specs=P("data"))
             )
             us, _ = _timeit(f, jnp.arange(8.0))
             rays_s = 8 * n_emit / (us / 1e6)
@@ -246,15 +281,70 @@ def moe_dispatch():
         emit(f"moe_dispatch_{plane}", us, f"tokens_per_s={n_tok/(us/1e6):.2e}")
 
 
-def main() -> None:
+SECTIONS = [
+    ("fig8_efficiency", fig8_efficiency),
+    ("sort_cost", sort_cost),
+    ("fwd_walltime", fwd_walltime),
+    ("sort_throughput", sort_throughput),
+    ("app_rates", app_rates),
+    ("moe_dispatch", moe_dispatch),
+]
+
+SMOKE_SECTIONS = ("fwd_walltime", "sort_throughput")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write results as machine-readable JSON")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"fast subset only: {', '.join(SMOKE_SECTIONS)}")
+    ap.add_argument("--only", metavar="SUBSTR", default=None,
+                    help="run only sections whose name contains SUBSTR")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
-    fig8_efficiency()
-    sort_cost()
-    fwd_walltime()
-    sort_throughput()
-    app_rates()
-    moe_dispatch()
-    print(f"# {len(ROWS)} benchmarks complete")
+    failures = []
+    selected = [
+        (name, fn)
+        for name, fn in SECTIONS
+        if (not args.smoke or name in SMOKE_SECTIONS)
+        and (not args.only or args.only in name)
+    ]
+    if not selected:  # a typo'd --only must not record an empty "green" run
+        only_hits = [n for n, _ in SECTIONS if not args.only or args.only in n]
+        if args.smoke and only_hits:
+            raise SystemExit(
+                f"error: --only {args.only!r} matches only non-smoke sections "
+                f"{only_hits}; drop --smoke to run them"
+            )
+        raise SystemExit(f"error: no benchmark section matches --only {args.only!r}")
+    for name, fn in selected:
+        try:
+            fn()
+        except Exception as e:  # a broken section must not hide the others' rows
+            failures.append(name)
+            print(f"# section {name} failed: {type(e).__name__}: {e}", flush=True)
+    print(f"# {len(ROWS)} benchmarks complete" + (f"; failed sections: {failures}" if failures else ""))
+
+    if args.json:
+        payload = {
+            "meta": {
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "platform": platform.platform(),
+                "smoke": bool(args.smoke),
+                "failed_sections": failures,
+            },
+            "rows": ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}")
+
+    if failures:  # the canary must trip CI, not just leave a comment
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

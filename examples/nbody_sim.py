@@ -12,11 +12,11 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import numpy as np
-from jax.sharding import AxisType
+from repro import compat
 
 from repro.apps import nbody
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 cfg = nbody.NBodyConfig(num_particles=256, steps=8, dt=5e-4, theta=0.3)
 
 pos, vel, stats = nbody.run(mesh, cfg)

@@ -14,7 +14,9 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 from repro.core import (
     DISCARD, ForwardConfig, enqueue, forward_work, make_queue,
@@ -32,7 +34,7 @@ class Ray:
 
 PROTO = Ray(value=jnp.zeros(()), hops=jnp.zeros((), jnp.int32))
 R, CAP = 8, 128
-mesh = jax.make_mesh((R,), ("data",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((R,), ("data",))
 cfg = ForwardConfig(axis_name="data", num_ranks=R, capacity=CAP, exchange="padded")
 
 
@@ -65,7 +67,7 @@ def drive(_):
     return acc[None], rounds[None]
 
 
-f = jax.jit(jax.shard_map(drive, mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P("data"))))
+f = jax.jit(compat.shard_map(drive, mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P("data"))))
 acc, rounds = f(jnp.arange(float(R)))
 print(f"deposited per rank: {acc}")
 print(f"rounds to distributed termination: {int(rounds[0])}")

@@ -12,12 +12,12 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import numpy as np
-from jax.sharding import AxisType
+from repro import compat
 
 from repro.apps import streamlines as sl
 from repro.kernels.rk4_advect import ops as rk4
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 
 for name, fid in [("ABC", rk4.ABC), ("tornado", rk4.TORNADO), ("taylor-green", rk4.TAYLOR_GREEN)]:
     cfg = sl.StreamlineConfig(num_particles=48, max_steps=60, dt=0.12, field_id=fid)

@@ -14,14 +14,14 @@ import time
 
 import jax
 import numpy as np
-from jax.sharding import AxisType
+from repro import compat
 
 from repro.apps import vopat
 from repro.apps.fields import write_ppm
 
 scene = vopat.VopatScene(width=96, height=96, spp=1, max_bounces=4, albedo=0.85)
-m1 = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
-m8 = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+m1 = compat.make_mesh((1,), ("data",))
+m8 = compat.make_mesh((8,), ("data",))
 
 t0 = time.time()
 img8, s8 = vopat.render(m8, scene)

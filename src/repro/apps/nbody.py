@@ -38,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.core import (
     DISCARD,
     ForwardConfig,
@@ -312,7 +314,7 @@ def run(mesh, cfg: NBodyConfig = NBodyConfig()) -> Tuple[np.ndarray, np.ndarray,
         return pos, vel, totals, pq.drops[None]
 
     f = jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             drive, mesh=mesh, in_specs=P(AXIS),
             out_specs=(P(), P(), P(), P(AXIS)), check_vma=False,
         )

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.core import (
     DISCARD,
     ForwardConfig,
@@ -142,7 +144,7 @@ def run(
 
     # check_vma=False: interpret-mode pallas_call inside shard_map cannot
     # track varying-manual-axes (Mosaic-compiled kernels on real TPU can).
-    f = jax.jit(jax.shard_map(drive, mesh=mesh, in_specs=P(AXIS),
+    f = jax.jit(compat.shard_map(drive, mesh=mesh, in_specs=P(AXIS),
                               out_specs=(P(), P(AXIS), P(AXIS)), check_vma=False))
     merged, rounds, drops = f(jnp.arange(R, dtype=jnp.float32))
     traces = np.array(merged)

@@ -41,6 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.apps import fields as F
 from repro.core import (
     DISCARD,
@@ -245,7 +247,7 @@ def render(
         return img, rounds[None], q.drops[None]
 
     f = jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             drive, mesh=mesh, in_specs=P(AXIS), out_specs=(P(), P(AXIS), P(AXIS)),
             # interpret-mode pallas_call can't track varying-manual-axes
             check_vma=not use_pallas,

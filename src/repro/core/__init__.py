@@ -26,11 +26,21 @@ from repro.core.queue import (
 )
 from repro.core.rebalance import rebalance
 from repro.core.termination import run_until_done
-from repro.core.types import batched_zeros, item_nbytes, item_spec, work_item
+from repro.core.types import (
+    PackSpec,
+    batched_zeros,
+    item_nbytes,
+    item_spec,
+    pack_payload,
+    pack_spec,
+    unpack_payload,
+    work_item,
+)
 
 __all__ = [
     "DISCARD",
     "ForwardConfig",
+    "PackSpec",
     "RafiContext",
     "WorkQueue",
     "batched_zeros",
@@ -42,7 +52,10 @@ __all__ = [
     "item_spec",
     "make_queue",
     "num_incoming",
+    "pack_payload",
+    "pack_spec",
     "rebalance",
     "run_until_done",
+    "unpack_payload",
     "work_item",
 ]

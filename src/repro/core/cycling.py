@@ -34,6 +34,13 @@ def _ring_permute(x: jax.Array, axis_name, num_ranks: int) -> jax.Array:
 def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, WorkQueue]:
     """One ring hop: absorb items addressed to this rank, pass the rest on.
 
+    The hop uses the same packed wire format as ``forward_work``: the item
+    payload AND the in-flight destination vector are packed into one
+    ``(C, W+1)`` uint32 buffer, compacted with a single sort permutation
+    (items and dests used to be sorted in two separate passes), and shipped
+    with ONE ``collective_permute`` — one payload permute, one payload
+    collective, exactly like the forwarding round.
+
     Returns ``(in_flight_queue_after_hop, absorbed_queue)``; both fixed
     capacity.  Must run inside shard_map.
     """
@@ -45,23 +52,22 @@ def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig) -> Tuple[W
 
     absorbed = enqueue(absorbed, q.items, jnp.where(mine, me, DISCARD).astype(jnp.int32), valid)
 
-    # compact the passing items, then ship the whole queue one hop
-    from repro.core.sorting import sort_by_destination
+    from repro.core.sorting import sort_permutation
 
-    # stable compaction: give passing items key 0, others key 1 (tail)
+    # stable compaction: give passing items key 0, others key 1 (tail) —
+    # ONE key sort, ONE payload gather for items+dest together
     fake_dest = jnp.where(passing, 0, DISCARD).astype(jnp.int32)
-    items_c, _, counts = sort_by_destination(q.items, fake_dest, q.count, 1)
-    dest_c, _, _ = sort_by_destination({"d": q.dest}, fake_dest, q.count, 1)
+    perm, _, counts = sort_permutation(fake_dest, q.count, 1)
     n_pass = counts[0]
+    packed, spec = T.pack_payload({"dest": q.dest, "items": q.items})
+    packed_c = jnp.take(packed, perm, axis=0)
 
-    shipped = jax.tree.map(
-        lambda a: _ring_permute(a, cfg.axis_name, cfg.num_ranks), items_c
-    )
-    shipped_dest = _ring_permute(dest_c["d"], cfg.axis_name, cfg.num_ranks)
+    shipped = _ring_permute(packed_c, cfg.axis_name, cfg.num_ranks)
     shipped_count = _ring_permute(n_pass, cfg.axis_name, cfg.num_ranks)
+    bundle = T.unpack_payload(shipped, spec)
     nq = WorkQueue(
-        items=shipped,
-        dest=shipped_dest,
+        items=bundle["items"],
+        dest=bundle["dest"],
         count=shipped_count.astype(jnp.int32),
         drops=q.drops,
     )

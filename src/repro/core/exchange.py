@@ -1,36 +1,62 @@
-"""Payload exchange — the TPU adaptation of RaFI §4.2.2 (MPI_Alltoallv).
+"""Packed-payload exchange — the TPU adaptation of RaFI §4.2.2 (MPI_Alltoallv).
 
-Three interchangeable backends, all called *inside* ``shard_map`` with a bound
-mesh axis:
+Wire format: the caller packs the whole work-item pytree into ONE
+``(capacity, words)`` uint32 buffer (``core.types.pack_payload`` — the
+paper's contiguous 44-byte ray).  Every backend moves that single buffer with
+a SINGLE payload collective per round, and the send-side marshal composes the
+destination-sort permutation with the send-layout gather so the payload is
+read exactly once and written exactly once (§4.2.1/§6.1) — there is no
+separate "sort the payload, then gather the segments" double pass, and no
+per-pytree-leaf collective fan-out.
 
-* ``ragged`` — ``jax.lax.ragged_all_to_all``: the exact XLA analogue of
+Collective budget per ``forward_work`` round (guarded by
+``tests/test_collective_budget.py``):
+
+  payload   1 × all_to_all (padded) / 1 × ragged_all_to_all (ragged)
+  counts    1 × all_to_all of per-peer counts (padded) /
+            1 × all_gather of the (R,) send-count vector (ragged — every rank
+            reconstructs the full R×R count matrix locally and derives ALL
+            offsets/clamps without further communication, replacing the three
+            chained count all-to-alls of the naive Alltoallv control plane)
+
+Three interchangeable backends, all called *inside* ``shard_map`` with a
+bound mesh axis:
+
+* ``ragged`` — ``ragged_all_to_all``: the exact XLA analogue of
   ``MPI_Alltoallv`` and the TPU production path (single variable-size
   exchange over contiguous per-peer segments — the whole point of sorting
-  first).  XLA:CPU cannot execute the op (verified UNIMPLEMENTED), so on CPU
-  this backend is only ``.lower()``-validated.
-* ``padded`` — fixed per-peer slots of size ``peer_capacity`` exchanged with a
-  single tiled ``jax.lax.all_to_all``.  Portable (runs on CPU; used by the
-  dry-run compile) at the cost of padding bandwidth.  This is also the
-  natural MoE-dispatch form (capacity-factor semantics).
+  first).  XLA:CPU cannot execute the op, so on CPU this backend is only
+  ``.lower()``-validated; on JAX builds without the op it raises.
+* ``padded`` — fixed per-peer slots of size ``peer_capacity`` exchanged with
+  a single tiled ``all_to_all`` of the packed buffer.  Portable (runs on
+  CPU; used by the dry-run compile) at the cost of padding bandwidth.  This
+  is also the natural MoE-dispatch form (capacity-factor semantics).
 * ``onehot`` — an all-gather reference oracle with a deliberately different
   code path, used only by tests.
 
-All backends share the contract: input items are *sorted by destination*
-(contiguous per-peer segments, offsets = exclusive-cumsum of counts); output
-is a compacted receive buffer plus per-peer receive counts.  Segment overflow
-(sender-side ``> peer_capacity``, or receiver-side total ``> capacity``) is
-dropped and counted — the queue-capacity contract of §3.3/§6.3.
+All backends share the contract: inputs are the *unsorted* packed payload
+plus the destination-sort permutation and per-destination send counts;
+output is a compacted packed receive buffer plus per-peer receive counts.
+Segment overflow (sender-side ``> peer_capacity``, or receiver-side total
+``> capacity``) is dropped and counted — the queue-capacity contract of
+§3.3/§6.3.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import types as T
+from repro import compat
 
-__all__ = ["exchange_counts", "exchange_padded", "exchange_ragged", "exchange_onehot"]
+__all__ = [
+    "exchange_counts",
+    "exchange_count_matrix",
+    "exchange_padded",
+    "exchange_ragged",
+    "exchange_onehot",
+]
 
 
 def _a2a(x: jax.Array, axis_name) -> jax.Array:
@@ -47,42 +73,89 @@ def exchange_counts(send_counts: jax.Array, axis_name) -> jax.Array:
     return _a2a(send_counts[:, None], axis_name).reshape(-1)
 
 
+def exchange_count_matrix(send_counts: jax.Array, axis_name) -> jax.Array:
+    """All-gather the per-rank send-count vectors into the full (R, R) count
+    matrix ``M[s, d] = items s sends to d``.
+
+    One tiny collective (R² int32 — 256 KiB even at R=256) buys the ENTIRE
+    ragged control plane: every rank derives every rank's receive layout,
+    capacity clamps, and landing offsets locally, so no chained count
+    exchanges are needed before the payload collective.
+    """
+    return jax.lax.all_gather(send_counts, axis_name)
+
+
+def _ragged_control_plane(
+    cnt: jax.Array, me: jax.Array, capacity: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """From the (R_src, R_dst) count matrix, derive my ragged-a2a parameters.
+
+    Receiver-capacity clamp, replicated identically on all ranks: at each
+    destination column ``d`` the senders' segments land at the exclusive
+    prefix of the column; any segment (or segment tail) past ``capacity`` is
+    cut — the §3.3 drop rule, decided without a round trip.
+
+    Returns ``(send_sizes (R,), output_offsets (R,), recv_sizes (R,))``.
+    """
+    roff_raw = jnp.cumsum(cnt, axis=0) - cnt  # excl. prefix per dst column
+    allowed = jnp.clip(jnp.minimum(cnt, capacity - roff_raw), 0)
+    roff = jnp.cumsum(allowed, axis=0) - allowed
+    send_sizes = allowed[me]  # my row: what each peer lets me deliver
+    output_offsets = roff[me]  # where my block lands on each peer
+    recv_sizes = allowed[:, me]  # my column: what each peer delivers to me
+    return send_sizes, output_offsets, recv_sizes
+
+
 def exchange_padded(
-    sorted_items: Any,
+    packed: jax.Array,  # (C, W) uint32 — UNSORTED packed payload
+    perm: jax.Array,  # (C,) destination-sort permutation (sorted pos → lane)
     send_counts: jax.Array,  # (R,) valid-destination counts (histogram[:R])
     *,
     axis_name,
     num_ranks: int,
     capacity: int,
     peer_capacity: int,
-) -> Tuple[Any, jax.Array, jax.Array, jax.Array]:
-    """Padded-slot exchange. Returns (recv_items, recv_counts, total, drops)."""
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Padded-slot exchange of the packed payload.
+
+    Single-pass marshal: the send buffer row for (peer r, slot s) is
+    ``packed[perm[off[r] + s]]`` — destination sort and slot layout composed
+    into ONE gather, so the payload is read once and written once on the send
+    side.  Returns ``(recv_packed, recv_counts, total, drops)``.
+    """
     R, S = num_ranks, peer_capacity
+    cap = packed.shape[0]
     clamped = jnp.minimum(send_counts, S)
     send_drops = jnp.sum(send_counts - clamped)
-    off = jnp.cumsum(send_counts) - send_counts  # segment starts in sorted buffer
+    off = jnp.cumsum(send_counts) - send_counts  # segment starts, sorted order
 
-    # Marshal: gather each peer's segment into its fixed (S,) slot.  src index
-    # for (peer r, slot s) is off[r] + s; lanes s >= clamped[r] carry garbage
-    # that the receiver masks out via counts.
     r_idx = jnp.repeat(jnp.arange(R, dtype=jnp.int32), S)
     s_idx = jnp.tile(jnp.arange(S, dtype=jnp.int32), R)
-    src = off[r_idx] + s_idx
-    send_buf = T.tree_take(sorted_items, src)  # leaves (R*S, ...)
+    slotpos = jnp.clip(off[r_idx] + s_idx, 0, cap - 1)  # position in sorted order
+    src = jnp.take(perm, slotpos)  # compose with the sort → source lane
+    if use_pallas:
+        from repro.kernels.marshal import ops as marshal_ops
 
-    recv_counts = exchange_counts(clamped, axis_name)  # (R,)
-    recv_buf = jax.tree.map(
-        lambda a: _a2a(a.reshape((R, S) + a.shape[1:]), axis_name), send_buf
-    )  # leaves (R, S, ...): block p = segment from peer p
+        send_buf = marshal_ops.fused_marshal(packed, src, num_ranks=R, slot=S)
+    else:
+        send_buf = jnp.take(packed, src, axis=0).reshape(R, S, -1)
+
+    recv_counts = exchange_counts(clamped, axis_name)  # the ONE count collective
+    recv_buf = _a2a(send_buf, axis_name)  # the ONE payload collective
 
     # Compact: out[roff[p] + s] = recv_buf[p, s] for s < recv_counts[p].
     roff = jnp.cumsum(recv_counts) - recv_counts
-    dstpos = roff[r_idx] + s_idx
-    ok = s_idx < recv_counts[r_idx]
-    slot = jnp.where(ok & (dstpos < capacity), dstpos, capacity)
-    out = T.batched_zeros(jax.tree.map(lambda a: a[0], sorted_items), capacity)
-    flat_recv = jax.tree.map(lambda a: a.reshape((R * S,) + a.shape[2:]), recv_buf)
-    out = T.tree_scatter(out, slot, flat_recv, capacity=capacity)
+    if use_pallas:
+        from repro.kernels.marshal import ops as marshal_ops
+
+        out = marshal_ops.fused_unmarshal(recv_buf, roff, recv_counts, capacity=capacity)
+    else:
+        dstpos = roff[r_idx] + s_idx
+        ok = s_idx < recv_counts[r_idx]
+        slot = jnp.where(ok & (dstpos < capacity), dstpos, capacity)
+        out = jnp.zeros((capacity, packed.shape[1]), packed.dtype)
+        out = out.at[slot].set(recv_buf.reshape(R * S, -1), mode="drop")
 
     total_recv = jnp.sum(recv_counts)
     new_count = jnp.minimum(total_recv, capacity)
@@ -91,83 +164,81 @@ def exchange_padded(
 
 
 def exchange_ragged(
-    sorted_items: Any,
+    packed: jax.Array,  # (C, W) uint32 — UNSORTED packed payload
+    perm: jax.Array,
     send_counts: jax.Array,  # (R,)
     *,
     axis_name,
     num_ranks: int,
     capacity: int,
     peer_capacity: int = 0,  # unused; signature parity
-) -> Tuple[Any, jax.Array, jax.Array, jax.Array]:
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """ragged_all_to_all exchange — the MPI_Alltoallv / GPU-RDMA analogue.
 
-    Contiguous per-peer segments go out in ONE variable-size collective; the
+    The packed payload is permuted ONCE into destination order (contiguous
+    per-peer segments) and shipped in ONE variable-size collective; the
     receive side is written compacted directly (no unpack pass), which is the
-    paper's "large contiguous blocks at very high bandwidth" property.
+    paper's "large contiguous blocks at very high bandwidth" property.  The
+    control plane is one all-gather of the send-count vector (see
+    :func:`exchange_count_matrix`).
     """
-    del peer_capacity
-    R = num_ranks
+    del peer_capacity, use_pallas  # segments are contiguous: no slot gather
+    me = jax.lax.axis_index(axis_name)
     off = jnp.cumsum(send_counts) - send_counts
 
-    # Receiver-capacity clamp: compute receive layout first, clamp segments to
-    # fit ``capacity``, and tell senders the allowed sizes (one tiny a2a).
-    recv_counts_raw = exchange_counts(send_counts, axis_name)
-    roff_raw = jnp.cumsum(recv_counts_raw) - recv_counts_raw
-    allowed_recv = jnp.clip(jnp.minimum(recv_counts_raw, capacity - roff_raw), 0)
-    roff = jnp.cumsum(allowed_recv) - allowed_recv
-    allowed_send = exchange_counts(allowed_recv, axis_name)  # my clamped send sizes
-    output_offsets = exchange_counts(roff, axis_name)  # where my block lands on peer r
-    send_drops = jnp.sum(send_counts - allowed_send)
+    cnt = exchange_count_matrix(send_counts, axis_name)  # the ONE count collective
+    send_sizes, output_offsets, recv_sizes = _ragged_control_plane(cnt, me, capacity)
+    send_drops = jnp.sum(send_counts - send_sizes)
 
-    proto = jax.tree.map(lambda a: a[0], sorted_items)
-    out = T.batched_zeros(proto, capacity)
-    out = jax.tree.map(
-        lambda op, o: jax.lax.ragged_all_to_all(
-            op,
-            o,
-            input_offsets=off,
-            send_sizes=allowed_send,
-            output_offsets=output_offsets,
-            recv_sizes=allowed_recv,
-            axis_name=axis_name,
-        ),
-        sorted_items,
+    sorted_packed = jnp.take(packed, perm, axis=0)  # the ONE payload permute
+    out = jnp.zeros((capacity, packed.shape[1]), packed.dtype)
+    out = compat.ragged_all_to_all(  # the ONE payload collective
+        sorted_packed,
         out,
+        input_offsets=off,
+        send_sizes=send_sizes,
+        output_offsets=output_offsets,
+        recv_sizes=recv_sizes,
+        axis_name=axis_name,
     )
-    new_count = jnp.sum(allowed_recv)
-    return out, allowed_recv, new_count, send_drops
+    new_count = jnp.sum(recv_sizes)
+    return out, recv_sizes, new_count, send_drops
 
 
 def exchange_onehot(
-    sorted_items: Any,
+    packed: jax.Array,
+    perm: jax.Array,
     send_counts: jax.Array,
     *,
     axis_name,
     num_ranks: int,
     capacity: int,
     peer_capacity: int = 0,
-) -> Tuple[Any, jax.Array, jax.Array, jax.Array]:
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """All-gather reference oracle (tests only): every rank sees everything,
     selects what is addressed to it, and compacts stably by (source, lane).
     Deliberately a different code path from the production backends.
     """
-    del peer_capacity
+    del peer_capacity, use_pallas
     R = num_ranks
     me = jax.lax.axis_index(axis_name)
     off = jnp.cumsum(send_counts) - send_counts
-    cap = jax.tree.leaves(sorted_items)[0].shape[0]
+    cap = packed.shape[0]
+    sorted_packed = jnp.take(packed, perm, axis=0)
     lane = jnp.arange(cap, dtype=jnp.int32)
     # reconstruct per-item dest from segments: dest[i] = r iff off[r] <= i < off[r]+cnt
     seg_end = off + send_counts
     dest = jnp.sum((lane[:, None] >= seg_end[None, :]).astype(jnp.int32), axis=1)
     dest = jnp.where(lane < jnp.sum(send_counts), dest, R)
 
-    all_items = jax.tree.map(lambda a: jax.lax.all_gather(a, axis_name), sorted_items)
+    all_packed = jax.lax.all_gather(sorted_packed, axis_name)  # (R, cap, W)
     all_dest = jax.lax.all_gather(dest, axis_name)  # (R, cap)
     mine = (all_dest == me).reshape(-1)
     order = jnp.argsort(~mine, stable=True)  # mine first, stable (src, lane) order
-    flat = jax.tree.map(lambda a: a.reshape((R * cap,) + a.shape[2:]), all_items)
-    gathered = T.tree_take(flat, order[:capacity])
+    flat = all_packed.reshape(R * cap, -1)
+    gathered = jnp.take(flat, order[:capacity], axis=0, mode="clip")
     total = jnp.sum(mine.astype(jnp.int32))
     new_count = jnp.minimum(total, capacity)
     recv_counts = jnp.sum((all_dest == me).astype(jnp.int32), axis=1)

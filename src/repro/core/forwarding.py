@@ -2,18 +2,27 @@
 
 Per round, inside ``shard_map`` (so collectives bind to a real mesh axis):
 
-  1. sort emitted items by destination (§4.2.1, ``core.sorting``),
-  2. exchange per-peer counts (MPI_Alltoall analogue) and the payload
-     (MPI_Alltoallv analogue) (§4.2.2, ``core.exchange``),
-  3. wrap up (§4.2.3): the received buffer becomes the next input queue,
-     destinations reset to DISCARD, the emit counter resets, and a ``psum``
-     of received counts yields the *global* in-flight total for distributed
-     termination.
+  1. key sort (§4.2.1, ``core.sorting``): pack (dest, lane) keys, sort them,
+     and keep only the *permutation* — the payload is not touched;
+  2. pack the work-item pytree into ONE ``(capacity, words)`` uint32 buffer
+     (``core.types.pack_payload`` — the paper's contiguous trivially-copyable
+     ray on the wire);
+  3. exchange (§4.2.2, ``core.exchange``): ONE count collective plus ONE
+     payload collective move the packed buffer; the send-side marshal is a
+     single gather that composes the sort permutation with the send layout,
+     so each ray is read exactly once and written exactly once (§6.1);
+  4. wrap up (§4.2.3): the received buffer is unpacked back into the item
+     pytree and becomes the next input queue, destinations reset to DISCARD,
+     the emit counter resets, and a ``psum`` of received counts yields the
+     *global* in-flight total for distributed termination.
 
 Beyond the paper: because sort, exchange and termination test are all traced
 into one XLA program, a full multi-round computation runs under a single
 ``jax.lax.while_loop`` with zero host round-trips (the CUDA/MPI original
-synchronises with the host every round to read back segment offsets).
+synchronises with the host every round to read back segment offsets).  And
+where the original issues one RDMA per peer, the packed wire format means
+the whole round is one collective regardless of how many leaves the item
+type has.
 """
 from __future__ import annotations
 
@@ -25,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import exchange as X
 from repro.core import sorting as S
+from repro.core import types as T
 from repro.core.queue import DISCARD, WorkQueue
 
 __all__ = ["ForwardConfig", "forward_work"]
@@ -47,7 +57,8 @@ class ForwardConfig:
       peer_capacity: per-(src,dst) slot size for the padded backend.
       exchange: "ragged" (TPU production) | "padded" (portable) | "onehot".
       sort_method: "pack" (paper-faithful packed keys) | "argsort".
-      use_pallas: route sort/compact hot spots through the Pallas kernels.
+      use_pallas: route the key-sort and the fused pack+permute marshal
+        through the Pallas kernels (``kernels/sort_keys``, ``kernels/marshal``).
     """
 
     axis_name: Any
@@ -78,28 +89,30 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array
     if cfg.use_pallas:
         from repro.kernels.sort_keys import ops as sk_ops
 
-        sorted_items, sorted_dest, send_counts = sk_ops.sort_by_destination(
-            q.items, q.dest, q.count, R
-        )
+        perm, sorted_dest, send_counts = sk_ops.sort_permutation(q.dest, q.count, R)
     else:
-        sorted_items, sorted_dest, send_counts = S.sort_by_destination(
-            q.items, q.dest, q.count, R, method=cfg.sort_method
+        perm, sorted_dest, send_counts = S.sort_permutation(
+            q.dest, q.count, R, method=cfg.sort_method
         )
     del sorted_dest  # segments are fully described by the histogram
 
+    packed, spec = T.pack_payload(q.items)  # (C, W) uint32 — the wire format
+
     fn = _EXCHANGES[cfg.exchange]
-    recv_items, recv_counts, new_count, drops = fn(
-        sorted_items,
+    recv_packed, recv_counts, new_count, drops = fn(
+        packed,
+        perm,
         send_counts[:R],
         axis_name=cfg.axis_name,
         num_ranks=R,
         capacity=cfg.capacity,
         peer_capacity=cfg.peer_capacity,
+        use_pallas=cfg.use_pallas,
     )
     del recv_counts
 
     new_q = WorkQueue(
-        items=recv_items,
+        items=T.unpack_payload(recv_packed, spec),
         dest=jnp.full((cfg.capacity,), DISCARD, jnp.int32),
         count=new_count.astype(jnp.int32),
         drops=q.drops + drops.astype(jnp.int32),

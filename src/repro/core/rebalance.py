@@ -17,6 +17,11 @@ Strategy (deterministic, collective-free planning):
 Items whose destination is already set (``dest >= 0``) are left alone; only
 "resident" work (dest == DISCARD after a round, i.e. work the rank would
 process locally next round) is rebalanced.
+
+Cost: one ``forward_work`` round — with the packed wire format that is one
+payload collective + one count collective + the R-int all_gather of the
+plan, so rebalancing every round is cheap enough to use as a matter of
+course on skewed workloads.
 """
 from __future__ import annotations
 

@@ -31,6 +31,7 @@ from repro.core import types as T
 
 __all__ = [
     "sort_by_destination",
+    "sort_permutation",
     "destination_histogram",
     "segment_offsets",
     "segment_bounds_from_sorted",
@@ -114,19 +115,24 @@ def segment_bounds_from_sorted(sorted_dest: jax.Array, num_ranks: int) -> Tuple[
     return begin, end
 
 
-def sort_by_destination(
-    items: Any,
+def sort_permutation(
     dest: jax.Array,
     count: jax.Array,
     num_ranks: int,
     *,
     method: str = "pack",
-) -> Tuple[Any, jax.Array, jax.Array]:
-    """§4.2.1: stable-sort (items, dest) by destination rank.
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """§4.2.1 key sort WITHOUT touching the payload.
 
-    Returns ``(sorted_items, sorted_dest, send_counts)`` where invalid items
-    are at the tail with dest == num_ranks, and ``send_counts`` is the
-    ``(num_ranks+1,)`` histogram (slot R = invalid).
+    Returns ``(perm, sorted_dest, send_counts)`` — ``perm[i]`` is the source
+    lane of sorted position ``i`` (a stable sort by sanitized destination;
+    invalid lanes sort to the tail with dest == num_ranks), and
+    ``send_counts`` is the ``(num_ranks+1,)`` histogram (slot R = invalid).
+
+    The payload permutation is deliberately NOT applied here: the hot path
+    composes ``perm`` with the exchange's send-layout gather so the packed
+    payload is read exactly once and written exactly once per round (the
+    paper's §4.2.1 contract, now including the marshal step).
     """
     cap = dest.shape[0]
     if method == "pack":
@@ -137,10 +143,31 @@ def sort_by_destination(
         lane = jnp.arange(cap, dtype=jnp.int32)
         valid = (lane < count) & (dest >= 0) & (dest < num_ranks)
         d = jnp.where(valid, dest, num_ranks)
-        perm = jnp.argsort(d, stable=True)
+        perm = jnp.argsort(d, stable=True).astype(jnp.int32)
         d_sorted = d[perm]
     else:
         raise ValueError(f"unknown sort method {method!r}")
-    sorted_items = T.tree_take(items, perm)
     send_counts = destination_histogram(dest, count, num_ranks)
+    return perm, d_sorted, send_counts
+
+
+def sort_by_destination(
+    items: Any,
+    dest: jax.Array,
+    count: jax.Array,
+    num_ranks: int,
+    *,
+    method: str = "pack",
+) -> Tuple[Any, jax.Array, jax.Array]:
+    """§4.2.1: stable-sort (items, dest) by destination rank.
+
+    Returns ``(sorted_items, sorted_dest, send_counts)``.  Convenience form
+    of :func:`sort_permutation` that applies the permutation leaf-wise; the
+    forwarding hot path uses :func:`sort_permutation` directly and folds the
+    permutation into the packed-payload marshal gather instead.
+    """
+    perm, d_sorted, send_counts = sort_permutation(
+        dest, count, num_ranks, method=method
+    )
+    sorted_items = T.tree_take(items, perm)
     return sorted_items, d_sorted, send_counts

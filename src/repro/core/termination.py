@@ -15,6 +15,7 @@ from typing import Any, Callable, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.forwarding import ForwardConfig, forward_work
 from repro.core.queue import WorkQueue
 
@@ -27,9 +28,7 @@ def _vary(tree: Any, axis_name) -> Any:
     axes = tuple(axis_name) if isinstance(axis_name, (tuple, list)) else (axis_name,)
 
     def cast(x):
-        x = jnp.asarray(x)
-        missing = tuple(a for a in axes if a not in jax.typeof(x).vma)
-        return jax.lax.pcast(x, missing, to="varying") if missing else x
+        return compat.pcast_varying(jnp.asarray(x), axes)
 
     return jax.tree.map(cast, tree)
 

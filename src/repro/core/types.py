@@ -28,6 +28,10 @@ __all__ = [
     "tree_take",
     "tree_scatter",
     "tree_where",
+    "PackSpec",
+    "pack_spec",
+    "pack_payload",
+    "unpack_payload",
 ]
 
 
@@ -84,6 +88,131 @@ def tree_scatter(buf, pos, vals, *, capacity: int):
     """
     del capacity  # encoded by mode="drop" against the buffer extent
     return jax.tree.map(lambda b, v: b.at[pos].set(v, mode="drop"), buf, vals)
+
+
+# --------------------------------------------------------------------------
+# Packed wire format (§4.2 "large contiguous blocks"): the whole work-item
+# pytree bitcast into ONE (capacity, words) uint32 buffer.  This is the JAX
+# rendering of the paper's trivially-copyable RayT on the wire — the 44-byte
+# Fig-8 ray becomes 11 words per row.  Structural hot-path operations
+# (sort-permute, marshal, exchange) act on this single buffer, so each round
+# needs exactly one payload gather and one payload collective instead of one
+# per pytree leaf.
+#
+# Layout: leaves in treedef order, each flattened to its per-item byte string
+# and bitcast to ≥1 whole uint32 words (sub-word dtypes are zero-padded up to
+# a word boundary; the pad words travel but carry no information and are
+# stripped on unpack).  Pack ∘ unpack is the identity bit-for-bit.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Static recipe for packing/unpacking one work-item type.
+
+    Attributes:
+      treedef: pytree structure of the item type.
+      shapes: per-leaf trailing (per-item) shapes.
+      dtypes: per-leaf dtype names.
+      words: per-leaf packed word counts (incl. sub-word padding).
+    """
+
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    words: tuple
+
+    @property
+    def total_words(self) -> int:
+        return sum(self.words)
+
+    @property
+    def offsets(self) -> tuple:
+        out, o = [], 0
+        for w in self.words:
+            out.append(o)
+            o += w
+        return tuple(out)
+
+
+def _leaf_words(shape, dtype) -> int:
+    n = int(np.prod(shape, dtype=np.int64))
+    b = np.dtype(dtype).itemsize
+    return -(-n * b // 4)  # zero-size leaves occupy zero wire words
+
+
+def pack_spec(proto) -> PackSpec:
+    """The :class:`PackSpec` for items shaped like ``proto`` (no batch axis
+    required — only leaf trailing shapes and dtypes matter)."""
+    leaves, treedef = jax.tree.flatten(item_spec(proto))
+    return PackSpec(
+        treedef=treedef,
+        shapes=tuple(tuple(l.shape) for l in leaves),
+        dtypes=tuple(np.dtype(l.dtype).name for l in leaves),
+        words=tuple(_leaf_words(l.shape, l.dtype) for l in leaves),
+    )
+
+
+def _leaf_to_words(a: jax.Array) -> jax.Array:
+    """(C, ...) leaf → (C, words) uint32, bit-preserving."""
+    cap = a.shape[0]
+    if a.size == 0:
+        return jnp.zeros((cap, 0), jnp.uint32)
+    if a.dtype == jnp.bool_:
+        a = a.astype(jnp.uint8)
+    flat = a.reshape(cap, -1)
+    b = np.dtype(flat.dtype).itemsize
+    if b == 4:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    if b == 8:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32).reshape(cap, -1)
+    # sub-word (1- or 2-byte) dtypes: zero-pad the minor axis to a whole
+    # number of words, then bitcast groups of 4//b elements into each word
+    per = 4 // b
+    pad = (-flat.shape[1]) % per
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return jax.lax.bitcast_convert_type(flat.reshape(cap, -1, per), jnp.uint32)
+
+
+def _words_to_leaf(seg: jax.Array, shape, dtype) -> jax.Array:
+    """(C, words) uint32 → (C, *shape) leaf of ``dtype`` (inverse bitcast)."""
+    cap = seg.shape[0]
+    dt = np.dtype(dtype)
+    n = int(np.prod(shape, dtype=np.int64))
+    if n == 0:
+        return jnp.zeros((cap,) + tuple(shape), dt)
+    wire_dt = jnp.uint8 if dt == np.bool_ else jnp.dtype(dtype)
+    b = np.dtype(wire_dt).itemsize
+    if b == 4:
+        out = jax.lax.bitcast_convert_type(seg, wire_dt)[:, :n]
+    elif b == 8:
+        out = jax.lax.bitcast_convert_type(seg.reshape(cap, -1, 2), wire_dt)[:, :n]
+    else:
+        out = jax.lax.bitcast_convert_type(seg, wire_dt).reshape(cap, -1)[:, :n]
+    if dt == np.bool_:
+        out = out.astype(jnp.bool_)
+    return out.reshape((cap,) + tuple(shape))
+
+
+def pack_payload(items: Any, spec: PackSpec | None = None):
+    """Bitcast-concatenate a batched item pytree into one (C, W) uint32
+    buffer.  Returns ``(packed, spec)``; ``spec`` round-trips via
+    :func:`unpack_payload`."""
+    if spec is None:
+        spec = pack_spec(jax.tree.map(lambda a: a[0], items))
+    cols = [_leaf_to_words(l) for l in jax.tree.leaves(items)]
+    packed = cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+    return packed, spec
+
+
+def unpack_payload(packed: jax.Array, spec: PackSpec) -> Any:
+    """Inverse of :func:`pack_payload` (bit-exact)."""
+    leaves, o = [], 0
+    for shape, dtype, w in zip(spec.shapes, spec.dtypes, spec.words):
+        leaves.append(_words_to_leaf(packed[:, o : o + w], shape, dtype))
+        o += w
+    return jax.tree.unflatten(spec.treedef, leaves)
 
 
 def tree_where(mask, a, b):

@@ -16,19 +16,9 @@ on TPU they compile via Mosaic.
 """
 import jax
 
+from repro.compat import sds  # noqa: F401  (re-export: kernels build out_shapes with it)
+
 
 def default_interpret() -> bool:
     """Interpret Pallas kernels unless we are actually on TPU."""
     return jax.default_backend() != "tpu"
-
-
-def sds(shape, dtype, *like):
-    """ShapeDtypeStruct whose varying-manual-axes (vma) is the union of the
-    inputs' — required so pallas_call composes with shard_map(check_vma=True)."""
-    vma = frozenset()
-    for x in like:
-        try:
-            vma = vma | jax.typeof(x).vma
-        except (AttributeError, TypeError):
-            pass
-    return jax.ShapeDtypeStruct(shape, dtype, vma=vma)

@@ -1,13 +1,20 @@
-"""Pallas kernels: §4.2.2 segment marshal / unmarshal around the exchange.
+"""Pallas kernels: §4.2.2 marshal / unmarshal around the packed exchange.
 
-``marshal``: gather each peer's contiguous segment of the destination-sorted
-buffer into its fixed (peer_capacity,) slot of the padded send buffer.  The
-per-peer offsets are *data-dependent*, which Pallas expresses with
-scalar-prefetch: the offset vector lands in SMEM before the grid runs, and
-each grid step r copies ``sorted[off[r] : off[r]+S]`` with a dynamic slice —
-one sequential VMEM-resident pass, no gather unit involved.  This is the TPU
-analogue of the paper's observation that RDMA needs "single, consistent
-blocks of (GPU) data".
+``gather_rows`` — the production hot path, the SINGLE-pass marshal: the
+caller composes the destination-sort permutation with the padded send layout
+(``src[i] = perm[off[r] + s]``) and this kernel materialises
+``out[i] = packed[src[i]]`` in one gather.  The index vector lands in SMEM by
+scalar prefetch; each grid step copies one dynamically-addressed row of the
+VMEM-resident packed buffer.  Sort-then-segment-copy used to be two payload
+passes; folding the permutation into the gather makes "each ray gets read
+exactly once and written exactly once" (§4.2.1/§6.1) hold through the
+marshal step too.
+
+``marshal`` — the two-pass formulation kept for cross-validation: gather each
+peer's *contiguous* segment of an already-sorted buffer into its fixed
+(peer_capacity,) slot via scalar-prefetched dynamic slices (the TPU analogue
+of the paper's observation that RDMA needs "single, consistent blocks of
+(GPU) data").
 
 ``unmarshal``: the inverse — scatter received (R, S) blocks into a compact
 buffer at data-dependent offsets via dynamic-slice stores.  Segments are
@@ -16,9 +23,10 @@ load-blend-store (grid steps are sequential, so the read-modify-write is
 race-free).  A trash tail of S rows absorbs receiver-side overflow, keeping
 the §3.3 drop semantics.
 
-Payload layout: items are marshalled as a flat (C, D) f32/int view — ops.py
-packs the work-item pytree into lanes (bitcast), mirroring the paper's
-"trivially copyable struct" contract on the wire.
+Payload layout: all kernels act on the packed wire format of
+``core.types.pack_payload`` — the whole work-item pytree bitcast into one
+(C, words) uint32 buffer, mirroring the paper's "trivially copyable struct"
+contract on the wire.
 """
 from __future__ import annotations
 
@@ -63,6 +71,44 @@ def marshal(
         out_shape=sds((num_ranks, slot, d), sorted_flat.dtype, sorted_flat, off),
         interpret=interpret,
     )(off, sorted_flat)
+
+
+def _gather_rows_kernel(idx_ref, in_ref, out_ref):
+    r = pl.program_id(0)
+    out_ref[...] = in_ref[pl.ds(idx_ref[r], 1), :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(
+    src: jax.Array,  # (C, D) packed payload
+    row_idx: jax.Array,  # (N,) int32 source row per output row (clamped)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """The fused single-pass marshal: ``out[i] = src[row_idx[i]]``.
+
+    ``row_idx`` is the destination-sort permutation already composed with the
+    send-slot layout (``perm[off[r] + s]``), so this one gather subsumes what
+    used to be payload-sort-then-segment-copy — each payload row is read
+    exactly once and written exactly once.  The index vector lands in SMEM by
+    scalar prefetch; grid step ``i`` copies one dynamically-addressed row of
+    the VMEM-resident packed buffer (rows are not contiguous, unlike
+    :func:`marshal`, because the sort permutation is folded in).
+    """
+    cap, d = src.shape
+    n = row_idx.shape[0]
+    idx = jnp.clip(row_idx.astype(jnp.int32), 0, cap - 1)
+    return pl.pallas_call(
+        _gather_rows_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n,),
+            in_specs=[pl.BlockSpec((cap, d), lambda i, idx: (0, 0))],
+            out_specs=pl.BlockSpec((1, d), lambda i, idx: (i, 0)),
+        ),
+        out_shape=sds((n, d), src.dtype, src, idx),
+        interpret=interpret,
+    )(idx, src)
 
 
 def _unmarshal_kernel(off_ref, cnt_ref, in_ref, out_ref, *, slot):

@@ -31,6 +31,30 @@ def marshal_items(
     return jax.tree.map(one, sorted_items)
 
 
+def fused_marshal(
+    packed: jax.Array, src_rows: jax.Array, *, num_ranks: int, slot: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(C, W) packed payload + composed gather indices → (R, S, W) send
+    buffer in ONE payload pass (see ``kernel.gather_rows``)."""
+    if interpret is None:
+        interpret = default_interpret()
+    buf = K.gather_rows(packed, src_rows, interpret=interpret)
+    return buf.reshape(num_ranks, slot, packed.shape[1])
+
+
+def fused_unmarshal(
+    recv_buf: jax.Array, recv_offsets: jax.Array, recv_counts: jax.Array,
+    *, capacity: int, interpret: bool | None = None,
+) -> jax.Array:
+    """(R, S, W) received packed blocks → (capacity, W) compacted buffer."""
+    if interpret is None:
+        interpret = default_interpret()
+    return K.unmarshal(
+        recv_buf, recv_offsets, recv_counts, capacity=capacity, interpret=interpret
+    )
+
+
 def unmarshal_items(
     recv_buf: Any, recv_offsets: jax.Array, recv_counts: jax.Array, *, capacity: int,
     interpret: bool | None = None,

@@ -11,6 +11,12 @@ def marshal(sorted_flat, offsets, *, num_ranks, slot):
     )
 
 
+def gather_rows(src, row_idx):
+    cap = src.shape[0]
+    idx = jnp.clip(row_idx.astype(jnp.int32), 0, cap - 1)
+    return jnp.take(src, idx, axis=0)
+
+
 def unmarshal(recv_buf, recv_offsets, recv_counts, *, capacity):
     num_ranks, slot, d = recv_buf.shape
     off = jnp.clip(recv_offsets.astype(jnp.int32), 0, capacity)

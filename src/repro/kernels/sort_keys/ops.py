@@ -22,16 +22,18 @@ def _idx_bits(capacity: int) -> int:
     return max(1, (capacity - 1).bit_length())
 
 
-def sort_by_destination(
-    items: Any,
+def sort_permutation(
     dest: jax.Array,
     count: jax.Array,
     num_ranks: int,
     *,
     tile: int = 2048,
     interpret: bool | None = None,
-) -> Tuple[Any, jax.Array, jax.Array]:
-    """Pallas-path equivalent of core.sorting.sort_by_destination."""
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pallas-path equivalent of ``core.sorting.sort_permutation``: key pack +
+    histogram in one kernel pass, key sort via ``jax.lax.sort`` — the payload
+    is never touched (the caller composes ``perm`` into its single marshal
+    gather)."""
     if interpret is None:
         interpret = default_interpret()
     cap = dest.shape[0]
@@ -48,5 +50,21 @@ def sort_by_destination(
     sorted_keys = jax.lax.sort(keys)
     d_sorted = (sorted_keys >> ib).astype(jnp.int32)
     perm = (sorted_keys & jnp.uint32((1 << ib) - 1)).astype(jnp.int32)
+    return perm, d_sorted, hist
+
+
+def sort_by_destination(
+    items: Any,
+    dest: jax.Array,
+    count: jax.Array,
+    num_ranks: int,
+    *,
+    tile: int = 2048,
+    interpret: bool | None = None,
+) -> Tuple[Any, jax.Array, jax.Array]:
+    """Pallas-path equivalent of core.sorting.sort_by_destination."""
+    perm, d_sorted, hist = sort_permutation(
+        dest, count, num_ranks, tile=tile, interpret=interpret
+    )
     sorted_items = T.tree_take(items, perm)
     return sorted_items, d_sorted, hist

@@ -51,9 +51,13 @@ def train(
     ds = SyntheticLM(cfg.vocab_size, seq, batch)
 
     step_fn, shardings = build_train_step(model, mesh, opt_cfg)
+    # out_shardings pins the state outputs to the same layout as the inputs:
+    # the loop feeds outputs straight back in, and older JAX rejects (rather
+    # than auto-reshards) args whose committed sharding drifts from in_shardings.
     jitted = jax.jit(
         step_fn,
         in_shardings=(shardings["params"], shardings["opt"], None),
+        out_shardings=(shardings["params"], shardings["opt"], None),
         donate_argnums=(0, 1),
     )
 

@@ -69,28 +69,27 @@ _SHLO_DTYPES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "i64": 8, "i32": 4,
                 "ui32": 4, "i16": 2, "i8": 1, "i1": 1}
 
 
-def _stablehlo_collective_bytes(text: str) -> Dict[str, int]:
-    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
-    for line in text.splitlines():
-        kind = next((v for k, v in _SHLO_OPS.items() if k in line), None)
-        if kind is None or "->" not in line:
-            continue
-        result = line.split("->", 1)[1]
-        for dims, dt in _TENSOR_RE.findall(result):
-            n = 1
-            for d in dims.split("x"):
-                if d:
-                    n *= int(d)
-            out[kind] += n * _SHLO_DTYPES.get(dt, 4)
-    return out
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Sum of result-shape bytes per collective kind; handles both post-SPMD
-    HLO (``all-gather(...)``) and StableHLO (``"stablehlo.all_gather"``)."""
+def collective_ops(hlo_text: str) -> list:
+    """Per-op collective inventory: ``[(kind, result_bytes), ...]`` in program
+    order.  Handles both post-SPMD HLO and StableHLO.  This is the basis of
+    the collective-budget regression tests (one payload collective + one
+    count collective per forwarding round)."""
+    ops = []
     if "stablehlo." in hlo_text:
-        return _stablehlo_collective_bytes(hlo_text)
-    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+        for line in hlo_text.splitlines():
+            kind = next((v for k, v in _SHLO_OPS.items() if k in line), None)
+            if kind is None or "->" not in line:
+                continue
+            result = line.split("->", 1)[1]
+            nbytes = 0
+            for dims, dt in _TENSOR_RE.findall(result):
+                n = 1
+                for d in dims.split("x"):
+                    if d:
+                        n *= int(d)
+                nbytes += n * _SHLO_DTYPES.get(dt, 4)
+            ops.append((kind, nbytes))
+        return ops
     for line in hlo_text.splitlines():
         m = _OP_RE.search(line)
         if not m:
@@ -99,7 +98,16 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
         if "-done(" in line and kind + "-done" in line:
             continue  # counted at -start
         shapes = _SHAPE_RE.findall(m.group(1))
-        out[kind] += sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        ops.append((kind, sum(_shape_bytes(dt, dims) for dt, dims in shapes)))
+    return ops
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of result-shape bytes per collective kind; handles both post-SPMD
+    HLO (``all-gather(...)``) and StableHLO (``"stablehlo.all_gather"``)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for kind, nbytes in collective_ops(hlo_text):
+        out[kind] += nbytes
     return out
 
 

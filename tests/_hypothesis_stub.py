@@ -1,0 +1,116 @@
+"""Deterministic fallback for the slice of `hypothesis` this suite uses.
+
+The container image does not ship hypothesis and nothing may be installed
+(ROADMAP constraint), so property tests fall back to this stub: each
+``@given`` test is executed ``max_examples`` times with examples drawn from a
+seeded ``random.Random`` — the same spirit (randomized inputs, fixed shapes)
+minus shrinking and the example database.  Implemented: ``st.integers``,
+``st.booleans``, ``st.just``, ``st.lists``, ``st.tuples``, ``st.data``, and
+``Strategy.flatmap``/``map`` — exactly what the tests import.  If real
+hypothesis is present it is always preferred (see the try/except at each
+import site).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+__all__ = ["given", "settings", "st"]
+
+
+class Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def _draw(self, rng: random.Random):
+        return self._draw_fn(rng)
+
+    def flatmap(self, f):
+        return Strategy(lambda rng: f(self._draw(rng))._draw(rng))
+
+    def map(self, f):
+        return Strategy(lambda rng: f(self._draw(rng)))
+
+
+class _DataObject:
+    """The object ``st.data()`` yields; ``draw`` samples mid-test."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy):
+        return strategy._draw(self._rng)
+
+
+class _StrategiesModule:
+    @staticmethod
+    def integers(min_value, max_value):
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def just(value):
+        return Strategy(lambda rng: value)
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0, max_size: int = 10):
+        return Strategy(
+            lambda rng: [
+                elements._draw(rng) for _ in range(rng.randint(min_size, max_size))
+            ]
+        )
+
+    @staticmethod
+    def tuples(*strategies: Strategy):
+        return Strategy(lambda rng: tuple(s._draw(rng) for s in strategies))
+
+    @staticmethod
+    def data():
+        return Strategy(_DataObject)
+
+
+st = _StrategiesModule()
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strat_args: Strategy, **strat_kwargs: Strategy):
+    """Run the test once per example; strategy-bound params are hidden from
+    the signature so pytest does not mistake them for fixtures (positional
+    strategies fill the test's trailing parameters, like hypothesis)."""
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        if strat_args:
+            drawn_names = {p.name for p in params[-len(strat_args):]}
+        else:
+            drawn_names = set(strat_kwargs)
+        kept = [p for p in params if p.name not in drawn_names]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", None) or getattr(
+                fn, "_stub_max_examples", 20
+            )
+            for i in range(n):
+                rng = random.Random(0xC0FFEE + i)
+                drawn_pos = tuple(s._draw(rng) for s in strat_args)
+                drawn_kw = {k: s._draw(rng) for k, s in strat_kwargs.items()}
+                fn(*args, *drawn_pos, **kwargs, **drawn_kw)
+
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        del wrapper.__wrapped__  # keep pytest off the original signature
+        return wrapper
+
+    return deco

@@ -5,24 +5,29 @@ CPU platform for 8 devices — enough for an interesting (2, 4) mesh.  The
 production 512-device setting lives ONLY in ``repro.launch.dryrun`` (the
 dry-run harness), never here: smoke tests and benchmarks are written to work
 at whatever small device count this gives.
+
+All version-sensitive JAX surface (``AxisType``, ``jax.shard_map``,
+``ragged_all_to_all``) is reached through ``repro.compat`` — tests that need
+a feature the installed JAX lacks must ``pytest.skip`` on the ``HAS_*``
+flags, never fail at import.
 """
 import os
 
 # Must run before jax locks the backend on first init.
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax
 import pytest
-from jax.sharding import AxisType
+
+from repro import compat
 
 
 @pytest.fixture(scope="session")
 def mesh8():
     """A 1-D 8-way mesh over axis 'data'."""
-    return jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    return compat.make_mesh((8,), ("data",))
 
 
 @pytest.fixture(scope="session")
 def mesh24():
     """A 2-D (2, 4) mesh over ('data', 'model') — miniature of the pod mesh."""
-    return jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh((2, 4), ("data", "model"))

@@ -5,17 +5,16 @@ The central claim under test is the paper's §5.1 statement that forwarding
 R-invariant results (bitwise where the math allows it), and the §5.2 baseline
 comparison must reproduce deep compositing's artifact mechanism.
 """
-import jax
 import numpy as np
 import pytest
-from jax.sharding import AxisType
 
+from repro import compat
 from repro.apps import lander, nbody, schlieren, streamlines, vopat
 
 
 @pytest.fixture(scope="module")
 def mesh1():
-    return jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    return compat.make_mesh((1,), ("data",))
 
 
 # ---------------------------------------------------------------- VoPaT §5.1

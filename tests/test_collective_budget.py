@@ -1,0 +1,113 @@
+"""Collective-budget regression tests (ISSUE 1 acceptance).
+
+One ``forward_work`` round must lower to exactly ONE payload-sized collective
+and ONE count collective — the whole point of the packed wire format.  If a
+refactor reintroduces per-leaf collectives (the old code issued one
+all_to_all per pytree leaf) or splits the ragged control plane back into
+chained count exchanges, these tests fail.
+
+The inventory comes from ``roofline.analysis.collective_ops`` over the
+lowered StableHLO of a shard_map'ed round.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import ForwardConfig, enqueue, forward_work, make_queue
+from repro.core import types as T
+from repro.roofline.analysis import collective_ops
+
+from helpers import make_rays, ray_proto
+
+R, CAP = 8, 64
+WORDS = T.pack_spec(ray_proto()).total_words  # 9 for the 36-byte test ray
+
+
+def _lower_one_round(mesh8, cfg):
+    def kernel(_x):
+        q = make_queue(ray_proto(), CAP)
+        me = jax.lax.axis_index("data")
+        q = enqueue(
+            q, make_rays(10), ((me + jnp.arange(10)) % R).astype(jnp.int32),
+            jnp.ones(10, bool),
+        )
+        nq, total = forward_work(q, cfg)
+        return nq.count[None], total, nq.items.tmin
+
+    return jax.jit(
+        compat.shard_map(
+            kernel, mesh=mesh8, in_specs=P("data"),
+            out_specs=(P("data"), P(), P("data")),
+        )
+    ).lower(jnp.arange(8.0)).as_text()
+
+
+def _payload_threshold(cfg):
+    """Anything at least one peer-slot of packed rows is payload; the count
+    exchange is R (or R×R) int32 — orders of magnitude smaller."""
+    return cfg.peer_capacity * WORDS * 4
+
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["xla", "pallas"])
+def test_padded_round_has_one_payload_and_one_count_collective(mesh8, use_pallas):
+    cfg = ForwardConfig("data", R, CAP, exchange="padded", use_pallas=use_pallas)
+    ops = collective_ops(_lower_one_round(mesh8, cfg))
+    a2a = [b for k, b in ops if k == "all-to-all"]
+    payload = [b for b in a2a if b >= _payload_threshold(cfg)]
+    counts = [b for b in a2a if b < _payload_threshold(cfg)]
+    assert len(payload) == 1, f"want ONE payload all_to_all, got {a2a}"
+    # the one payload collective carries the whole packed send buffer
+    assert payload[0] == R * cfg.peer_capacity * WORDS * 4
+    assert len(counts) == 1, f"want ONE count all_to_all, got {a2a}"
+    assert counts[0] == R * 4
+    # no stray payload movement on other collectives (psum of the scalar
+    # count is the only other traffic)
+    others = [(k, b) for k, b in ops if k != "all-to-all"]
+    assert all(b <= R * R * 4 for _k, b in others), others
+
+
+def test_ragged_round_has_one_payload_and_one_count_collective(mesh8):
+    if not compat.HAS_RAGGED_ALL_TO_ALL:
+        pytest.skip("installed JAX has no lax.ragged_all_to_all")
+    cfg = ForwardConfig("data", R, CAP, exchange="ragged")
+    ops = collective_ops(_lower_one_round(mesh8, cfg))
+    ragged = [b for k, b in ops if k == "ragged-all-to-all"]
+    assert len(ragged) == 1, f"want ONE ragged_all_to_all, got {ops}"
+    # control plane: exactly one all_gather of the (R,) count vector —
+    # NOT the three chained count all_to_alls of the naive Alltoallv plan
+    assert sum(1 for k, _ in ops if k == "all-to-all") == 0, ops
+    gathers = [b for k, b in ops if k == "all-gather"]
+    assert gathers == [R * R * 4], ops
+
+
+def test_cycle_hop_ships_one_packed_buffer(mesh8):
+    """A ring hop moves items+dest as ONE packed collective_permute (plus the
+    scalar count) — the cycling analogue of the forwarding budget."""
+    from repro.core.cycling import cycle_step
+
+    cfg = ForwardConfig("data", R, CAP, exchange="padded")
+
+    def kernel(_x):
+        q = make_queue(ray_proto(), CAP)
+        me = jax.lax.axis_index("data")
+        q = enqueue(
+            q, make_rays(6), ((me + 1) % R) * jnp.ones(6, jnp.int32),
+            jnp.ones(6, bool),
+        )
+        absorbed = make_queue(ray_proto(), CAP)
+        nq, na = cycle_step(q, absorbed, cfg)
+        return nq.count[None], na.count[None], nq.items.tmin
+
+    txt = jax.jit(
+        compat.shard_map(
+            kernel, mesh=mesh8, in_specs=P("data"),
+            out_specs=(P("data"), P("data"), P("data")),
+        )
+    ).lower(jnp.arange(8.0)).as_text()
+    ops = collective_ops(txt)
+    perms = [b for k, b in ops if k == "collective-permute"]
+    # items (9 words) + dest (1 word) packed together → (CAP, 10) u32
+    payload = [b for b in perms if b >= CAP * 4]
+    assert payload == [CAP * (WORDS + 1) * 4], ops

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis — deterministic stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import work_item
 from repro.kernels.compact import ops as compact_ops, ref as compact_ref
@@ -109,6 +112,40 @@ def test_marshal_matches_ref(cap, R, S, D):
     got = marshal_k.marshal(flat, off, num_ranks=R, slot=S, interpret=True)
     want = marshal_ref.marshal(flat, off, num_ranks=R, slot=S)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("cap,n,D", [(64, 64, 3), (256, 32, 9), (128, 200, 1)])
+def test_gather_rows_matches_ref(cap, n, D):
+    """The fused single-pass marshal (sort-permutation composed with the
+    send-slot layout) against its jnp oracle, incl. out-of-range clamping."""
+    rng = np.random.default_rng(cap + n)
+    src = jnp.array(rng.integers(0, 2**32, (cap, D), dtype=np.uint32))
+    idx = jnp.array(rng.integers(-3, cap + 3, n), jnp.int32)  # some out of range
+    got = marshal_k.gather_rows(src, idx, interpret=True)
+    want = marshal_ref.gather_rows(src, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_marshal_equals_sort_then_marshal():
+    """fused_marshal(packed, perm[off[r]+s]) == marshal(packed[perm], off) —
+    the single-pass path is bit-identical to the two-pass formulation."""
+    cap, R, S, D = 64, 4, 8, 5
+    rng = np.random.default_rng(11)
+    packed = jnp.array(rng.integers(0, 2**32, (cap, D), dtype=np.uint32))
+    perm = jnp.array(rng.permutation(cap), jnp.int32)
+    counts = np.array([7, 0, 8, 5], np.int32)
+    off = jnp.array(np.concatenate([[0], np.cumsum(counts)[:-1]]), jnp.int32)
+    r_idx = jnp.repeat(jnp.arange(R, dtype=jnp.int32), S)
+    s_idx = jnp.tile(jnp.arange(S, dtype=jnp.int32), R)
+    src_rows = perm[jnp.clip(off[r_idx] + s_idx, 0, cap - 1)]
+    got = marshal_ops.fused_marshal(packed, src_rows, num_ranks=R, slot=S)
+    two_pass = marshal_k.marshal(
+        jnp.take(packed, perm, axis=0), off, num_ranks=R, slot=S, interpret=True
+    )
+    for r in range(R):  # rows past the segment count are garbage in both
+        np.testing.assert_array_equal(
+            np.asarray(got[r][: counts[r]]), np.asarray(two_pass[r][: counts[r]])
+        )
 
 
 @pytest.mark.parametrize("cap,R,S,D", [(64, 4, 16, 3), (256, 8, 8, 5)])
