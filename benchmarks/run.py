@@ -7,6 +7,9 @@
   sort_cost_*            §6.1 claim "all of [sort/marshal] are trivially
                          cheap": sort-stage FLOPs+bytes vs exchange bytes.
   fwd_walltime_*         forward_work wall time on 8 CPU devices (us/call).
+  fwd_walltime_hier_*    flat vs hierarchical two-stage exchange on 2-D
+                         (node, device) meshes (2×4, 4×2), with the modeled
+                         slow-axis byte volume per route.
   sort_throughput_*      §4.2.1 key pack+sort throughput (keys/s), XLA vs
                          Pallas(interpret) paths.
   app_*                  §5 application throughputs (CPU, small scenes).
@@ -21,7 +24,9 @@ perf trajectory::
                               "derived": {"rays_per_s": 1.6e6, ...}}, ...]}
 
 ``--smoke`` runs only the fast forwarding-walltime subset (the regression
-canary); ``--only SUBSTR`` filters sections by name.
+canary); ``--only SUBSTR`` filters sections by name; ``--compare
+flat,hierarchical`` is the CI gate that fails (exit 1) when the hierarchical
+exchange regresses the flat one by >5% walltime on a single-node mesh.
 """
 import os
 
@@ -106,7 +111,7 @@ def _emit_kernel(cfg, n_emit, cap):
     from repro.core import enqueue, forward_work, make_queue
 
     def kernel(x):
-        me = jax.lax.axis_index("data")
+        me = jax.lax.axis_index(cfg.axis_name)
         q = make_queue(_ray_proto(), cap)
         lane = jnp.arange(n_emit)
         rays = Ray44(
@@ -214,6 +219,97 @@ def fwd_walltime():
             emit(f"fwd_walltime_{exchange}_n{n_emit}", us, f"rays_per_s={rays_s:.2e}")
 
 
+# ------------------------------------- ISSUE 2: hierarchical vs flat route
+def _hier_pair(nodes, devs, n_emit, cap):
+    """(flat_cfg, hier_cfg, mesh) for one 2-D (node, device) mesh point."""
+    from repro.core import ForwardConfig
+    from repro.launch.mesh import make_node_mesh
+
+    mesh = make_node_mesh(nodes, devs)
+    axes = ("node", "device")
+    flat = ForwardConfig(axes, nodes * devs, cap, exchange="padded")
+    hier = ForwardConfig(axes, nodes * devs, cap, exchange="hierarchical", fast_size=devs)
+    return flat, hier, mesh
+
+
+def _time_fwd(cfg, mesh, n_emit, cap, iters=5):
+    f = jax.jit(
+        compat.shard_map(
+            _emit_kernel(cfg, n_emit, cap), mesh=mesh,
+            in_specs=P(cfg.axis_name), out_specs=P(cfg.axis_name),
+        )
+    )
+    us, _ = _timeit(f, jnp.arange(8.0), iters=iters)
+    return us
+
+
+def fwd_walltime_hier():
+    """Flat-vs-hierarchical forwarding walltime sweep over 2-D (node, device)
+    meshes (2×4 and 4×2 on the 8-device CPU platform), plus the modeled bulk
+    bytes each route pushes across the slow inter-node fabric — the term the
+    two-stage exchange exists to shrink (CPU walltime treats all links as
+    equal; the slow-byte model is where multi-node wins show)."""
+    from repro.core import item_nbytes
+    from repro.roofline.analysis import slow_axis_bytes_model
+
+    item_b = item_nbytes(_ray_proto())
+    for nodes, devs in ((2, 4), (4, 2)):
+        for n_emit in (256, 2048):
+            cap = max(256, n_emit * 2)
+            flat, hier, mesh = _hier_pair(nodes, devs, n_emit, cap)
+            R = nodes * devs
+            for tag, cfg in (("flat", flat), ("hier", hier)):
+                us = _time_fwd(cfg, mesh, n_emit, cap)
+                slow_b = slow_axis_bytes_model(
+                    cfg.exchange if tag == "hier" else "padded",
+                    num_ranks=R, fast_size=devs, item_bytes=item_b,
+                    peer_capacity=cfg.peer_capacity,
+                    node_capacity=getattr(cfg, "node_capacity", 0),
+                )
+                rays_s = 8 * n_emit / (us / 1e6)
+                # burst_rows: the hot-spot burst one destination absorbs
+                # without drops at this slow-byte budget.  At the default
+                # load-proportional capacities the two routes' total slow
+                # bytes coincide, so the discriminating metric is the slow
+                # bytes PAID PER ROW of burst tolerance: (R-F)·item_B flat vs
+                # (N-1)·item_B hierarchical — per-node padding makes it
+                # devs× cheaper (= R/N×, since R-F = F·(N-1)).
+                burst = cfg.node_capacity if tag == "hier" else cfg.peer_capacity
+                emit(
+                    f"fwd_walltime_hier_{tag}_{nodes}x{devs}_n{n_emit}", us,
+                    f"rays_per_s={rays_s:.2e};slow_axis_B={slow_b:.0f}"
+                    f";burst_rows={burst};slow_B_per_burst_row={slow_b / burst:.1f}",
+                )
+
+
+def compare_backends(spec: str) -> int:
+    """``--compare flat,hierarchical``: the CI gate for the two-stage route.
+
+    On a SINGLE-NODE mesh (slow axis of extent 1 — stage B degenerates to a
+    local copy) the hierarchical exchange must not regress the flat padded
+    exchange by more than 5% walltime; a regression there means pure
+    two-stage overhead, not topology routing.  Returns a nonzero exit code on
+    regression."""
+    names = tuple(s.strip() for s in spec.split(","))
+    if names != ("flat", "hierarchical"):
+        raise SystemExit(f"error: --compare supports 'flat,hierarchical', got {spec!r}")
+    n_emit, cap = 2048, 4096
+    flat, hier, mesh = _hier_pair(1, 8, n_emit, cap)
+    flat_us = _time_fwd(flat, mesh, n_emit, cap, iters=10)
+    hier_us = _time_fwd(hier, mesh, n_emit, cap, iters=10)
+    ratio = hier_us / flat_us
+    emit(f"compare_flat_1x8_n{n_emit}", flat_us, f"ratio=1.0")
+    emit(f"compare_hierarchical_1x8_n{n_emit}", hier_us, f"ratio={ratio:.3f}")
+    if ratio > 1.05:
+        print(
+            f"# COMPARE FAILED: hierarchical {hier_us:.0f}us vs flat "
+            f"{flat_us:.0f}us on single-node 1x8 mesh ({ratio:.2f}x > 1.05x)"
+        )
+        return 1
+    print(f"# compare ok: hierarchical/flat = {ratio:.3f} on single-node 1x8 mesh")
+    return 0
+
+
 # ------------------------------------------------- §4.2.1 sort throughput
 def sort_throughput():
     from repro.core import sorting as S
@@ -285,12 +381,30 @@ SECTIONS = [
     ("fig8_efficiency", fig8_efficiency),
     ("sort_cost", sort_cost),
     ("fwd_walltime", fwd_walltime),
+    ("fwd_walltime_hier", fwd_walltime_hier),
     ("sort_throughput", sort_throughput),
     ("app_rates", app_rates),
     ("moe_dispatch", moe_dispatch),
 ]
 
-SMOKE_SECTIONS = ("fwd_walltime", "sort_throughput")
+SMOKE_SECTIONS = ("fwd_walltime", "fwd_walltime_hier", "sort_throughput")
+
+
+def _write_json(path: str, **extra_meta) -> None:
+    """Machine-readable dump of ROWS with run metadata (perf trajectory)."""
+    payload = {
+        "meta": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "platform": platform.platform(),
+            **extra_meta,
+        },
+        "rows": ROWS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path}")
 
 
 def main(argv=None) -> None:
@@ -301,9 +415,18 @@ def main(argv=None) -> None:
                     help=f"fast subset only: {', '.join(SMOKE_SECTIONS)}")
     ap.add_argument("--only", metavar="SUBSTR", default=None,
                     help="run only sections whose name contains SUBSTR")
+    ap.add_argument("--compare", metavar="A,B", default=None,
+                    help="regression gate: 'flat,hierarchical' times both "
+                         "exchanges on a single-node mesh and exits nonzero "
+                         "if hierarchical regresses flat by >5%%")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
+    if args.compare:
+        rc = compare_backends(args.compare)
+        if args.json:
+            _write_json(args.json, compare=args.compare, compare_failed=bool(rc))
+        raise SystemExit(rc)
     failures = []
     selected = [
         (name, fn)
@@ -328,20 +451,7 @@ def main(argv=None) -> None:
     print(f"# {len(ROWS)} benchmarks complete" + (f"; failed sections: {failures}" if failures else ""))
 
     if args.json:
-        payload = {
-            "meta": {
-                "jax": jax.__version__,
-                "backend": jax.default_backend(),
-                "device_count": jax.device_count(),
-                "platform": platform.platform(),
-                "smoke": bool(args.smoke),
-                "failed_sections": failures,
-            },
-            "rows": ROWS,
-        }
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2)
-        print(f"# wrote {args.json}")
+        _write_json(args.json, smoke=bool(args.smoke), failed_sections=failures)
 
     if failures:  # the canary must trip CI, not just leave a comment
         raise SystemExit(1)

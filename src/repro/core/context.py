@@ -58,10 +58,16 @@ class RafiContext:
         exchange: str = "padded",
         sort_method: str = "pack",
         use_pallas: bool = False,
+        fast_size: int = 0,
+        node_capacity: int = 0,
     ):
         self.mesh = mesh
         self.proto = proto
         self.item_nbytes = item_nbytes(proto)
+        if exchange == "hierarchical" and fast_size <= 0 and isinstance(
+            axis_name, (tuple, list)
+        ) and len(axis_name) == 2:
+            fast_size = mesh.shape[axis_name[1]]  # derive from the bound mesh
         self.cfg = ForwardConfig(
             axis_name=axis_name,
             num_ranks=_axis_size(mesh, axis_name),
@@ -70,6 +76,8 @@ class RafiContext:
             exchange=exchange,
             sort_method=sort_method,
             use_pallas=use_pallas,
+            fast_size=fast_size,
+            node_capacity=node_capacity,
         )
         self._spec = P(axis_name)
 

@@ -27,6 +27,15 @@ __all__ = ["cycle_step", "deliver_by_cycling"]
 
 
 def _ring_permute(x: jax.Array, axis_name, num_ranks: int) -> jax.Array:
+    """One hop of the node-major ring: ONE ``collective_permute``.
+
+    ``axis_name`` may be a single flat axis or a ``(slow, fast)`` tuple.  On
+    a 2-D mesh the linearised rank order is node-major, so the ring's
+    source-target pairs are fast-axis (intra-node) hops everywhere except the
+    ``num_nodes`` pairs that wrap a node boundary — those are the only hops
+    routed over the slow inter-node fabric.  One collective, no payload bytes
+    crossing the slow axis from non-boundary ranks.
+    """
     perm = [(i, (i + 1) % num_ranks) for i in range(num_ranks)]
     return jax.lax.ppermute(x, axis_name, perm)
 

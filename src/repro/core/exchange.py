@@ -12,14 +12,37 @@ per-pytree-leaf collective fan-out.
 Collective budget per ``forward_work`` round (guarded by
 ``tests/test_collective_budget.py``):
 
-  payload   1 × all_to_all (padded) / 1 × ragged_all_to_all (ragged)
+  payload   1 × all_to_all (padded) / 1 × ragged_all_to_all (ragged) /
+            2 × all_to_all (hierarchical: one per mesh axis — see below)
   counts    1 × all_to_all of per-peer counts (padded) /
             1 × all_gather of the (R,) send-count vector (ragged — every rank
             reconstructs the full R×R count matrix locally and derives ALL
             offsets/clamps without further communication, replacing the three
-            chained count all-to-alls of the naive Alltoallv control plane)
+            chained count all-to-alls of the naive Alltoallv control plane) /
+            2 × tiny all_to_all (hierarchical: one per mesh axis)
 
-Three interchangeable backends, all called *inside* ``shard_map`` with a
+The ``(slow, fast)`` contract (hierarchical backend): ``axis_name`` is a
+2-tuple of mesh axis names, slow first — e.g. ``("node", "device")`` where
+"node" spans the inter-node (DCN-class) fabric and "device" the fast
+intra-node fabric (ICI/NVLink).  Global ranks are node-major
+(``rank = node * fast_size + lane``, i.e. ``jax.lax.axis_index((slow,
+fast))``), and the round runs in two stages:
+
+  stage A  one padded all_to_all over the FAST axis: each rank ships, per
+           fast peer ``f``, the node-major concatenation of its (dest_node,
+           dest_lane == f) sub-segments.  Afterwards rank ``(n, f)`` holds
+           exactly the rows of node ``n`` bound for its "column" — lane ``f``
+           of every destination node — already grouped per node.
+  stage B  ONE padded all_to_all over the SLOW axis: the per-node aggregated
+           segments (``node_capacity`` rows each) move inter-node in a single
+           collective; a local unpermute delivers final placement.
+
+All bulk bytes cross the slow fabric exactly once, and the slow-axis padding
+is per-NODE segment, not per-rank slot — with R ranks over N nodes that is an
+R/N× reduction in worst-case slow-link padding waste versus routing the flat
+padded exchange across nodes.
+
+Four interchangeable backends, all called *inside* ``shard_map`` with a
 bound mesh axis:
 
 * ``ragged`` — ``ragged_all_to_all``: the exact XLA analogue of
@@ -31,6 +54,10 @@ bound mesh axis:
   a single tiled ``all_to_all`` of the packed buffer.  Portable (runs on
   CPU; used by the dry-run compile) at the cost of padding bandwidth.  This
   is also the natural MoE-dispatch form (capacity-factor semantics).
+* ``hierarchical`` — the two-stage padded exchange over a 2-D ``(slow,
+  fast)`` mesh described above: fast-axis combine, then one slow-axis
+  collective.  Placement is bit-identical to the flat backends (node-major
+  rank order is preserved end to end).
 * ``onehot`` — an all-gather reference oracle with a deliberately different
   code path, used only by tests.
 
@@ -55,6 +82,7 @@ __all__ = [
     "exchange_count_matrix",
     "exchange_padded",
     "exchange_ragged",
+    "exchange_hierarchical",
     "exchange_onehot",
 ]
 
@@ -85,6 +113,22 @@ def exchange_count_matrix(send_counts: jax.Array, axis_name) -> jax.Array:
     return jax.lax.all_gather(send_counts, axis_name)
 
 
+def _clamp_subsegments(cnt: jax.Array, slot: int) -> Tuple[jax.Array, jax.Array]:
+    """Truncate stacked sub-segments (rows of ``cnt``, concatenated in row
+    order) to a ``slot``-row budget per column.
+
+    ``cnt[i, j]``: rows of sub-segment ``i`` bound for slot column ``j``.
+    Returns ``(allowed, starts)`` with the same shape: ``allowed`` keeps a
+    contiguous prefix of each column's concatenation (any segment or segment
+    tail past ``slot`` is cut — the §3.3 drop rule), ``starts`` is where each
+    surviving sub-segment begins inside its slot.
+    """
+    raw_pref = jnp.cumsum(cnt, axis=0) - cnt
+    allowed = jnp.clip(jnp.minimum(cnt, slot - raw_pref), 0)
+    starts = jnp.cumsum(allowed, axis=0) - allowed
+    return allowed, starts
+
+
 def _ragged_control_plane(
     cnt: jax.Array, me: jax.Array, capacity: int
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -93,17 +137,46 @@ def _ragged_control_plane(
     Receiver-capacity clamp, replicated identically on all ranks: at each
     destination column ``d`` the senders' segments land at the exclusive
     prefix of the column; any segment (or segment tail) past ``capacity`` is
-    cut — the §3.3 drop rule, decided without a round trip.
+    cut — the §3.3 drop rule (:func:`_clamp_subsegments`), decided without a
+    round trip.
 
     Returns ``(send_sizes (R,), output_offsets (R,), recv_sizes (R,))``.
     """
-    roff_raw = jnp.cumsum(cnt, axis=0) - cnt  # excl. prefix per dst column
-    allowed = jnp.clip(jnp.minimum(cnt, capacity - roff_raw), 0)
-    roff = jnp.cumsum(allowed, axis=0) - allowed
+    allowed, roff = _clamp_subsegments(cnt, capacity)
     send_sizes = allowed[me]  # my row: what each peer lets me deliver
     output_offsets = roff[me]  # where my block lands on each peer
     recv_sizes = allowed[:, me]  # my column: what each peer delivers to me
     return send_sizes, output_offsets, recv_sizes
+
+
+def _compact_blocks(
+    recv_buf: jax.Array,  # (G, S, W) received padded blocks
+    recv_counts: jax.Array,  # (G,) valid rows per block
+    capacity: int,
+    *,
+    use_pallas: bool,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Receive-side compaction shared by the padded-slot exchanges:
+    ``out[roff[g] + s] = recv_buf[g, s]`` for ``s < recv_counts[g]``, rows
+    past ``capacity`` dropped (§3.3).  Returns ``(out, new_count, drops)``.
+    """
+    G, S, W = recv_buf.shape
+    roff = jnp.cumsum(recv_counts) - recv_counts
+    if use_pallas:
+        from repro.kernels.marshal import ops as marshal_ops
+
+        out = marshal_ops.fused_unmarshal(recv_buf, roff, recv_counts, capacity=capacity)
+    else:
+        g_idx = jnp.repeat(jnp.arange(G, dtype=jnp.int32), S)
+        s_idx = jnp.tile(jnp.arange(S, dtype=jnp.int32), G)
+        dstpos = roff[g_idx] + s_idx
+        ok = s_idx < recv_counts[g_idx]
+        slot = jnp.where(ok & (dstpos < capacity), dstpos, capacity)
+        out = jnp.zeros((capacity, W), recv_buf.dtype)
+        out = out.at[slot].set(recv_buf.reshape(G * S, W), mode="drop")
+    total_recv = jnp.sum(recv_counts)
+    new_count = jnp.minimum(total_recv, capacity)
+    return out, new_count, total_recv - new_count
 
 
 def exchange_padded(
@@ -144,23 +217,135 @@ def exchange_padded(
     recv_counts = exchange_counts(clamped, axis_name)  # the ONE count collective
     recv_buf = _a2a(send_buf, axis_name)  # the ONE payload collective
 
-    # Compact: out[roff[p] + s] = recv_buf[p, s] for s < recv_counts[p].
-    roff = jnp.cumsum(recv_counts) - recv_counts
-    if use_pallas:
-        from repro.kernels.marshal import ops as marshal_ops
-
-        out = marshal_ops.fused_unmarshal(recv_buf, roff, recv_counts, capacity=capacity)
-    else:
-        dstpos = roff[r_idx] + s_idx
-        ok = s_idx < recv_counts[r_idx]
-        slot = jnp.where(ok & (dstpos < capacity), dstpos, capacity)
-        out = jnp.zeros((capacity, packed.shape[1]), packed.dtype)
-        out = out.at[slot].set(recv_buf.reshape(R * S, -1), mode="drop")
-
-    total_recv = jnp.sum(recv_counts)
-    new_count = jnp.minimum(total_recv, capacity)
-    recv_drops = total_recv - new_count
+    out, new_count, recv_drops = _compact_blocks(
+        recv_buf, recv_counts, capacity, use_pallas=use_pallas
+    )
     return out, recv_counts, new_count, send_drops + recv_drops
+
+
+def _subsegment_gather(
+    allowed: jax.Array,  # (G, K) surviving sub-segment sizes per slot column k
+    starts: jax.Array,  # (G, K) slot-local sub-segment starts
+    src_base: jax.Array,  # (G, K) source offset of sub-segment (g, k)
+    slot: int,
+) -> jax.Array:
+    """Source row index for every (slot column k, slot position s).
+
+    Returns ``(K, slot)`` int32: the flat source row feeding slot ``k``'s
+    position ``s`` — rows past a column's total are clamped garbage, masked
+    downstream by the exchanged counts.  This is the composed two-stage
+    layout: one gather materialises a whole stage's send buffer.
+    """
+    G, K = allowed.shape
+    s_idx = jnp.arange(slot, dtype=jnp.int32)
+    incl = jnp.cumsum(allowed, axis=0)  # (G, K) inclusive prefix per column
+    # sub-segment owning position s = number of fully-completed predecessors
+    g_of = jnp.sum(s_idx[None, :, None] >= incl.T[:, None, :], axis=-1)  # (K, slot)
+    g_c = jnp.clip(g_of, 0, G - 1)
+    k_grid = jnp.arange(K, dtype=jnp.int32)[:, None]
+    s_local = s_idx[None, :] - starts[g_c, k_grid]
+    return src_base[g_c, k_grid] + s_local
+
+
+def exchange_hierarchical(
+    packed: jax.Array,  # (C, W) uint32 — UNSORTED packed payload
+    perm: jax.Array,  # (C,) node-major destination-sort permutation
+    send_counts: jax.Array,  # (R,) valid-destination counts, node-major
+    *,
+    axis_name,  # (slow, fast) mesh axis names
+    num_ranks: int,
+    capacity: int,
+    peer_capacity: int,  # stage-A rows per fast-axis peer slot
+    node_capacity: int,  # stage-B rows per destination-node segment
+    fast_size: int,
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Two-stage packed exchange over a 2-D ``(slow, fast)`` mesh.
+
+    Stage A combines traffic within the fast axis (rank ``(n, f)`` ends up
+    holding node ``n``'s rows bound for lane ``f`` of every node, grouped per
+    node); stage B moves the aggregated per-node segments with ONE padded
+    collective over the slow axis; a local unpermute delivers final placement
+    in node-major source order — bit-identical to the flat backends.
+
+    Budget: 2 payload collectives + 2 count collectives per round; bulk bytes
+    cross the slow axis exactly once, padded per NODE (``node_capacity``
+    rows), never per rank.  Returns ``(recv_packed, recv_node_counts, total,
+    drops)`` — counts are per *source node* (the slow-axis peers), unlike the
+    flat backends' per-rank counts.
+    """
+    slow_ax, fast_ax = axis_name
+    F, S_a, S_b = fast_size, peer_capacity, node_capacity
+    N = num_ranks // F
+    C, W = packed.shape
+
+    def gather(buf, rows, n_slots, slot):
+        if use_pallas:
+            from repro.kernels.marshal import ops as marshal_ops
+
+            return marshal_ops.fused_marshal(buf, rows, num_ranks=n_slots, slot=slot)
+        return jnp.take(buf, rows, axis=0).reshape(n_slots, slot, W)
+
+    cnt = send_counts.reshape(N, F)  # [dest_node, dest_lane]
+    off = (jnp.cumsum(send_counts) - send_counts).reshape(N, F)  # sorted-order starts
+
+    # ---- stage A: fast-peer slot f = node-major sub-segments (n, f)
+    if F == 1:
+        # degenerate fast axis: stage A is the identity — no clamp, no
+        # collective, no payload pass.  The sort permutation is composed
+        # straight into the stage-B gather below instead.
+        rcv_a = cnt.T  # (1, N)
+        in_starts = off.T
+        stage_b_rows = lambda pos: jnp.take(perm, jnp.clip(pos, 0, C - 1))
+        flat_a = packed
+        drops_a = jnp.zeros((), send_counts.dtype)
+    else:
+        allowed_a, starts_a = _clamp_subsegments(cnt, S_a)  # both (N, F)
+        drops_a = jnp.sum(cnt - allowed_a)
+        sortedpos = _subsegment_gather(allowed_a, starts_a, off, S_a)  # (F, S_a)
+        src_a = jnp.take(perm, jnp.clip(sortedpos, 0, C - 1).reshape(-1))
+        send_a = gather(packed, src_a, F, S_a)
+        # count collective 1 (fast axis): per-dest-node survivor counts, so
+        # the receiver can address every sub-segment of each incoming block
+        rcv_a = _a2a(allowed_a.T, fast_ax)  # (F, N): from src lane f, for node n
+        recv_a = _a2a(send_a, fast_ax)  # payload collective 1 (fast axis)
+        in_starts = jnp.cumsum(rcv_a, axis=1) - rcv_a  # (F, N) offsets in block f
+        in_starts = in_starts + jnp.arange(F, dtype=jnp.int32)[:, None] * S_a
+        stage_b_rows = lambda pos: jnp.clip(pos, 0, F * S_a - 1)
+        flat_a = recv_a.reshape(F * S_a, W)
+
+    # ---- stage B: node slot n = lane-major sub-segments out of stage A
+    if N == 1:
+        # degenerate slow axis: stage B is the identity — clamp at receiver
+        # capacity and compact straight out of the stage-A buffer (this keeps
+        # the single-node cost at flat-exchange parity, the --compare gate)
+        allowed_b, starts_b = _clamp_subsegments(rcv_a, capacity)
+        drops_b = jnp.sum(rcv_a - allowed_b)
+        src_b = stage_b_rows(
+            _subsegment_gather(allowed_b, starts_b, in_starts, capacity).reshape(-1)
+        )
+        out = gather(flat_a, src_b, 1, capacity)[0]
+        recv_counts = jnp.sum(allowed_b)[None]
+        return out, recv_counts, recv_counts[0], drops_a + drops_b
+
+    allowed_b, starts_b = _clamp_subsegments(rcv_a, S_b)  # both (F, N)
+    drops_b = jnp.sum(rcv_a - allowed_b)
+    src_b = stage_b_rows(
+        _subsegment_gather(allowed_b, starts_b, in_starts, S_b).reshape(-1)
+    )
+    send_b = gather(flat_a, src_b, N, S_b)
+
+    # count collective 2 (slow axis) + payload collective 2 (slow axis): the
+    # ONLY bulk bytes crossing the inter-node fabric, padded per node
+    recv_counts = _a2a(jnp.sum(allowed_b, axis=0)[:, None], slow_ax).reshape(-1)
+    recv_b = _a2a(send_b, slow_ax)
+
+    # Compact: blocks arrive node-major, sub-segments lane-major inside each —
+    # global source-rank order, so placement matches the flat backends.
+    out, new_count, recv_drops = _compact_blocks(
+        recv_b, recv_counts, capacity, use_pallas=use_pallas
+    )
+    return out, recv_counts, new_count, drops_a + drops_b + recv_drops
 
 
 def exchange_ragged(

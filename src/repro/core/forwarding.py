@@ -42,6 +42,7 @@ __all__ = ["ForwardConfig", "forward_work"]
 _EXCHANGES = {
     "padded": X.exchange_padded,
     "ragged": X.exchange_ragged,
+    "hierarchical": X.exchange_hierarchical,
     "onehot": X.exchange_onehot,
 }
 
@@ -52,10 +53,23 @@ class ForwardConfig:
 
     Attributes:
       axis_name: mesh axis (or tuple of axes) the queue is distributed over.
+        The hierarchical exchange requires a 2-tuple ``(slow, fast)`` — slow
+        (inter-node) axis first; every other backend accepts a single axis or
+        a tuple treated as one joint flat axis.
       num_ranks: number of shards on that axis (R).
       capacity: per-rank queue capacity (paper: ``resizeRayQueues(N)``).
-      peer_capacity: per-(src,dst) slot size for the padded backend.
-      exchange: "ragged" (TPU production) | "padded" (portable) | "onehot".
+      peer_capacity: per-peer slot rows for the padded send buffer.  The
+        default accounts for the backend's true fan-out: the flat padded
+        exchange fans out to R per-rank slots (2·ceil(C/R) rows each), the
+        hierarchical stage-A exchange to ``fast_size`` fast-axis peers
+        (2·ceil(C/fast_size) rows each).
+      node_capacity: hierarchical only — stage-B rows per destination-node
+        segment (the slow axis fans out to R/fast_size per-NODE segments;
+        default 2·ceil(C/num_nodes)).
+      fast_size: hierarchical only — number of ranks on the fast axis (must
+        divide num_ranks; num_ranks // fast_size is the node count).
+      exchange: "ragged" (TPU production) | "padded" (portable) |
+        "hierarchical" (two-stage, 2-D meshes) | "onehot" (test oracle).
       sort_method: "pack" (paper-faithful packed keys) | "argsort".
       use_pallas: route the key-sort and the fused pack+permute marshal
         through the Pallas kernels (``kernels/sort_keys``, ``kernels/marshal``).
@@ -68,14 +82,54 @@ class ForwardConfig:
     exchange: str = "padded"
     sort_method: str = "pack"
     use_pallas: bool = False
+    fast_size: int = 0
+    node_capacity: int = 0
 
     def __post_init__(self):
         if self.exchange not in _EXCHANGES:
             raise ValueError(f"unknown exchange {self.exchange!r}")
-        if self.peer_capacity <= 0 and self.exchange == "padded":
-            object.__setattr__(
-                self, "peer_capacity", max(1, -(-self.capacity // self.num_ranks) * 2)
-            )
+        n_axes = (
+            len(self.axis_name)
+            if isinstance(self.axis_name, (tuple, list))
+            else 1
+        )
+        if self.exchange == "hierarchical":
+            if n_axes != 2:
+                raise ValueError(
+                    "hierarchical exchange routes over a 2-D mesh and needs "
+                    f"axis_name=(slow, fast), e.g. ('node', 'device'); got "
+                    f"{self.axis_name!r} ({n_axes} axis/axes)"
+                )
+            if self.fast_size <= 0:
+                raise ValueError(
+                    "hierarchical exchange needs fast_size > 0 (the number of "
+                    "ranks on the fast mesh axis)"
+                )
+            if self.num_ranks % self.fast_size:
+                raise ValueError(
+                    f"fast_size {self.fast_size} must divide num_ranks "
+                    f"{self.num_ranks} (ranks are node-major over (slow, fast))"
+                )
+            num_nodes = self.num_ranks // self.fast_size
+            if self.peer_capacity <= 0:
+                # stage-A fan-out: fast_size per-lane slots, not R per-rank ones
+                object.__setattr__(
+                    self, "peer_capacity",
+                    max(1, -(-self.capacity // self.fast_size) * 2),
+                )
+            if self.node_capacity <= 0:
+                # stage-B fan-out: per-NODE segments over the slow axis
+                object.__setattr__(
+                    self, "node_capacity",
+                    max(1, -(-self.capacity // num_nodes) * 2),
+                )
+        elif self.exchange == "padded":
+            if self.peer_capacity <= 0:
+                # flat fan-out: R per-rank slots
+                object.__setattr__(
+                    self, "peer_capacity",
+                    max(1, -(-self.capacity // self.num_ranks) * 2),
+                )
 
 
 def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array]:
@@ -90,25 +144,35 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array
         from repro.kernels.sort_keys import ops as sk_ops
 
         perm, sorted_dest, send_counts = sk_ops.sort_permutation(q.dest, q.count, R)
+        send_counts = send_counts[:R]
+        del sorted_dest  # segments are fully described by the histogram
+    elif cfg.exchange == "hierarchical":
+        # node-major two-level keys: ONE sort yields both stage permutations
+        perm, count_matrix = S.sort_permutation_hierarchical(
+            q.dest, q.count, R // cfg.fast_size, cfg.fast_size,
+            method=cfg.sort_method,
+        )
+        send_counts = count_matrix.reshape(-1)
     else:
         perm, sorted_dest, send_counts = S.sort_permutation(
             q.dest, q.count, R, method=cfg.sort_method
         )
-    del sorted_dest  # segments are fully described by the histogram
+        send_counts = send_counts[:R]
+        del sorted_dest
 
     packed, spec = T.pack_payload(q.items)  # (C, W) uint32 — the wire format
 
-    fn = _EXCHANGES[cfg.exchange]
-    recv_packed, recv_counts, new_count, drops = fn(
-        packed,
-        perm,
-        send_counts[:R],
+    kwargs = dict(
         axis_name=cfg.axis_name,
         num_ranks=R,
         capacity=cfg.capacity,
         peer_capacity=cfg.peer_capacity,
         use_pallas=cfg.use_pallas,
     )
+    if cfg.exchange == "hierarchical":
+        kwargs.update(fast_size=cfg.fast_size, node_capacity=cfg.node_capacity)
+    fn = _EXCHANGES[cfg.exchange]
+    recv_packed, recv_counts, new_count, drops = fn(packed, perm, send_counts, **kwargs)
     del recv_counts
 
     new_q = WorkQueue(

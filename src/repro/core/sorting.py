@@ -32,11 +32,14 @@ from repro.core import types as T
 __all__ = [
     "sort_by_destination",
     "sort_permutation",
+    "sort_permutation_hierarchical",
     "destination_histogram",
     "segment_offsets",
     "segment_bounds_from_sorted",
     "pack_keys",
+    "pack_keys_hierarchical",
     "unpack_keys",
+    "unpack_keys_hierarchical",
 ]
 
 
@@ -65,6 +68,96 @@ def unpack_keys(keys: jax.Array, capacity: int, num_ranks: int) -> Tuple[jax.Arr
     dest = (keys >> ib).astype(jnp.int32)
     lane = (keys & jnp.uint32((1 << ib) - 1)).astype(jnp.int32)
     return dest, lane
+
+
+def _field_bits(n_values: int) -> int:
+    return max(1, (n_values - 1).bit_length())
+
+
+def pack_keys_hierarchical(
+    dest: jax.Array, count: jax.Array, num_nodes: int, fast_size: int
+) -> jax.Array:
+    """Node-major two-level keys ``(dest_node, dest_lane_within_node, slot)``.
+
+    One sort of these keys yields BOTH stage permutations of the hierarchical
+    exchange: the bit-field layout is lexicographic in (node, lane, slot), so
+    the sorted order simultaneously (a) groups items per destination *lane*
+    sub-grouped per destination *node* — stage A's send layout is a pure
+    segment permutation of it — and (b) keeps every (node, lane) run in stable
+    slot order, which is exactly the per-node contiguity stage B re-exchanges.
+
+    Global ranks are node-major (``rank = dest_node * fast_size + lane``), so
+    the key order coincides with the flat ``pack_keys`` order — cross-validated
+    in tests — but the field split makes the (num_nodes, fast_size) count
+    matrix and both stage layouts directly addressable.
+
+    Invalid lanes (lane >= count, dest out of range) get ``node = num_nodes``
+    and sort past every valid key.
+    """
+    cap = dest.shape[0]
+    ib = _idx_bits(cap)
+    nb = _field_bits(num_nodes + 1)
+    lb = _field_bits(fast_size)
+    if nb + lb + ib > 32:
+        raise ValueError(
+            f"hierarchical key needs {nb}+{lb}+{ib} bits > 32; "
+            "use method='argsort'"
+        )
+    num_ranks = num_nodes * fast_size
+    lane = jnp.arange(cap, dtype=jnp.uint32)
+    valid = (lane < count.astype(jnp.uint32)) & (dest >= 0) & (dest < num_ranks)
+    node = jnp.where(valid, dest // fast_size, num_nodes).astype(jnp.uint32)
+    dlane = jnp.where(valid, dest % fast_size, 0).astype(jnp.uint32)
+    return (node << (lb + ib)) | (dlane << ib) | lane
+
+
+def unpack_keys_hierarchical(
+    keys: jax.Array, capacity: int, num_nodes: int, fast_size: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Inverse of :func:`pack_keys_hierarchical` → (node, lane_within_node, slot)."""
+    ib = _idx_bits(capacity)
+    lb = _field_bits(fast_size)
+    node = (keys >> (lb + ib)).astype(jnp.int32)
+    dlane = ((keys >> ib) & jnp.uint32((1 << lb) - 1)).astype(jnp.int32)
+    slot = (keys & jnp.uint32((1 << ib) - 1)).astype(jnp.int32)
+    return node, dlane, slot
+
+
+def sort_permutation_hierarchical(
+    dest: jax.Array,
+    count: jax.Array,
+    num_nodes: int,
+    fast_size: int,
+    *,
+    method: str = "pack",
+) -> Tuple[jax.Array, jax.Array]:
+    """The hierarchical exchange's §4.2.1 analogue: ONE key sort that yields
+    both stage permutations.
+
+    Returns ``(perm, count_matrix)`` where ``perm`` is the node-major
+    destination-sort permutation (identical to the flat
+    :func:`sort_permutation` order, since global ranks are node-major) and
+    ``count_matrix`` is the ``(num_nodes, fast_size)`` per-(dest_node,
+    dest_lane) histogram — the only control-plane input either stage of
+    ``exchange_hierarchical`` needs.
+    """
+    num_ranks = num_nodes * fast_size
+    cap = dest.shape[0]
+    if method == "pack":
+        keys = pack_keys_hierarchical(dest, count, num_nodes, fast_size)
+        sorted_keys = jax.lax.sort(keys)
+        _node, _dlane, perm = unpack_keys_hierarchical(
+            sorted_keys, cap, num_nodes, fast_size
+        )
+    elif method == "argsort":
+        lane = jnp.arange(cap, dtype=jnp.int32)
+        valid = (lane < count) & (dest >= 0) & (dest < num_ranks)
+        d = jnp.where(valid, dest, num_ranks)
+        perm = jnp.argsort(d, stable=True).astype(jnp.int32)
+    else:
+        raise ValueError(f"unknown sort method {method!r}")
+    hist = destination_histogram(dest, count, num_ranks)
+    return perm, hist[:num_ranks].reshape(num_nodes, fast_size)
 
 
 def destination_histogram(dest: jax.Array, count: jax.Array, num_ranks: int) -> jax.Array:

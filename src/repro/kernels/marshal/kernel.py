@@ -73,42 +73,52 @@ def marshal(
     )(off, sorted_flat)
 
 
-def _gather_rows_kernel(idx_ref, in_ref, out_ref):
-    r = pl.program_id(0)
-    out_ref[...] = in_ref[pl.ds(idx_ref[r], 1), :]
+def _gather_rows_kernel(idx_ref, in_ref, out_ref, *, tile):
+    i = pl.program_id(0)
+    for t in range(tile):  # static unroll: `tile` dynamic row copies per step
+        out_ref[pl.ds(t, 1), :] = in_ref[pl.ds(idx_ref[i * tile + t], 1), :]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
 def gather_rows(
     src: jax.Array,  # (C, D) packed payload
     row_idx: jax.Array,  # (N,) int32 source row per output row (clamped)
     *,
     interpret: bool = False,
+    tile: int = 8,
 ) -> jax.Array:
     """The fused single-pass marshal: ``out[i] = src[row_idx[i]]``.
 
     ``row_idx`` is the destination-sort permutation already composed with the
-    send-slot layout (``perm[off[r] + s]``), so this one gather subsumes what
-    used to be payload-sort-then-segment-copy — each payload row is read
+    send-slot layout (``perm[off[r] + s]`` for the flat exchange; either
+    stage's layout for the hierarchical one), so this one gather subsumes
+    what used to be payload-sort-then-segment-copy — each payload row is read
     exactly once and written exactly once.  The index vector lands in SMEM by
-    scalar prefetch; grid step ``i`` copies one dynamically-addressed row of
-    the VMEM-resident packed buffer (rows are not contiguous, unlike
-    :func:`marshal`, because the sort permutation is folded in).
+    scalar prefetch; each grid step copies a TILE of ``tile`` (default 8)
+    dynamically-addressed rows of the VMEM-resident packed buffer, amortising
+    the Mosaic per-step grid overhead the one-row-per-step formulation paid
+    (rows are not contiguous, unlike :func:`marshal`, because the sort
+    permutation is folded in).  ``row_idx`` is padded up to a whole tile; the
+    padded tail is cut from the result.
     """
     cap, d = src.shape
     n = row_idx.shape[0]
     idx = jnp.clip(row_idx.astype(jnp.int32), 0, cap - 1)
-    return pl.pallas_call(
-        _gather_rows_kernel,
+    n_pad = -(-n // tile) * tile
+    if n_pad != n:
+        idx = jnp.concatenate([idx, jnp.zeros((n_pad - n,), jnp.int32)])
+    out = pl.pallas_call(
+        functools.partial(_gather_rows_kernel, tile=tile),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(n,),
+            grid=(n_pad // tile,),
             in_specs=[pl.BlockSpec((cap, d), lambda i, idx: (0, 0))],
-            out_specs=pl.BlockSpec((1, d), lambda i, idx: (i, 0)),
+            out_specs=pl.BlockSpec((tile, d), lambda i, idx: (i, 0)),
         ),
-        out_shape=sds((n, d), src.dtype, src, idx),
+        out_shape=sds((n_pad, d), src.dtype, src, idx),
         interpret=interpret,
     )(idx, src)
+    return out[:n] if n_pad != n else out
 
 
 def _unmarshal_kernel(off_ref, cnt_ref, in_ref, out_ref, *, slot):

@@ -4,6 +4,12 @@ A function, not a module-level constant, so importing this module never
 touches jax device state.  Single pod: (data=16, model=16) = 256 chips of a
 v5e pod; multi-pod adds a leading "pod" axis (2 × 256 = 512 chips), which is
 pure data parallelism across the pod boundary (DCN-class links).
+
+Forwarding over multi-node jobs uses the 2-D ``(node, device)`` meshes below:
+"node" spans the slow inter-node fabric (DCN), "device" the fast intra-node
+fabric (ICI/NVLink) — the axis order the hierarchical exchange's
+``(slow, fast)`` contract expects (see ``core.exchange``).  Ranks are
+node-major: ``jax.lax.axis_index(("node", "device")) == node * devices + dev``.
 """
 from __future__ import annotations
 
@@ -14,6 +20,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return compat.make_mesh(shape, axes)
+
+
+def make_production_node_mesh(nodes: int = 2, devices_per_node: int = 256):
+    """Multi-node forwarding mesh: (node, device) with DCN across nodes.
+
+    The default is 2 × 256 = 512 chips — the multi-pod job shaped for the
+    hierarchical exchange instead of a flat joint axis.
+    """
+    return compat.make_mesh((nodes, devices_per_node), ("node", "device"))
+
+
+def make_node_mesh(nodes: int = 2, devices_per_node: int = 4):
+    """Small 2-D (node, device) CPU mesh for tests/benchmarks of the
+    hierarchical exchange; 2×4 and 4×2 both fit the 8-device test platform."""
+    return compat.make_mesh((nodes, devices_per_node), ("node", "device"))
 
 
 def make_test_mesh(data: int = 2, model: int = 4):

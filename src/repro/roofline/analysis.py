@@ -21,7 +21,8 @@ import numpy as np
 HW = {
     "peak_flops": 197e12,   # bf16 FLOP/s per chip
     "hbm_bw": 819e9,        # B/s per chip
-    "link_bw": 50e9,        # B/s per ICI link
+    "link_bw": 50e9,        # B/s per ICI link (the fast, intra-node axis)
+    "dcn_bw": 25e9,         # B/s per chip across the slow inter-node fabric
 }
 
 _DTYPE_BYTES = {
@@ -69,11 +70,74 @@ _SHLO_DTYPES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "i64": 8, "i32": 4,
                 "ui32": 4, "i16": 2, "i8": 1, "i1": 1}
 
 
-def collective_ops(hlo_text: str) -> list:
-    """Per-op collective inventory: ``[(kind, result_bytes), ...]`` in program
-    order.  Handles both post-SPMD HLO and StableHLO.  This is the basis of
-    the collective-budget regression tests (one payload collective + one
-    count collective per forwarding round)."""
+# replica groups / source-target pairs, both dialects:
+#   StableHLO:  replica_groups = dense<[[0, 1, 2, 3], [4, 5, 6, 7]]> : ...
+#               source_target_pairs = dense<[[0, 1], [1, 2]]> : ...
+#   post-SPMD:  replica_groups={{0,1,2,3},{4,5,6,7}}
+_SHLO_GROUPS_RE = re.compile(
+    r"(?:replica_groups|source_target_pairs)\s*=\s*dense<\s*\[(.*?)\]\s*>"
+)
+_HLO_GROUPS_RE = re.compile(
+    r"(?:replica_groups|source_target_pairs)=\{(\{[0-9,\s]*\}(?:\s*,\s*\{[0-9,\s]*\})*)\}"
+)
+_GROUP_RE = re.compile(r"[\[{]([0-9,\s]*)[\]}]")
+
+
+def _parse_groups(line: str):
+    """The line's replica groups (or permute pairs) as a tuple of int tuples;
+    ``None`` when the op carries neither attribute."""
+    m = _SHLO_GROUPS_RE.search(line) or _HLO_GROUPS_RE.search(line)
+    if not m:
+        return None
+    groups = []
+    for g in _GROUP_RE.findall(m.group(1)):
+        ids = tuple(int(t) for t in g.replace(",", " ").split())
+        if ids:
+            groups.append(ids)
+    return tuple(groups) or None
+
+
+def group_axis(groups, fast_size: int) -> str:
+    """Classify one collective's participant groups against a node-major 2-D
+    mesh with ``fast_size`` ranks per node.
+
+    Returns ``"fast"`` (every group stays inside one node), ``"slow"`` (every
+    group holds one lane across nodes — the pure inter-node pattern),
+    ``"cross"`` (groups span nodes AND lanes, e.g. a flat all_to_all routed
+    over the whole 2-D mesh, or a global psum), ``"local"`` (singleton
+    groups), or ``"unknown"`` (no group info)."""
+    if not groups:
+        return "unknown"
+    kinds = set()
+    for g in groups:
+        if len(g) <= 1:
+            kinds.add("local")
+            continue
+        nodes = {i // fast_size for i in g}
+        lanes = {i % fast_size for i in g}
+        if len(nodes) == 1:
+            kinds.add("fast")
+        elif len(lanes) == 1:
+            kinds.add("slow")
+        else:
+            kinds.add("cross")
+    kinds.discard("local")
+    if not kinds:
+        return "local"
+    return kinds.pop() if len(kinds) == 1 else "cross"
+
+
+def collective_ops(hlo_text: str, *, with_groups: bool = False) -> list:
+    """Per-op collective inventory in program order.  Handles both post-SPMD
+    HLO and StableHLO.  This is the basis of the collective-budget regression
+    tests (one payload collective + one count collective per forwarding
+    round; two of each for the hierarchical two-stage exchange).
+
+    Returns ``[(kind, result_bytes), ...]``, or with ``with_groups=True``
+    ``[(kind, result_bytes, groups), ...]`` where ``groups`` is the op's
+    replica groups (permute source-target pairs for collective-permute) as a
+    tuple of int tuples — the input of :func:`group_axis` / the per-axis
+    accounting of :func:`per_axis_collective_bytes`."""
     ops = []
     if "stablehlo." in hlo_text:
         for line in hlo_text.splitlines():
@@ -88,7 +152,9 @@ def collective_ops(hlo_text: str) -> list:
                     if d:
                         n *= int(d)
                 nbytes += n * _SHLO_DTYPES.get(dt, 4)
-            ops.append((kind, nbytes))
+            ops.append(
+                (kind, nbytes, _parse_groups(line)) if with_groups else (kind, nbytes)
+            )
         return ops
     for line in hlo_text.splitlines():
         m = _OP_RE.search(line)
@@ -98,8 +164,58 @@ def collective_ops(hlo_text: str) -> list:
         if "-done(" in line and kind + "-done" in line:
             continue  # counted at -start
         shapes = _SHAPE_RE.findall(m.group(1))
-        ops.append((kind, sum(_shape_bytes(dt, dims) for dt, dims in shapes)))
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        ops.append(
+            (kind, nbytes, _parse_groups(line)) if with_groups else (kind, nbytes)
+        )
     return ops
+
+
+def per_axis_collective_bytes(hlo_text: str, fast_size: int) -> Dict[str, int]:
+    """Collective result bytes bucketed by which mesh fabric they traverse
+    (see :func:`group_axis`): ``fast`` stays on the intra-node links, ``slow``
+    is the pure inter-node pattern, ``cross`` spans both (flat collectives
+    routed over the whole 2-D mesh pay slow-fabric cost too)."""
+    out: Dict[str, int] = {
+        "fast": 0, "slow": 0, "cross": 0, "local": 0, "unknown": 0
+    }
+    for _kind, nbytes, groups in collective_ops(hlo_text, with_groups=True):
+        out[group_axis(groups, fast_size)] += nbytes
+    return out
+
+
+def slow_axis_bytes_model(
+    exchange: str,
+    *,
+    num_ranks: int,
+    fast_size: int,
+    item_bytes: int,
+    peer_capacity: int = 0,
+    node_capacity: int = 0,
+    n_items: int = 0,
+) -> float:
+    """Model: bulk payload bytes ONE rank pushes across the slow (inter-node)
+    fabric per forwarding round.
+
+    * flat ``padded`` routed over the joint 2-D axis: R per-rank slots of
+      ``peer_capacity`` rows; the ``R - fast_size`` slots addressed to remote
+      nodes cross the slow fabric, each padded per RANK.
+    * ``hierarchical``: only stage B crosses — ``num_nodes - 1`` per-NODE
+      segments of ``node_capacity`` rows.  At equal burst tolerance K per
+      destination (``peer_capacity == node_capacity == K``) the padded rows
+      crossing the slow fabric shrink from (R - F)·K to (N - 1)·K — exactly
+      R/N×, since R - F = F·(N - 1).
+    * ``ragged``: data-dependent — exactly the useful bytes headed off-node
+      (uniform-destination estimate from ``n_items``).
+    """
+    num_nodes = num_ranks // fast_size
+    if exchange in ("padded", "flat"):
+        return float((num_ranks - fast_size) * peer_capacity * item_bytes)
+    if exchange == "hierarchical":
+        return float((num_nodes - 1) * node_capacity * item_bytes)
+    if exchange == "ragged":
+        return float(n_items * item_bytes) * (num_ranks - fast_size) / num_ranks
+    raise ValueError(f"no slow-axis model for exchange {exchange!r}")
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, int]:

@@ -31,3 +31,20 @@ def mesh8():
 def mesh24():
     """A 2-D (2, 4) mesh over ('data', 'model') — miniature of the pod mesh."""
     return compat.make_mesh((2, 4), ("data", "model"))
+
+
+@pytest.fixture(scope="session")
+def mesh_nodes24():
+    """A 2-D (node=2, device=4) forwarding mesh — the hierarchical exchange's
+    (slow, fast) shape."""
+    from repro.launch.mesh import make_node_mesh
+
+    return make_node_mesh(2, 4)
+
+
+@pytest.fixture(scope="session")
+def mesh_nodes42():
+    """The transposed (node=4, device=2) forwarding mesh."""
+    from repro.launch.mesh import make_node_mesh
+
+    return make_node_mesh(4, 2)

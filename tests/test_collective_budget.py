@@ -1,10 +1,16 @@
-"""Collective-budget regression tests (ISSUE 1 acceptance).
+"""Collective-budget regression tests (ISSUE 1 + ISSUE 2 acceptance).
 
 One ``forward_work`` round must lower to exactly ONE payload-sized collective
 and ONE count collective — the whole point of the packed wire format.  If a
 refactor reintroduces per-leaf collectives (the old code issued one
 all_to_all per pytree leaf) or splits the ragged control plane back into
 chained count exchanges, these tests fail.
+
+The hierarchical two-stage round is budgeted at exactly TWO payload + TWO
+count collectives, with the single slow-axis payload collective (stage B)
+carrying ALL bulk bytes that cross the inter-node fabric — verified from the
+ops' replica groups (fast axis: groups inside one node; slow axis: one lane
+across nodes).
 
 The inventory comes from ``roofline.analysis.collective_ops`` over the
 lowered StableHLO of a shard_map'ed round.
@@ -17,7 +23,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core import ForwardConfig, enqueue, forward_work, make_queue
 from repro.core import types as T
-from repro.roofline.analysis import collective_ops
+from repro.roofline.analysis import collective_ops, group_axis
 
 from helpers import make_rays, ray_proto
 
@@ -80,6 +86,112 @@ def test_ragged_round_has_one_payload_and_one_count_collective(mesh8):
     assert sum(1 for k, _ in ops if k == "all-to-all") == 0, ops
     gathers = [b for k, b in ops if k == "all-gather"]
     assert gathers == [R * R * 4], ops
+
+
+def _lower_hier_round(mesh, cfg):
+    axes = cfg.axis_name
+
+    def kernel(_x):
+        q = make_queue(ray_proto(), CAP)
+        me = jax.lax.axis_index(axes)
+        q = enqueue(
+            q, make_rays(10), ((me + jnp.arange(10)) % R).astype(jnp.int32),
+            jnp.ones(10, bool),
+        )
+        nq, total = forward_work(q, cfg)
+        return nq.count[None], total, nq.items.tmin
+
+    return jax.jit(
+        compat.shard_map(
+            kernel, mesh=mesh, in_specs=P(axes),
+            out_specs=(P(axes), P(), P(axes)),
+        )
+    ).lower(jnp.arange(8.0)).as_text()
+
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["xla", "pallas"])
+def test_hierarchical_round_budget_two_payload_two_count(mesh_nodes24, use_pallas):
+    """Two-stage budget guard: exactly 2 payload all_to_alls (one per mesh
+    axis) + 2 tiny count all_to_alls, and ZERO payload collectives on the
+    slow axis beyond stage B — all bulk inter-node bytes cross exactly once,
+    padded per node."""
+    F = 4
+    cfg = ForwardConfig(
+        ("node", "device"), R, CAP, exchange="hierarchical", fast_size=F,
+        use_pallas=use_pallas,
+    )
+    ops = collective_ops(_lower_hier_round(mesh_nodes24, cfg), with_groups=True)
+    a2a = [(b, group_axis(g, F)) for k, b, g in ops if k == "all-to-all"]
+    threshold = min(cfg.peer_capacity, cfg.node_capacity) * WORDS * 4
+    payload = [(b, ax) for b, ax in a2a if b >= threshold]
+    counts = [(b, ax) for b, ax in a2a if b < threshold]
+    assert len(payload) == 2, f"want TWO payload all_to_alls, got {a2a}"
+    assert len(counts) == 2, f"want TWO count all_to_alls, got {a2a}"
+    # stage A: the full (F, S_a, W) send buffer moves on the FAST axis only
+    fast_payload = [b for b, ax in payload if ax == "fast"]
+    assert fast_payload == [F * cfg.peer_capacity * WORDS * 4], payload
+    # stage B: the ONE slow-axis payload collective carries the per-node
+    # segments — (N, S_b, W), padded per node, never per rank
+    N = R // F
+    slow_payload = [b for b, ax in payload if ax == "slow"]
+    assert slow_payload == [N * cfg.node_capacity * WORDS * 4], payload
+    # nothing else ships payload-sized data across the slow fabric
+    slow_bulk = [
+        (k, b) for k, b, g in ops
+        if b >= threshold and group_axis(g, F) in ("slow", "cross")
+        and k != "all-to-all"
+    ]
+    assert slow_bulk == [], slow_bulk
+    # control plane: one count exchange per axis
+    assert sorted(ax for _b, ax in counts) == ["fast", "slow"], counts
+
+
+def test_hierarchical_slow_axis_padding_is_per_node(mesh_nodes24):
+    """The headline claim: slow-axis bytes are padded per NODE segment.  At
+    EQUAL burst tolerance K (slot rows a single destination can absorb
+    without drops), the flat padded exchange routed across nodes ships
+    (R - F)·K padded rows over the slow fabric; hierarchical ships
+    (N - 1)·K — exactly an R/N× reduction, since R - F = F·(N - 1).  The
+    model must also agree with the lowered slow-axis accounting."""
+    from repro.roofline.analysis import per_axis_collective_bytes, slow_axis_bytes_model
+
+    F, N = 4, 2
+    item_b = WORDS * 4
+    K = 16  # any per-destination burst tolerance
+    hier_model = slow_axis_bytes_model(
+        "hierarchical", num_ranks=R, fast_size=F, item_bytes=item_b,
+        node_capacity=K,
+    )
+    flat_model = slow_axis_bytes_model(
+        "padded", num_ranks=R, fast_size=F, item_bytes=item_b,
+        peer_capacity=K,
+    )
+    assert flat_model / hier_model == pytest.approx(R / N)
+    # lowered HLO: stage B is the only slow-axis bulk and matches the model
+    hier = ForwardConfig(("node", "device"), R, CAP, exchange="hierarchical", fast_size=F)
+    txt = _lower_hier_round(mesh_nodes24, hier)
+    per_axis = per_axis_collective_bytes(txt, F)
+    assert per_axis["cross"] == 0
+    slow_payload = N * hier.node_capacity * WORDS * 4
+    assert per_axis["slow"] == slow_payload + N * 4  # stage B + its counts
+    # the model counts only rows leaving the node: (N-1)/N of the collective
+    assert slow_axis_bytes_model(
+        "hierarchical", num_ranks=R, fast_size=F, item_bytes=item_b,
+        node_capacity=hier.node_capacity,
+    ) == slow_payload * (N - 1) / N
+
+
+def test_flat_exchange_over_joint_axes_pays_cross_fabric_routing(mesh_nodes24):
+    """Contrast guard: the flat padded exchange on the same 2-D mesh lowers
+    to ONE all_to_all whose groups span nodes AND lanes — every byte of it is
+    exposed to the slow fabric (the motivation for the two-stage route)."""
+    cfg = ForwardConfig(("node", "device"), R, CAP, exchange="padded")
+    ops = collective_ops(_lower_hier_round(mesh_nodes24, cfg), with_groups=True)
+    payload = [
+        (b, group_axis(g, 4)) for k, b, g in ops
+        if k == "all-to-all" and b >= _payload_threshold(cfg)
+    ]
+    assert payload == [(R * cfg.peer_capacity * WORDS * 4, "cross")], payload
 
 
 def test_cycle_hop_ships_one_packed_buffer(mesh8):

@@ -1,0 +1,305 @@
+"""Hierarchical two-stage exchange (ISSUE 2): parity, accounting, config.
+
+The `hierarchical` backend must be *observationally identical* to the flat
+backends — same counts, same drops, bit-exact placement — because global
+ranks are node-major and both stages preserve (source rank, lane) order.  The
+oracle is ``exchange_onehot`` (a deliberately different code path).  With
+ample stage capacities the ONLY drops either backend takes are
+receiver-capacity clamps, so parity holds even for the all-items-to-one-rank
+hot spot; with the default (tight) stage capacities the conservation law
+``received + dropped == emitted`` still holds globally.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis — deterministic stub
+    from _hypothesis_stub import given, settings, st
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import DISCARD, ForwardConfig, WorkQueue, forward_work, work_item
+
+R, CAP = 8, 64
+AXES = ("node", "device")
+
+
+@work_item
+@dataclasses.dataclass
+class Item:
+    val: jax.Array
+    src: jax.Array
+
+
+def _make_fn(mesh, cfg):
+    def fwd(items_val, dest, counts):
+        me = jax.lax.axis_index(AXES)
+        q = WorkQueue(
+            items=Item(val=items_val, src=me * jnp.ones(CAP, jnp.int32)),
+            dest=dest,
+            count=counts[0],
+            drops=jnp.zeros((), jnp.int32),
+        )
+        nq, total = forward_work(q, cfg)
+        return nq.items.val, nq.items.src, nq.count[None], nq.drops[None], total
+
+    return jax.jit(
+        compat.shard_map(
+            fwd, mesh=mesh,
+            in_specs=(P(AXES), P(AXES), P(AXES)),
+            out_specs=(P(AXES), P(AXES), P(AXES), P(AXES), P()),
+        )
+    )
+
+
+def _ample(fast_size, **kw):
+    """Stage capacities so large no stage-A/B clamp can ever fire: the only
+    remaining drop site is the receiver capacity — same as the oracle's."""
+    return ForwardConfig(
+        AXES, R, CAP, exchange="hierarchical", fast_size=fast_size,
+        peer_capacity=CAP, node_capacity=fast_size * CAP, **kw,
+    )
+
+
+def _run_pair(hier_fn, onehot_fn, counts, dest, val):
+    args = (
+        jnp.asarray(val).reshape(-1),
+        jnp.asarray(dest).reshape(-1),
+        jnp.asarray(counts),
+    )
+    h = [np.asarray(x) for x in hier_fn(*args)]
+    o = [np.asarray(x) for x in onehot_fn(*args)]
+    np.testing.assert_array_equal(h[2], o[2], err_msg="per-rank receive counts")
+    hv, hs = h[0].reshape(R, CAP), h[1].reshape(R, CAP)
+    ov, os_ = o[0].reshape(R, CAP), o[1].reshape(R, CAP)
+    for r in range(R):  # valid prefixes bit-exact; tails are garbage
+        n = int(h[2].reshape(-1)[r])
+        np.testing.assert_array_equal(hv[r][:n], ov[r][:n])
+        np.testing.assert_array_equal(hs[r][:n], os_[r][:n])
+    assert int(h[3].sum()) == int(o[3].sum()), "global drops"
+    assert int(h[4]) == int(o[4]), "termination total"
+    lane = np.arange(CAP)[None, :]
+    emitted = int(((lane < counts[:, None]) & (dest >= 0) & (dest < R)).sum())
+    assert int(h[2].sum()) + int(h[3].sum()) == emitted, "conservation"
+
+
+@pytest.fixture(scope="module")
+def fns24(mesh_nodes24):
+    return (
+        _make_fn(mesh_nodes24, _ample(4)),
+        _make_fn(mesh_nodes24, ForwardConfig(AXES, R, CAP, exchange="onehot")),
+    )
+
+
+@pytest.fixture(scope="module")
+def fns42(mesh_nodes42):
+    return (
+        _make_fn(mesh_nodes42, _ample(2)),
+        _make_fn(mesh_nodes42, ForwardConfig(AXES, R, CAP, exchange="onehot")),
+    )
+
+
+@given(data=st.data())
+@settings(max_examples=15, deadline=None)
+def test_matches_onehot_bitwise_2x4(fns24, data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    counts = rng.integers(0, CAP + 1, R).astype(np.int32)
+    dest = rng.integers(-1, R, (R, CAP)).astype(np.int32)  # incl. DISCARD lanes
+    val = rng.normal(size=(R, CAP)).astype(np.float32)
+    _run_pair(*fns24, counts, dest, val)
+
+
+@given(data=st.data())
+@settings(max_examples=10, deadline=None)
+def test_matches_onehot_bitwise_4x2(fns42, data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    counts = rng.integers(0, CAP + 1, R).astype(np.int32)
+    dest = rng.integers(0, R, (R, CAP)).astype(np.int32)
+    val = rng.normal(size=(R, CAP)).astype(np.float32)
+    _run_pair(*fns42, counts, dest, val)
+
+
+def test_hotspot_all_to_one_rank_matches_onehot(fns24):
+    """Everyone floods rank 0 at full queue: R·CAP items into one CAP-row
+    queue.  Receiver clamp is the only drop site for both backends, so
+    placement, counts, and drops must match exactly."""
+    counts = np.full(R, CAP, np.int32)
+    dest = np.zeros((R, CAP), np.int32)
+    val = np.random.default_rng(1).normal(size=(R, CAP)).astype(np.float32)
+    _run_pair(*fns24, counts, dest, val)
+
+
+def test_discard_only_is_a_noop(fns24):
+    counts = np.full(R, CAP, np.int32)
+    dest = np.full((R, CAP), DISCARD, np.int32)
+    val = np.zeros((R, CAP), np.float32)
+    _run_pair(*fns24, counts, dest, val)
+
+
+@given(data=st.data())
+@settings(max_examples=10, deadline=None)
+def test_tight_slots_conserve_items_plus_drops(mesh_nodes24, data):
+    """With the DEFAULT (tight) stage capacities, stage-A and stage-B clamps
+    fire under skew; every clamped item must land in `drops` — globally,
+    received + dropped == emitted."""
+    fn = _make_fn(
+        mesh_nodes24,
+        ForwardConfig(AXES, R, CAP, exchange="hierarchical", fast_size=4),
+    )
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    counts = rng.integers(0, CAP + 1, R).astype(np.int32)
+    # heavy skew: half the ranks route everything to rank 0
+    dest = rng.integers(0, R, (R, CAP)).astype(np.int32)
+    dest[::2] = 0
+    val = rng.normal(size=(R, CAP)).astype(np.float32)
+    _v, _s, out_counts, out_drops, total = fn(
+        jnp.asarray(val).reshape(-1),
+        jnp.asarray(dest).reshape(-1),
+        jnp.asarray(counts),
+    )
+    received = int(np.asarray(out_counts).sum())
+    dropped = int(np.asarray(out_drops).sum())
+    assert received + dropped == int(counts.sum())
+    assert int(total) == received
+
+
+def test_pallas_path_matches_xla_path(mesh_nodes24):
+    fn_p = _make_fn(mesh_nodes24, _ample(4, use_pallas=True))
+    fn_x = _make_fn(mesh_nodes24, _ample(4))
+    rng = np.random.default_rng(7)
+    counts = rng.integers(0, CAP + 1, R).astype(np.int32)
+    dest = rng.integers(0, R, (R, CAP)).astype(np.int32)
+    val = rng.normal(size=(R, CAP)).astype(np.float32)
+    args = (
+        jnp.asarray(val).reshape(-1),
+        jnp.asarray(dest).reshape(-1),
+        jnp.asarray(counts),
+    )
+    p = [np.asarray(x) for x in fn_p(*args)]
+    x = [np.asarray(x) for x in fn_x(*args)]
+    np.testing.assert_array_equal(p[2], x[2])
+    for r in range(R):
+        n = int(p[2].reshape(-1)[r])
+        np.testing.assert_array_equal(
+            p[0].reshape(R, CAP)[r][:n], x[0].reshape(R, CAP)[r][:n]
+        )
+    assert int(p[3].sum()) == int(x[3].sum())
+
+
+def test_cycling_on_node_mesh_delivers_everything(mesh_nodes42):
+    """§6.3 cycling with hierarchical hops: R node-major ring hops (fast-axis
+    ppermute + a slow-axis hop at each node boundary) deliver every item."""
+    from repro.core import enqueue, make_queue
+    from repro.core.cycling import deliver_by_cycling
+
+    cfg = ForwardConfig(AXES, R, CAP, exchange="hierarchical", fast_size=2)
+
+    def kernel(_x):
+        proto = Item(val=jnp.zeros(()), src=jnp.zeros((), jnp.int32))
+        q = make_queue(proto, CAP)
+        me = jax.lax.axis_index(AXES)
+        n = 6
+        k = jnp.arange(n)
+        items = Item(
+            val=(k + me * 100).astype(jnp.float32),
+            src=me * jnp.ones(n, jnp.int32),
+        )
+        q = enqueue(q, items, ((me * 3 + k) % R).astype(jnp.int32), jnp.ones(n, bool))
+        absorbed, total = deliver_by_cycling(q, cfg)
+        return absorbed.count[None], total, absorbed.items.val
+
+    f = jax.jit(
+        compat.shard_map(
+            kernel, mesh=mesh_nodes42, in_specs=P(AXES),
+            out_specs=(P(AXES), P(), P(AXES)),
+        )
+    )
+    counts, total, vals = f(jnp.arange(8.0))
+    counts = np.asarray(counts)
+    vals = np.asarray(vals).reshape(R, CAP)
+    assert int(total) == R * 6
+    got = sorted(int(vals[r, i]) for r in range(R) for i in range(counts[r]))
+    assert got == sorted(s * 100 + k for s in range(R) for k in range(6))
+
+
+@pytest.mark.parametrize(
+    "nodes,devs",
+    [(1, 8), (8, 1)],
+    ids=["single-node", "single-lane"],
+)
+def test_degenerate_axes_match_onehot(nodes, devs):
+    """Extent-1 axes take dedicated identity paths (no stage-B collective on
+    a single node; sort composed into stage B on a single lane) — both must
+    stay bit-exact with the oracle, hot-spot included."""
+    from repro.launch.mesh import make_node_mesh
+
+    mesh = make_node_mesh(nodes, devs)
+    hier = _make_fn(
+        mesh,
+        ForwardConfig(
+            AXES, R, CAP, exchange="hierarchical", fast_size=devs,
+            peer_capacity=CAP, node_capacity=devs * CAP,
+        ),
+    )
+    onehot = _make_fn(mesh, ForwardConfig(AXES, R, CAP, exchange="onehot"))
+    rng = np.random.default_rng(nodes * 10 + devs)
+    for hotspot in (False, True):
+        counts = (
+            np.full(R, CAP, np.int32)
+            if hotspot
+            else rng.integers(0, CAP + 1, R).astype(np.int32)
+        )
+        dest = (
+            np.zeros((R, CAP), np.int32)
+            if hotspot
+            else rng.integers(0, R, (R, CAP)).astype(np.int32)
+        )
+        val = rng.normal(size=(R, CAP)).astype(np.float32)
+        _run_pair(hier, onehot, counts, dest, val)
+
+
+# ------------------------------------------------- ForwardConfig validation
+def test_config_rejects_flat_axis():
+    with pytest.raises(ValueError, match=r"\(slow, fast\)"):
+        ForwardConfig("data", R, CAP, exchange="hierarchical", fast_size=4)
+
+
+def test_config_rejects_missing_fast_size():
+    with pytest.raises(ValueError, match="fast_size"):
+        ForwardConfig(AXES, R, CAP, exchange="hierarchical")
+
+
+def test_config_rejects_non_dividing_fast_size():
+    with pytest.raises(ValueError, match="divide"):
+        ForwardConfig(AXES, R, CAP, exchange="hierarchical", fast_size=3)
+
+
+def test_config_rejects_three_axes():
+    with pytest.raises(ValueError, match=r"\(slow, fast\)"):
+        ForwardConfig(
+            ("pod", "node", "device"), R, CAP, exchange="hierarchical", fast_size=4
+        )
+
+
+def test_default_capacities_match_backend_fanout():
+    """The peer_capacity default must track the backend's true fan-out:
+    R per-rank slots for flat padded, fast_size per-lane slots (stage A) and
+    R/fast_size per-node segments (stage B) for hierarchical."""
+    flat = ForwardConfig("data", R, CAP, exchange="padded")
+    assert flat.peer_capacity == 2 * -(-CAP // R)
+    hier = ForwardConfig(AXES, R, CAP, exchange="hierarchical", fast_size=4)
+    assert hier.peer_capacity == 2 * -(-CAP // 4)  # stage A: F peers
+    assert hier.node_capacity == 2 * -(-CAP // 2)  # stage B: N=2 nodes
+    hier42 = ForwardConfig(AXES, R, CAP, exchange="hierarchical", fast_size=2)
+    assert hier42.peer_capacity == 2 * -(-CAP // 2)
+    assert hier42.node_capacity == 2 * -(-CAP // 4)
+    # explicit values always win
+    explicit = ForwardConfig(
+        AXES, R, CAP, exchange="hierarchical", fast_size=4,
+        peer_capacity=7, node_capacity=11,
+    )
+    assert explicit.peer_capacity == 7 and explicit.node_capacity == 11
