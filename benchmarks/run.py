@@ -10,6 +10,13 @@
   fwd_walltime_hier_*    flat vs hierarchical two-stage exchange on 2-D
                          (node, device) meshes (2×4, 4×2), with the modeled
                          slow-axis byte volume per route.
+  fwd_walltime_hier3_*   flat vs 2-level vs 3-level route on the (2, 2, 2)
+                         (pod, node, device) mesh, with modeled per-tier
+                         bytes.
+  rebalance_skew_*       skewed-load rebalance (flat / topology-aware /
+                         intra scope) with per-tier payload bytes from the
+                         lowered HLO — intra must put zero below the
+                         fastest tier.
   sort_throughput_*      §4.2.1 key pack+sort throughput (keys/s), XLA vs
                          Pallas(interpret) paths.
   app_*                  §5 application throughputs (CPU, small scenes).
@@ -26,7 +33,10 @@ perf trajectory::
 ``--smoke`` runs only the fast forwarding-walltime subset (the regression
 canary); ``--only SUBSTR`` filters sections by name; ``--compare
 flat,hierarchical`` is the CI gate that fails (exit 1) when the hierarchical
-exchange regresses the flat one by >5% walltime on a single-node mesh.
+exchange regresses the flat one by >5% walltime on a single-node mesh;
+``--compare flat,hierarchical2,hierarchical3`` is the PR-3 gate: the 3-way
+(2, 2, 2)-mesh sweep + the skewed rebalance benchmark, failing unless the
+3-level route's modeled slowest-tier bytes undercut both alternatives.
 """
 import os
 
@@ -109,9 +119,10 @@ def _mesh8():
 
 def _emit_kernel(cfg, n_emit, cap):
     from repro.core import enqueue, forward_work, make_queue
+    from repro.core.forwarding import flatten_axis_names
 
     def kernel(x):
-        me = jax.lax.axis_index(cfg.axis_name)
+        me = jax.lax.axis_index(flatten_axis_names(cfg.axis_name))
         q = make_queue(_ray_proto(), cap)
         lane = jnp.arange(n_emit)
         rays = Ray44(
@@ -209,7 +220,9 @@ def fwd_walltime():
     for n_emit in (256, 2048):
         for exchange in ("padded", "onehot"):
             cap = max(256, n_emit * 2)
-            cfg = ForwardConfig("data", 8, cap, exchange=exchange, peer_capacity=cap)
+            # peer_capacity only exists for padded slots (onehot rejects it)
+            kw = {"peer_capacity": cap} if exchange == "padded" else {}
+            cfg = ForwardConfig("data", 8, cap, exchange=exchange, **kw)
             f = jax.jit(
                 compat.shard_map(_emit_kernel(cfg, n_emit, cap), mesh=mesh,
                                  in_specs=P("data"), out_specs=P("data"))
@@ -282,17 +295,221 @@ def fwd_walltime_hier():
                 )
 
 
-def compare_backends(spec: str) -> int:
-    """``--compare flat,hierarchical``: the CI gate for the two-stage route.
+def _pod_configs(cap):
+    """(flat, hier2, hier3, mesh) for the (2, 2, 2) three-tier mesh: flat
+    routes one joint all_to_all over everything; hier2 treats (pod, node) as
+    one joint slow fabric; hier3 is the full 3-level route."""
+    from repro.core import ForwardConfig
+    from repro.launch.mesh import make_pod_mesh
 
-    On a SINGLE-NODE mesh (slow axis of extent 1 — stage B degenerates to a
-    local copy) the hierarchical exchange must not regress the flat padded
-    exchange by more than 5% walltime; a regression there means pure
-    two-stage overhead, not topology routing.  Returns a nonzero exit code on
-    regression."""
+    mesh = make_pod_mesh(2, 2, 2)
+    axes = ("pod", "node", "device")
+    flat = ForwardConfig(axes, 8, cap, exchange="padded")
+    hier2 = ForwardConfig(
+        (("pod", "node"), "device"), 8, cap, exchange="hierarchical",
+        level_sizes=(4, 2),
+    )
+    hier3 = ForwardConfig(
+        axes, 8, cap, exchange="hierarchical", level_sizes=(2, 2, 2)
+    )
+    return flat, hier2, hier3, mesh
+
+
+def _stage_crossing_rows(sub_sizes, slot_rows):
+    """Rows ONE rank's padded stage pushes across each sub-tier of its
+    fabric: the stage fans out prod(sub_sizes) slots of ``slot_rows``; a slot
+    whose digit first differs at sub-tier j crosses fabric j (and nothing
+    slower).  Returns one entry per sub-tier, slowest first."""
+    out, remaining = [], 1
+    for a in sub_sizes:
+        remaining *= a
+    for a in sub_sizes:
+        out.append((remaining - remaining // a) * slot_rows)
+        remaining //= a
+    return out
+
+
+def _route_tier_rows(tag, cfg, n_tiers=3):
+    """Padded rows one rank puts on each physical fabric tier per round,
+    attributed by where each slot/segment's destination digit FIRST differs
+    (a flat slot to another pod crosses only the DCN hop of the route)."""
+    if tag == "flat":
+        return _stage_crossing_rows((2, 2, 2), cfg.peer_capacity)
+    tiers = [0.0] * n_tiers
+    if len(cfg.level_sizes) == 2 and cfg.level_sizes[0] == 4:
+        # hier2: the joint (pod, node) slow stage spans two physical fabrics
+        t0, t1 = _stage_crossing_rows((2, 2), cfg.level_capacities[0])
+        tiers[0], tiers[1] = t0, t1
+        tiers[2] = _stage_crossing_rows((2,), cfg.level_capacities[1])[0]
+    else:
+        for l, (a, s) in enumerate(zip(cfg.level_sizes, cfg.level_capacities)):
+            tiers[l] = _stage_crossing_rows((a,), s)[0]
+    return tiers
+
+
+def _time_fwd_axes(cfg, mesh, axes, n_emit, cap, iters=5):
+    """Like _time_fwd but with explicit shard_map axes (the config's level
+    axes may be nested tuples, which PartitionSpec cannot carry)."""
+    f = jax.jit(
+        compat.shard_map(
+            _emit_kernel(cfg, n_emit, cap), mesh=mesh,
+            in_specs=P(axes), out_specs=P(axes),
+        )
+    )
+    us, _ = _timeit(f, jnp.arange(8.0), iters=iters)
+    return us
+
+
+def fwd_walltime_hier3():
+    """ISSUE 3 sweep: flat vs 2-level vs 3-level route on the (2, 2, 2)
+    (pod, node, device) mesh, with the modeled bytes each route pushes across
+    every fabric tier (CPU walltime treats all links as equal; the byte model
+    is where the N-level win shows).  At the default load-proportional
+    capacities the routes' total slowest-tier bytes can coincide, so the
+    discriminating metric — as in the PR-2 2-level sweep — is the slowest-
+    tier bytes PAID PER ROW of burst tolerance: 4·item_B flat (4 of 7 slots
+    cross the pod fabric) vs 2·item_B hier2 (2 of 3 joint-tier segments) vs
+    1·item_B hier3 (exactly the one off-pod segment)."""
+    from repro.core import item_nbytes
+
+    item_b = item_nbytes(_ray_proto())
+    axes = ("pod", "node", "device")
+    for n_emit in (256, 2048):
+        cap = max(256, n_emit * 2)
+        flat, hier2, hier3, mesh = _pod_configs(cap)
+        for tag, cfg in (("flat", flat), ("hier2", hier2), ("hier3", hier3)):
+            us = _time_fwd_axes(cfg, mesh, axes, n_emit, cap)
+            tiers = [r * item_b for r in _route_tier_rows(tag, cfg)]
+            # burst_rows: the hot-spot burst one destination absorbs without
+            # drops at this budget (per-slot flat, per slowest-segment hier)
+            burst = (
+                cfg.peer_capacity if tag == "flat" else cfg.level_capacities[0]
+            )
+            rays_s = 8 * n_emit / (us / 1e6)
+            emit(
+                f"fwd_walltime_hier3_{tag}_2x2x2_n{n_emit}", us,
+                f"rays_per_s={rays_s:.2e};tier0_B={tiers[0]:.0f}"
+                f";tier1_B={tiers[1]:.0f};tier2_B={tiers[2]:.0f}"
+                f";burst_rows={burst}"
+                f";tier0_B_per_burst_row={tiers[0] / burst:.1f}",
+            )
+
+
+def rebalance_skew():
+    """ISSUE 3: skewed-load rebalance on the (2, 2, 2) mesh — flat global
+    plan vs topology-aware plan vs intra-tier scope, with the payload bytes
+    the lowered program puts on each fabric tier (from the HLO replica
+    groups).  The intra route must show ZERO bytes below the fastest tier."""
+    from repro.core import DISCARD, ForwardConfig, WorkQueue, rebalance
+    from repro.core import types as T
+    from repro.launch.mesh import make_pod_mesh
+    from repro.roofline.analysis import per_tier_collective_bytes
+
+    sizes = (2, 2, 2)
+    axes = ("pod", "node", "device")
+    mesh = make_pod_mesh(*sizes)
+    cap = 512
+    words = T.pack_spec(_ray_proto()).total_words
+    flat_cfg = ForwardConfig(axes, 8, cap, exchange="padded")
+    hier_cfg = ForwardConfig(
+        axes, 8, cap, exchange="hierarchical", level_sizes=sizes
+    )
+
+    def bench(tag, cfg, scope):
+        def bal(_x):
+            me = jax.lax.axis_index(axes)
+            n = jnp.where(me % 2 == 0, 300, 4)  # node-local hoarders
+            rays = jax.tree.map(
+                lambda l: jnp.zeros((cap,) + l.shape, l.dtype), _ray_proto()
+            )
+            q = WorkQueue(
+                items=rays, dest=jnp.full((cap,), DISCARD, jnp.int32),
+                count=n.astype(jnp.int32), drops=jnp.zeros((), jnp.int32),
+            )
+            nq, total = rebalance(q, cfg, scope=scope)
+            checksum = jnp.sum(nq.items.tmin) * 0
+            return nq.count[None] + checksum.astype(jnp.int32)
+
+        f = jax.jit(
+            compat.shard_map(bal, mesh=mesh, in_specs=P(axes), out_specs=P(axes))
+        )
+        us, _ = _timeit(f, jnp.arange(8.0))
+        per_tier = per_tier_collective_bytes(
+            f.lower(jnp.arange(8.0)).as_text(), sizes, min_bytes=words * 4 * 8
+        )
+        emit(
+            f"rebalance_skew_{tag}_2x2x2", us,
+            f"tier0_B={per_tier[0]};tier1_B={per_tier[1]}"
+            f";tier2_B={per_tier[2]};cross_B={per_tier['cross']}",
+        )
+        return per_tier
+
+    bench("flat", flat_cfg, "global")
+    bench("hier", hier_cfg, "global")
+    intra = bench("intra", hier_cfg, "intra")
+    if intra[0] or intra[1] or intra["cross"]:
+        raise RuntimeError(
+            f"intra-scope rebalance leaked payload bytes off the fastest "
+            f"tier: {intra}"
+        )
+
+
+def compare_backends(spec: str) -> int:
+    """The CI gates for the hierarchical routes.
+
+    ``--compare flat,hierarchical`` (PR-2 gate): on a SINGLE-NODE mesh (slow
+    axis of extent 1 — the slow stage degenerates to a local copy) the
+    hierarchical exchange must not regress the flat padded exchange by more
+    than 5% walltime; a regression there means pure multi-stage overhead, not
+    topology routing.
+
+    ``--compare flat,hierarchical2,hierarchical3`` (PR-3 gate): runs the
+    (2, 2, 2)-mesh sweep plus the skewed-load rebalance benchmark, and fails
+    unless the 3-level route's modeled slowest-tier bytes PER ROW OF BURST
+    TOLERANCE strictly undercut both the flat route's and the 2-level
+    route's.  (At load-proportional default capacities the routes' absolute
+    slowest-tier bytes coincide — the structural win, as in the PR-2 2-level
+    sweep, is how few DCN-crossing padded rows a unit of per-destination
+    burst absorption costs: 4 flat, 2 hier2, 1 hier3.)  Returns a nonzero
+    exit code on gate failure."""
     names = tuple(s.strip() for s in spec.split(","))
+    if names == ("flat", "hierarchical2", "hierarchical3"):
+        from repro.core import item_nbytes
+
+        fwd_walltime_hier3()
+        rebalance_skew()
+        item_b = item_nbytes(_ray_proto())
+        flat, hier2, hier3, _mesh = _pod_configs(4096)
+        per_burst = {}
+        for tag, cfg in (("flat", flat), ("hier2", hier2), ("hier3", hier3)):
+            burst = (
+                cfg.peer_capacity if tag == "flat" else cfg.level_capacities[0]
+            )
+            per_burst[tag] = _route_tier_rows(tag, cfg)[0] * item_b / burst
+        emit(
+            "compare3_slowest_tier_bytes_per_burst_row", 0.0,
+            f"flat_B={per_burst['flat']:.1f};hier2_B={per_burst['hier2']:.1f}"
+            f";hier3_B={per_burst['hier3']:.1f}",
+        )
+        if not (
+            per_burst["hier3"] < per_burst["hier2"] < per_burst["flat"]
+        ):
+            print(
+                "# COMPARE FAILED: slowest-tier bytes per burst row not "
+                f"strictly decreasing flat > hier2 > hier3: {per_burst}"
+            )
+            return 1
+        print(
+            "# compare ok: slowest-tier bytes per burst row "
+            f"flat {per_burst['flat']:.1f} > hier2 {per_burst['hier2']:.1f} "
+            f"> hier3 {per_burst['hier3']:.1f} on 2x2x2"
+        )
+        return 0
     if names != ("flat", "hierarchical"):
-        raise SystemExit(f"error: --compare supports 'flat,hierarchical', got {spec!r}")
+        raise SystemExit(
+            "error: --compare supports 'flat,hierarchical' or "
+            f"'flat,hierarchical2,hierarchical3', got {spec!r}"
+        )
     n_emit, cap = 2048, 4096
     flat, hier, mesh = _hier_pair(1, 8, n_emit, cap)
     flat_us = _time_fwd(flat, mesh, n_emit, cap, iters=10)
@@ -382,6 +599,8 @@ SECTIONS = [
     ("sort_cost", sort_cost),
     ("fwd_walltime", fwd_walltime),
     ("fwd_walltime_hier", fwd_walltime_hier),
+    ("fwd_walltime_hier3", fwd_walltime_hier3),
+    ("rebalance_skew", rebalance_skew),
     ("sort_throughput", sort_throughput),
     ("app_rates", app_rates),
     ("moe_dispatch", moe_dispatch),
@@ -415,10 +634,13 @@ def main(argv=None) -> None:
                     help=f"fast subset only: {', '.join(SMOKE_SECTIONS)}")
     ap.add_argument("--only", metavar="SUBSTR", default=None,
                     help="run only sections whose name contains SUBSTR")
-    ap.add_argument("--compare", metavar="A,B", default=None,
+    ap.add_argument("--compare", metavar="A,B[,C]", default=None,
                     help="regression gate: 'flat,hierarchical' times both "
                          "exchanges on a single-node mesh and exits nonzero "
-                         "if hierarchical regresses flat by >5%%")
+                         "if hierarchical regresses flat by >5%%; "
+                         "'flat,hierarchical2,hierarchical3' runs the "
+                         "(2,2,2)-mesh sweep + rebalance_skew and gates on "
+                         "the modeled slowest-tier bytes")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")

@@ -156,7 +156,9 @@ def render_forwarding(
     ds = _delta_s(part, scene)
     hw = scene.width * scene.height
     cap = max(256, hw)
-    cfg = ForwardConfig(AXIS, R, cap, peer_capacity=cap, exchange=exchange)
+    # peer slots only exist for the padded exchange (ragged/onehot reject it)
+    slots = {"peer_capacity": cap} if exchange == "padded" else {}
+    cfg = ForwardConfig(AXIS, R, cap, exchange=exchange, **slots)
 
     round_fn = partial(_round_fn, part=part, blobs=blobs, ds=ds, cap=cap)
 

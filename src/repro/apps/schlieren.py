@@ -141,7 +141,9 @@ def render(
     ds = part.width / scene.samples_per_slab
     hw = scene.width * scene.height
     cap = max(256, hw)
-    cfg = ForwardConfig(AXIS, R, cap, peer_capacity=cap, exchange=exchange)
+    # peer slots only exist for the padded exchange (ragged/onehot reject it)
+    slots = {"peer_capacity": cap} if exchange == "padded" else {}
+    cfg = ForwardConfig(AXIS, R, cap, exchange=exchange, **slots)
     right, up = _camera_axes()
 
     round_fn = partial(

@@ -88,7 +88,9 @@ def run(
     R = mesh.shape[AXIS]
     n = cfg.num_particles
     cap = max(64, n)
-    fcfg = ForwardConfig(AXIS, R, cap, peer_capacity=cap, exchange=exchange)
+    # peer slots only exist for the padded exchange (ragged/onehot reject it)
+    slots = {"peer_capacity": cap} if exchange == "padded" else {}
+    fcfg = ForwardConfig(AXIS, R, cap, exchange=exchange, **slots)
 
     def step_kernel(pos):
         if use_pallas_rk4:

@@ -228,8 +228,10 @@ def render(
     # "it was always possible to compute an upper bound ... so queues could be
     # sized accordingly" — for a pinhole camera that bound is all rays.
     cap = max(256, hw)
+    # peer slots only exist for the padded exchange (ragged/onehot reject it)
+    slots = {"peer_capacity": cap} if exchange == "padded" else {}
     cfg = ForwardConfig(
-        AXIS, R, cap, peer_capacity=cap, exchange=exchange, use_pallas=use_pallas
+        AXIS, R, cap, exchange=exchange, use_pallas=use_pallas, **slots
     )
     key = jax.random.PRNGKey(scene.seed)
 

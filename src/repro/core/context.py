@@ -29,7 +29,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro import compat
 from repro.core import queue as Q
 from repro.core import termination as term
-from repro.core.forwarding import ForwardConfig, forward_work
+from repro.core.forwarding import ForwardConfig, flatten_axis_names, forward_work
 from repro.core.types import item_nbytes
 
 __all__ = ["RafiContext"]
@@ -39,7 +39,7 @@ def _axis_size(mesh: Mesh, axis_name) -> int:
     if isinstance(axis_name, (tuple, list)):
         n = 1
         for a in axis_name:
-            n *= mesh.shape[a]
+            n *= _axis_size(mesh, a)  # an entry may be a joint tier (tuple)
         return n
     return mesh.shape[axis_name]
 
@@ -60,14 +60,21 @@ class RafiContext:
         use_pallas: bool = False,
         fast_size: int = 0,
         node_capacity: int = 0,
+        level_sizes=(),
+        level_capacities=(),
     ):
         self.mesh = mesh
         self.proto = proto
         self.item_nbytes = item_nbytes(proto)
-        if exchange == "hierarchical" and fast_size <= 0 and isinstance(
-            axis_name, (tuple, list)
-        ) and len(axis_name) == 2:
-            fast_size = mesh.shape[axis_name[1]]  # derive from the bound mesh
+        if (
+            exchange == "hierarchical"
+            and not level_sizes
+            and fast_size <= 0
+            and isinstance(axis_name, (tuple, list))
+        ):
+            # derive one rank count per tier from the bound mesh (a tier may
+            # itself be a tuple of mesh axes — one joint fabric)
+            level_sizes = tuple(_axis_size(mesh, a) for a in axis_name)
         self.cfg = ForwardConfig(
             axis_name=axis_name,
             num_ranks=_axis_size(mesh, axis_name),
@@ -78,8 +85,12 @@ class RafiContext:
             use_pallas=use_pallas,
             fast_size=fast_size,
             node_capacity=node_capacity,
+            level_sizes=tuple(level_sizes),
+            level_capacities=tuple(level_capacities),
         )
-        self._spec = P(axis_name)
+        # PartitionSpec entries cannot nest: a joint-tier axis_name like
+        # (("pod", "node"), "device") shards dim 0 over the flattened axes
+        self._spec = P(flatten_axis_names(axis_name))
 
     # -- queue construction -------------------------------------------------
     @property

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import types as T
-from repro.core.forwarding import ForwardConfig
+from repro.core.forwarding import ForwardConfig, flatten_axis_names
 from repro.core.queue import DISCARD, WorkQueue, enqueue, make_queue
 
 __all__ = ["cycle_step", "deliver_by_cycling"]
@@ -29,15 +29,16 @@ __all__ = ["cycle_step", "deliver_by_cycling"]
 def _ring_permute(x: jax.Array, axis_name, num_ranks: int) -> jax.Array:
     """One hop of the node-major ring: ONE ``collective_permute``.
 
-    ``axis_name`` may be a single flat axis or a ``(slow, fast)`` tuple.  On
-    a 2-D mesh the linearised rank order is node-major, so the ring's
-    source-target pairs are fast-axis (intra-node) hops everywhere except the
-    ``num_nodes`` pairs that wrap a node boundary — those are the only hops
-    routed over the slow inter-node fabric.  One collective, no payload bytes
-    crossing the slow axis from non-boundary ranks.
+    ``axis_name`` may be a single flat axis or a ``(slowest, …, fastest)``
+    tuple (entries may themselves be joint-tier tuples).  On a multi-tier
+    mesh the linearised rank order is lexicographic (node-major), so the
+    ring's source-target pairs are fastest-axis (intra-node) hops everywhere
+    except the pairs that wrap a group boundary — those are the only hops
+    routed over a slower fabric.  One collective, no payload bytes crossing
+    the slow tiers from non-boundary ranks.
     """
     perm = [(i, (i + 1) % num_ranks) for i in range(num_ranks)]
-    return jax.lax.ppermute(x, axis_name, perm)
+    return jax.lax.ppermute(x, flatten_axis_names(axis_name), perm)
 
 
 def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, WorkQueue]:
@@ -53,7 +54,7 @@ def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig) -> Tuple[W
     Returns ``(in_flight_queue_after_hop, absorbed_queue)``; both fixed
     capacity.  Must run inside shard_map.
     """
-    me = jax.lax.axis_index(cfg.axis_name)
+    me = jax.lax.axis_index(flatten_axis_names(cfg.axis_name))
     lane = jnp.arange(q.capacity)
     valid = lane < q.count
     mine = valid & (q.dest == me)
@@ -100,5 +101,5 @@ def deliver_by_cycling(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax
         body,
         (_vary(q, cfg.axis_name), _vary(absorbed, cfg.axis_name)),
     )
-    total = jax.lax.psum(absorbed.count, cfg.axis_name)
+    total = jax.lax.psum(absorbed.count, flatten_axis_names(cfg.axis_name))
     return absorbed, total

@@ -13,34 +13,45 @@ Collective budget per ``forward_work`` round (guarded by
 ``tests/test_collective_budget.py``):
 
   payload   1 × all_to_all (padded) / 1 × ragged_all_to_all (ragged) /
-            2 × all_to_all (hierarchical: one per mesh axis — see below)
+            1 × all_to_all PER MESH AXIS (hierarchical — see below)
   counts    1 × all_to_all of per-peer counts (padded) /
             1 × all_gather of the (R,) send-count vector (ragged — every rank
             reconstructs the full R×R count matrix locally and derives ALL
             offsets/clamps without further communication, replacing the three
             chained count all-to-alls of the naive Alltoallv control plane) /
-            2 × tiny all_to_all (hierarchical: one per mesh axis)
+            1 × tiny all_to_all PER MESH AXIS (hierarchical)
 
-The ``(slow, fast)`` contract (hierarchical backend): ``axis_name`` is a
-2-tuple of mesh axis names, slow first — e.g. ``("node", "device")`` where
-"node" spans the inter-node (DCN-class) fabric and "device" the fast
-intra-node fabric (ICI/NVLink).  Global ranks are node-major
-(``rank = node * fast_size + lane``, i.e. ``jax.lax.axis_index((slow,
-fast))``), and the round runs in two stages:
+The N-level contract (hierarchical backend): ``axis_name`` is a tuple of
+mesh axis names ordered slowest fabric first — e.g. ``("pod", "node",
+"device")`` where "pod" spans the DCN, "node" the inter-host fabric, and
+"device" the fast intra-node ICI/NVLink (an entry may itself be a tuple of
+mesh axes treated as one joint tier).  ``level_sizes`` gives the rank count
+per tier; global ranks are lexicographic in the tier digits (slowest-major —
+"node-major" in the 2-level case), i.e. ``jax.lax.axis_index(flattened
+axes)``.  The round is dimension-ordered routing over the padded wire
+format, FASTEST axis first:
 
-  stage A  one padded all_to_all over the FAST axis: each rank ships, per
-           fast peer ``f``, the node-major concatenation of its (dest_node,
-           dest_lane == f) sub-segments.  Afterwards rank ``(n, f)`` holds
-           exactly the rows of node ``n`` bound for its "column" — lane ``f``
-           of every destination node — already grouped per node.
-  stage B  ONE padded all_to_all over the SLOW axis: the per-node aggregated
-           segments (``node_capacity`` rows each) move inter-node in a single
-           collective; a local unpermute delivers final placement.
+  stage l  (for l = L-1 … 0, extent-1 tiers skipped) one padded all_to_all
+           over axis ``l``: each rank ships, per peer ``j`` on that axis, the
+           concatenation of its sub-segments whose destination digit
+           ``d_l == j``, in buffer order.  After the stage, every item sits
+           on a rank whose digit ``l`` equals its destination's digit —
+           slower stages never revisit the faster fabric.
 
-All bulk bytes cross the slow fabric exactly once, and the slow-axis padding
-is per-NODE segment, not per-rank slot — with R ranks over N nodes that is an
-R/N× reduction in worst-case slow-link padding waste versus routing the flat
-padded exchange across nodes.
+The routing invariant (proved inductively; property-tested against the
+``onehot`` oracle): before stage ``l`` the buffer is ordered lexicographically
+by ``(s_{l+1}, …, s_{L-1}, d_0, …, d_l)`` — provenance digits of the already
+routed tiers first, then the remaining destination digits.  Gathering each
+peer's sub-segments in buffer order and concatenating received blocks in
+source-digit order preserves it, so after the final stage items sit in global
+source-rank order — bit-identical placement to the flat backends.
+
+Bulk bytes cross each fabric tier exactly once, and padding at tier ``l`` is
+per aggregated SEGMENT (``level_capacities[l]`` rows per peer on that axis),
+not per rank: with R ranks over N slowest-tier groups that is an R/N×
+reduction in worst-case slow-link padding versus routing the flat padded
+exchange across the whole mesh.  The 2-level ``(slow, fast)`` route of PR 2
+is exactly the L=2 instance.
 
 Four interchangeable backends, all called *inside* ``shard_map`` with a
 bound mesh axis:
@@ -54,10 +65,10 @@ bound mesh axis:
   a single tiled ``all_to_all`` of the packed buffer.  Portable (runs on
   CPU; used by the dry-run compile) at the cost of padding bandwidth.  This
   is also the natural MoE-dispatch form (capacity-factor semantics).
-* ``hierarchical`` — the two-stage padded exchange over a 2-D ``(slow,
-  fast)`` mesh described above: fast-axis combine, then one slow-axis
-  collective.  Placement is bit-identical to the flat backends (node-major
-  rank order is preserved end to end).
+* ``hierarchical`` — the N-stage padded exchange over an N-D ``(slowest, …,
+  fastest)`` mesh described above: per-tier combine from the fastest axis
+  inward, one collective per axis.  Placement is bit-identical to the flat
+  backends (lexicographic rank order is preserved end to end).
 * ``onehot`` — an all-gather reference oracle with a deliberately different
   code path, used only by tests.
 
@@ -249,34 +260,33 @@ def _subsegment_gather(
 
 def exchange_hierarchical(
     packed: jax.Array,  # (C, W) uint32 — UNSORTED packed payload
-    perm: jax.Array,  # (C,) node-major destination-sort permutation
-    send_counts: jax.Array,  # (R,) valid-destination counts, node-major
+    perm: jax.Array,  # (C,) lexicographic destination-sort permutation
+    send_counts: jax.Array,  # (R,) valid-destination counts, slowest-major
     *,
-    axis_name,  # (slow, fast) mesh axis names
+    axis_name,  # (slowest, …, fastest) mesh axis names, one per tier
     num_ranks: int,
     capacity: int,
-    peer_capacity: int,  # stage-A rows per fast-axis peer slot
-    node_capacity: int,  # stage-B rows per destination-node segment
-    fast_size: int,
+    level_sizes: Tuple[int, ...],  # ranks per tier, slowest first
+    level_capacities: Tuple[int, ...],  # padded rows per peer segment, per tier
     use_pallas: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Two-stage packed exchange over a 2-D ``(slow, fast)`` mesh.
+    """N-stage packed exchange over an N-D ``(slowest, …, fastest)`` mesh.
 
-    Stage A combines traffic within the fast axis (rank ``(n, f)`` ends up
-    holding node ``n``'s rows bound for lane ``f`` of every node, grouped per
-    node); stage B moves the aggregated per-node segments with ONE padded
-    collective over the slow axis; a local unpermute delivers final placement
-    in node-major source order — bit-identical to the flat backends.
+    Dimension-ordered routing, fastest axis first: stage ``l`` combines
+    traffic within axis ``l`` so every item lands on a rank whose digit ``l``
+    equals its destination's — slower stages re-exchange only aggregated,
+    already-packed segments, and bulk bytes cross each fabric tier exactly
+    once, padded per peer SEGMENT at that tier (``level_capacities[l]``
+    rows), never per rank.
 
-    Budget: 2 payload collectives + 2 count collectives per round; bulk bytes
-    cross the slow axis exactly once, padded per NODE (``node_capacity``
-    rows), never per rank.  Returns ``(recv_packed, recv_node_counts, total,
-    drops)`` — counts are per *source node* (the slow-axis peers), unlike the
-    flat backends' per-rank counts.
+    Budget: one payload + one count collective per mesh axis; extent-1 axes
+    skip their stage entirely (so a single-node mesh degenerates to
+    flat-exchange cost parity).  Returns ``(recv_packed, recv_counts, total,
+    drops)`` — counts are per *source group* of the slowest non-trivial axis,
+    unlike the flat backends' per-rank counts.
     """
-    slow_ax, fast_ax = axis_name
-    F, S_a, S_b = fast_size, peer_capacity, node_capacity
-    N = num_ranks // F
+    level_sizes = tuple(int(a) for a in level_sizes)
+    R = num_ranks
     C, W = packed.shape
 
     def gather(buf, rows, n_slots, slot):
@@ -286,66 +296,59 @@ def exchange_hierarchical(
             return marshal_ops.fused_marshal(buf, rows, num_ranks=n_slots, slot=slot)
         return jnp.take(buf, rows, axis=0).reshape(n_slots, slot, W)
 
-    cnt = send_counts.reshape(N, F)  # [dest_node, dest_lane]
-    off = (jnp.cumsum(send_counts) - send_counts).reshape(N, F)  # sorted-order starts
+    # Sub-segment state, always exactly R entries: counts and buffer offsets
+    # in the current buffer order (initially the sorted destination order,
+    # digits slowest-major).  Each stage reinterprets the vector as
+    # (rest, A_l) — its peer digit is the fastest-varying non-trivial field —
+    # and afterwards prepends the source digit: (A_l, rest) flattened.
+    cnt = send_counts
+    base = jnp.cumsum(cnt) - cnt
+    buf, n_rows, via_perm = packed, C, True
+    drops = jnp.zeros((), send_counts.dtype)
 
-    # ---- stage A: fast-peer slot f = node-major sub-segments (n, f)
-    if F == 1:
-        # degenerate fast axis: stage A is the identity — no clamp, no
-        # collective, no payload pass.  The sort permutation is composed
-        # straight into the stage-B gather below instead.
-        rcv_a = cnt.T  # (1, N)
-        in_starts = off.T
-        stage_b_rows = lambda pos: jnp.take(perm, jnp.clip(pos, 0, C - 1))
-        flat_a = packed
-        drops_a = jnp.zeros((), send_counts.dtype)
-    else:
-        allowed_a, starts_a = _clamp_subsegments(cnt, S_a)  # both (N, F)
-        drops_a = jnp.sum(cnt - allowed_a)
-        sortedpos = _subsegment_gather(allowed_a, starts_a, off, S_a)  # (F, S_a)
-        src_a = jnp.take(perm, jnp.clip(sortedpos, 0, C - 1).reshape(-1))
-        send_a = gather(packed, src_a, F, S_a)
-        # count collective 1 (fast axis): per-dest-node survivor counts, so
+    stages = [l for l in reversed(range(len(level_sizes))) if level_sizes[l] > 1]
+    if not stages:
+        # 1-rank mesh: the round is a local compaction — no collectives
+        allowed = jnp.minimum(cnt, capacity)
+        rows = jnp.take(perm, jnp.clip(jnp.arange(capacity), 0, C - 1))
+        out = gather(packed, rows, 1, capacity)[0]
+        return out, allowed, allowed[0], jnp.sum(cnt - allowed)
+
+    for i, l in enumerate(stages):
+        A, S = level_sizes[l], level_capacities[l]
+        cnt2d = cnt.reshape(R // A, A)  # rows: buffer order, cols: peer digit
+        allowed, starts = _clamp_subsegments(cnt2d, S)
+        drops = drops + jnp.sum(cnt2d - allowed)
+        pos = _subsegment_gather(allowed, starts, base.reshape(R // A, A), S)
+        if via_perm:
+            # first non-trivial stage: compose the sort permutation straight
+            # into the send gather — the payload's single read of the round
+            rows = jnp.take(perm, jnp.clip(pos, 0, C - 1).reshape(-1))
+        else:
+            rows = jnp.clip(pos, 0, n_rows - 1).reshape(-1)
+        send = gather(buf, rows, A, S)
+
+        if i == len(stages) - 1:
+            # final stage: per-source-group totals suffice — blocks are
+            # contiguous prefixes, compacted straight into the receive queue
+            recv_counts = _a2a(jnp.sum(allowed, axis=0)[:, None], axis_name[l])
+            recv_counts = recv_counts.reshape(-1)
+            recv = _a2a(send, axis_name[l])
+            out, new_count, recv_drops = _compact_blocks(
+                recv, recv_counts, capacity, use_pallas=use_pallas
+            )
+            return out, recv_counts, new_count, drops + recv_drops
+
+        # count collective for axis l: per-sub-segment survivor counts, so
         # the receiver can address every sub-segment of each incoming block
-        rcv_a = _a2a(allowed_a.T, fast_ax)  # (F, N): from src lane f, for node n
-        recv_a = _a2a(send_a, fast_ax)  # payload collective 1 (fast axis)
-        in_starts = jnp.cumsum(rcv_a, axis=1) - rcv_a  # (F, N) offsets in block f
-        in_starts = in_starts + jnp.arange(F, dtype=jnp.int32)[:, None] * S_a
-        stage_b_rows = lambda pos: jnp.clip(pos, 0, F * S_a - 1)
-        flat_a = recv_a.reshape(F * S_a, W)
-
-    # ---- stage B: node slot n = lane-major sub-segments out of stage A
-    if N == 1:
-        # degenerate slow axis: stage B is the identity — clamp at receiver
-        # capacity and compact straight out of the stage-A buffer (this keeps
-        # the single-node cost at flat-exchange parity, the --compare gate)
-        allowed_b, starts_b = _clamp_subsegments(rcv_a, capacity)
-        drops_b = jnp.sum(rcv_a - allowed_b)
-        src_b = stage_b_rows(
-            _subsegment_gather(allowed_b, starts_b, in_starts, capacity).reshape(-1)
-        )
-        out = gather(flat_a, src_b, 1, capacity)[0]
-        recv_counts = jnp.sum(allowed_b)[None]
-        return out, recv_counts, recv_counts[0], drops_a + drops_b
-
-    allowed_b, starts_b = _clamp_subsegments(rcv_a, S_b)  # both (F, N)
-    drops_b = jnp.sum(rcv_a - allowed_b)
-    src_b = stage_b_rows(
-        _subsegment_gather(allowed_b, starts_b, in_starts, S_b).reshape(-1)
-    )
-    send_b = gather(flat_a, src_b, N, S_b)
-
-    # count collective 2 (slow axis) + payload collective 2 (slow axis): the
-    # ONLY bulk bytes crossing the inter-node fabric, padded per node
-    recv_counts = _a2a(jnp.sum(allowed_b, axis=0)[:, None], slow_ax).reshape(-1)
-    recv_b = _a2a(send_b, slow_ax)
-
-    # Compact: blocks arrive node-major, sub-segments lane-major inside each —
-    # global source-rank order, so placement matches the flat backends.
-    out, new_count, recv_drops = _compact_blocks(
-        recv_b, recv_counts, capacity, use_pallas=use_pallas
-    )
-    return out, recv_counts, new_count, drops_a + drops_b + recv_drops
+        rcv = _a2a(allowed.T, axis_name[l])  # (A, R//A): [src digit, sub-seg]
+        recv = _a2a(send, axis_name[l])  # payload collective for axis l
+        cnt = rcv.reshape(-1)  # new buffer order: (s_l, previous order − d_l)
+        base = (
+            jnp.cumsum(rcv, axis=1) - rcv
+            + jnp.arange(A, dtype=jnp.int32)[:, None] * S
+        ).reshape(-1)
+        buf, n_rows, via_perm = recv.reshape(A * S, W), A * S, False
 
 
 def exchange_ragged(

@@ -37,7 +37,7 @@ from repro.core import sorting as S
 from repro.core import types as T
 from repro.core.queue import DISCARD, WorkQueue
 
-__all__ = ["ForwardConfig", "forward_work"]
+__all__ = ["ForwardConfig", "flatten_axis_names", "forward_work"]
 
 _EXCHANGES = {
     "padded": X.exchange_padded,
@@ -47,29 +47,50 @@ _EXCHANGES = {
 }
 
 
+def flatten_axis_names(axis_name) -> Tuple[Any, ...]:
+    """``axis_name`` as a flat tuple of plain mesh axis names.
+
+    Hierarchical configs may group several mesh axes into one tier
+    (``axis_name=(("pod", "node"), "device")``); collectives that span the
+    whole joint axis (``psum``/``all_gather``/``axis_index``) need the
+    flattened form.
+    """
+    if not isinstance(axis_name, (tuple, list)):
+        return (axis_name,)
+    out = []
+    for a in axis_name:
+        out.extend(a if isinstance(a, (tuple, list)) else (a,))
+    return tuple(out)
+
+
 @dataclasses.dataclass(frozen=True)
 class ForwardConfig:
     """Static configuration of a forwarding context.
 
     Attributes:
       axis_name: mesh axis (or tuple of axes) the queue is distributed over.
-        The hierarchical exchange requires a 2-tuple ``(slow, fast)`` — slow
-        (inter-node) axis first; every other backend accepts a single axis or
-        a tuple treated as one joint flat axis.
+        The hierarchical exchange takes a tuple of ≥2 tiers ordered slowest
+        fabric first — e.g. ``("node", "device")`` or ``("pod", "node",
+        "device")``; an entry may itself be a tuple of mesh axes treated as
+        one joint tier.  Every other backend accepts a single axis or a tuple
+        treated as one joint flat axis.
       num_ranks: number of shards on that axis (R).
       capacity: per-rank queue capacity (paper: ``resizeRayQueues(N)``).
-      peer_capacity: per-peer slot rows for the padded send buffer.  The
-        default accounts for the backend's true fan-out: the flat padded
-        exchange fans out to R per-rank slots (2·ceil(C/R) rows each), the
-        hierarchical stage-A exchange to ``fast_size`` fast-axis peers
-        (2·ceil(C/fast_size) rows each).
-      node_capacity: hierarchical only — stage-B rows per destination-node
-        segment (the slow axis fans out to R/fast_size per-NODE segments;
-        default 2·ceil(C/num_nodes)).
-      fast_size: hierarchical only — number of ranks on the fast axis (must
-        divide num_ranks; num_ranks // fast_size is the node count).
+      peer_capacity: padded exchange only — per-peer slot rows for the send
+        buffer (default 2·ceil(C/R): the flat fan-out is R per-rank slots).
+        For hierarchical configs this field mirrors ``level_capacities[-1]``
+        (the fastest tier) and may be passed as a legacy alias for it.
+      level_sizes: hierarchical only — ranks per mesh tier, slowest first;
+        must multiply to ``num_ranks``.  For 2-level configs it may be given
+        via the legacy ``fast_size`` alias instead.
+      level_capacities: hierarchical only — stage-``l`` padded rows per peer
+        segment on tier ``l`` (default 2·ceil(C/level_sizes[l]) each: the
+        tier-``l`` fan-out is ``level_sizes[l]`` aggregated segments).
+      fast_size: legacy 2-level alias, mirrors ``level_sizes[-1]``.
+      node_capacity: legacy 2-level alias, mirrors ``level_capacities[0]``
+        (the slowest tier's per-segment rows).
       exchange: "ragged" (TPU production) | "padded" (portable) |
-        "hierarchical" (two-stage, 2-D meshes) | "onehot" (test oracle).
+        "hierarchical" (N-stage, N-D meshes) | "onehot" (test oracle).
       sort_method: "pack" (paper-faithful packed keys) | "argsort".
       use_pallas: route the key-sort and the fused pack+permute marshal
         through the Pallas kernels (``kernels/sort_keys``, ``kernels/marshal``).
@@ -84,52 +105,131 @@ class ForwardConfig:
     use_pallas: bool = False
     fast_size: int = 0
     node_capacity: int = 0
+    level_sizes: Tuple[int, ...] = ()
+    level_capacities: Tuple[int, ...] = ()
 
     def __post_init__(self):
         if self.exchange not in _EXCHANGES:
             raise ValueError(f"unknown exchange {self.exchange!r}")
-        n_axes = (
-            len(self.axis_name)
-            if isinstance(self.axis_name, (tuple, list))
-            else 1
-        )
+        if self.sort_method not in ("pack", "argsort"):
+            raise ValueError(f"unknown sort_method {self.sort_method!r}")
+        if self.num_ranks <= 0 or self.capacity <= 0:
+            raise ValueError(
+                f"num_ranks ({self.num_ranks}) and capacity ({self.capacity}) "
+                "must be positive"
+            )
         if self.exchange == "hierarchical":
-            if n_axes != 2:
+            self._init_hierarchical()
+            return
+        # Flat backends ignore the hierarchical fields; passing them is a
+        # config bug (the caller expects topology routing they won't get).
+        for field in ("fast_size", "node_capacity", "level_sizes", "level_capacities"):
+            if getattr(self, field):  # 0 and () are both falsy
                 raise ValueError(
-                    "hierarchical exchange routes over a 2-D mesh and needs "
-                    f"axis_name=(slow, fast), e.g. ('node', 'device'); got "
-                    f"{self.axis_name!r} ({n_axes} axis/axes)"
+                    f"{field} only applies to exchange='hierarchical'; the "
+                    f"{self.exchange!r} exchange routes over one flat axis "
+                    "and would silently ignore it"
                 )
-            if self.fast_size <= 0:
-                raise ValueError(
-                    "hierarchical exchange needs fast_size > 0 (the number of "
-                    "ranks on the fast mesh axis)"
-                )
-            if self.num_ranks % self.fast_size:
-                raise ValueError(
-                    f"fast_size {self.fast_size} must divide num_ranks "
-                    f"{self.num_ranks} (ranks are node-major over (slow, fast))"
-                )
-            num_nodes = self.num_ranks // self.fast_size
-            if self.peer_capacity <= 0:
-                # stage-A fan-out: fast_size per-lane slots, not R per-rank ones
-                object.__setattr__(
-                    self, "peer_capacity",
-                    max(1, -(-self.capacity // self.fast_size) * 2),
-                )
-            if self.node_capacity <= 0:
-                # stage-B fan-out: per-NODE segments over the slow axis
-                object.__setattr__(
-                    self, "node_capacity",
-                    max(1, -(-self.capacity // num_nodes) * 2),
-                )
-        elif self.exchange == "padded":
+        if self.exchange == "padded":
             if self.peer_capacity <= 0:
                 # flat fan-out: R per-rank slots
                 object.__setattr__(
                     self, "peer_capacity",
                     max(1, -(-self.capacity // self.num_ranks) * 2),
                 )
+        elif self.peer_capacity:
+            # ragged segments are contiguous (no slots); onehot gathers all
+            raise ValueError(
+                f"peer_capacity does not apply to exchange={self.exchange!r} "
+                "(no padded per-peer slots exist there) and would be "
+                "silently ignored"
+            )
+
+    def _init_hierarchical(self):
+        n_axes = (
+            len(self.axis_name)
+            if isinstance(self.axis_name, (tuple, list))
+            else 1
+        )
+        if n_axes < 2:
+            raise ValueError(
+                "hierarchical exchange routes over a multi-tier mesh and "
+                "needs axis_name=(slowest, …, fastest), e.g. "
+                f"('node', 'device'); got {self.axis_name!r} ({n_axes} axis)"
+            )
+        sizes = tuple(int(a) for a in self.level_sizes)
+        if sizes:
+            if len(sizes) != n_axes:
+                raise ValueError(
+                    f"level_sizes {sizes} must give one rank count per "
+                    f"axis_name tier ({n_axes} tiers: {self.axis_name!r})"
+                )
+            prod = 1
+            for a in sizes:
+                if a < 1:
+                    raise ValueError(f"level_sizes entries must be >= 1, got {sizes}")
+                prod *= a
+            if prod != self.num_ranks:
+                raise ValueError(
+                    f"level_sizes {sizes} multiply to {prod}, not num_ranks "
+                    f"{self.num_ranks}"
+                )
+            if self.fast_size and self.fast_size != sizes[-1]:
+                raise ValueError(
+                    f"fast_size {self.fast_size} contradicts level_sizes "
+                    f"{sizes} (it aliases the fastest tier, {sizes[-1]})"
+                )
+        else:
+            if n_axes != 2:
+                raise ValueError(
+                    f"a {n_axes}-level hierarchical exchange needs "
+                    "level_sizes=(slowest, …, fastest) — fast_size alone only "
+                    "determines a 2-level (slow, fast) split"
+                )
+            if self.fast_size <= 0:
+                raise ValueError(
+                    "hierarchical exchange needs level_sizes (or the 2-level "
+                    "fast_size alias: the number of ranks on the fast mesh axis)"
+                )
+            if self.num_ranks % self.fast_size:
+                raise ValueError(
+                    f"fast_size {self.fast_size} must divide num_ranks "
+                    f"{self.num_ranks} (ranks are node-major over (slow, fast))"
+                )
+            sizes = (self.num_ranks // self.fast_size, self.fast_size)
+
+        caps = tuple(int(c) for c in self.level_capacities)
+        if caps and len(caps) != len(sizes):
+            raise ValueError(
+                f"level_capacities {caps} must give one segment size per "
+                f"tier ({len(sizes)} tiers)"
+            )
+        if not caps:
+            # tier-l fan-out: level_sizes[l] aggregated segments, 2× headroom
+            caps = tuple(max(1, -(-self.capacity // a) * 2) for a in sizes)
+            if self.peer_capacity > 0:  # legacy alias: fastest tier
+                caps = caps[:-1] + (self.peer_capacity,)
+            if self.node_capacity > 0:  # legacy alias: slowest tier
+                caps = (self.node_capacity,) + caps[1:]
+        else:
+            if any(c < 1 for c in caps):
+                raise ValueError(f"level_capacities entries must be >= 1, got {caps}")
+            if self.peer_capacity and self.peer_capacity != caps[-1]:
+                raise ValueError(
+                    f"peer_capacity {self.peer_capacity} contradicts "
+                    f"level_capacities {caps} (it aliases the fastest tier)"
+                )
+            if self.node_capacity and self.node_capacity != caps[0]:
+                raise ValueError(
+                    f"node_capacity {self.node_capacity} contradicts "
+                    f"level_capacities {caps} (it aliases the slowest tier)"
+                )
+        object.__setattr__(self, "level_sizes", sizes)
+        object.__setattr__(self, "level_capacities", caps)
+        # keep the legacy aliases live so 2-level callers read either form
+        object.__setattr__(self, "fast_size", sizes[-1])
+        object.__setattr__(self, "peer_capacity", caps[-1])
+        object.__setattr__(self, "node_capacity", caps[0])
 
 
 def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array]:
@@ -140,19 +240,29 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array
     ranks after the exchange, used for distributed-termination detection.
     """
     R = cfg.num_ranks
-    if cfg.use_pallas:
+    if cfg.exchange == "hierarchical":
+        # Lexicographic N-level keys: ONE sort yields every stage permutation.
+        # The Pallas path is routed explicitly through kernels/sort_keys (the
+        # flat packed key sorts identically because ranks are lexicographic
+        # in the tier digits) — it must never silently fall back to the flat
+        # branch below, which would skip the level-shaped count tensor.
+        if cfg.use_pallas:
+            from repro.kernels.sort_keys import ops as sk_ops
+
+            perm, count_tensor = sk_ops.sort_permutation_hierarchical(
+                q.dest, q.count, cfg.level_sizes
+            )
+        else:
+            perm, count_tensor = S.sort_permutation_hierarchical(
+                q.dest, q.count, cfg.level_sizes, method=cfg.sort_method
+            )
+        send_counts = count_tensor.reshape(-1)
+    elif cfg.use_pallas:
         from repro.kernels.sort_keys import ops as sk_ops
 
         perm, sorted_dest, send_counts = sk_ops.sort_permutation(q.dest, q.count, R)
         send_counts = send_counts[:R]
         del sorted_dest  # segments are fully described by the histogram
-    elif cfg.exchange == "hierarchical":
-        # node-major two-level keys: ONE sort yields both stage permutations
-        perm, count_matrix = S.sort_permutation_hierarchical(
-            q.dest, q.count, R // cfg.fast_size, cfg.fast_size,
-            method=cfg.sort_method,
-        )
-        send_counts = count_matrix.reshape(-1)
     else:
         perm, sorted_dest, send_counts = S.sort_permutation(
             q.dest, q.count, R, method=cfg.sort_method
@@ -166,11 +276,14 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array
         axis_name=cfg.axis_name,
         num_ranks=R,
         capacity=cfg.capacity,
-        peer_capacity=cfg.peer_capacity,
         use_pallas=cfg.use_pallas,
     )
     if cfg.exchange == "hierarchical":
-        kwargs.update(fast_size=cfg.fast_size, node_capacity=cfg.node_capacity)
+        kwargs.update(
+            level_sizes=cfg.level_sizes, level_capacities=cfg.level_capacities
+        )
+    else:
+        kwargs.update(peer_capacity=cfg.peer_capacity)
     fn = _EXCHANGES[cfg.exchange]
     recv_packed, recv_counts, new_count, drops = fn(packed, perm, send_counts, **kwargs)
     del recv_counts
@@ -183,5 +296,5 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array
     )
     # §4.2.3: "a final MPI reduce-add on the number of rays received" —
     # the global in-flight total for distributed termination.
-    total = jax.lax.psum(new_q.count, cfg.axis_name)
+    total = jax.lax.psum(new_q.count, flatten_axis_names(cfg.axis_name))
     return new_q, total

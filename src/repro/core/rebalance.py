@@ -6,58 +6,238 @@ that, *using the forwarding machinery itself*: given a (possibly wildly
 imbalanced) per-rank queue population, compute a balanced target layout and
 re-destination the surplus so one ``forward_work`` round equalises load.
 
-Strategy (deterministic, collective-free planning):
-  * global layout via ``all_gather`` of per-rank counts (R ints — tiny);
+Flat strategy (deterministic, collective-free planning):
+  * global layout via ``all_gather`` of per-rank resident counts (R ints);
   * target per rank = ceil(total / R);
-  * ranks are laid out on a virtual line of cumulative counts; item ``j`` of
-    the global order moves to rank ``j // target`` — an order-preserving
-    balanced re-assignment (comparable to work-stealing, but oblivious and
-    single-round, which suits a lock-step SPMD machine).
+  * ranks are laid out on a virtual line of cumulative counts; resident item
+    ``j`` of the global order moves to rank ``j // target`` — an
+    order-preserving balanced re-assignment (comparable to work-stealing,
+    but oblivious and single-round, which suits a lock-step SPMD machine).
+
+Topology-aware strategy (``exchange="hierarchical"`` configs): locality-aware
+placement — keep traffic on the fast fabric, cross the slow links only with
+true surplus.  The plan first equalises within each fastest-axis group (the
+"node"), then moves ONLY each group's surplus/deficit across the slower
+tiers:
+
+  * groups of ``F = level_sizes[-1]`` ranks keep up to the balanced group
+    quota ``ceil(total / num_groups)`` of their own residents, spread
+    order-preservingly over their lanes;
+  * each group's surplus beyond the quota fills other groups' deficits in
+    group order — so a skew confined to one node produces zero cross-node
+    item movement, and a cross-node skew moves exactly the surplus.
+
+``scope="intra"`` restricts both the plan AND the forwarding round to the
+fastest tier: every collective (the count all_gather, the payload exchange)
+binds to the fast axis only, so the lowered program ships ZERO payload bytes
+over any slower fabric — the right tool when skew is known to be node-local
+(guarded by ``tests/test_core_rebalance.py`` via the per-tier collective
+accounting of ``roofline.analysis``).  Pending items addressed within the
+group are delivered (their global rank translates to a fast-axis lane);
+pending items addressed across groups cannot ride a fast-axis-only round and
+stay in the local queue, destination intact, for a later global round.
 
 Items whose destination is already set (``dest >= 0``) are left alone; only
 "resident" work (dest == DISCARD after a round, i.e. work the rank would
-process locally next round) is rebalanced.
+process locally next round) is rebalanced.  Pending items ride the same
+forwarding round to their original destinations.
 
 Cost: one ``forward_work`` round — with the packed wire format that is one
-payload collective + one count collective + the R-int all_gather of the
-plan, so rebalancing every round is cheap enough to use as a matter of
-course on skewed workloads.
+payload collective + one count collective per mesh axis, plus the tiny
+all_gather of the plan, so rebalancing every round is cheap enough to use as
+a matter of course on skewed workloads.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.forwarding import ForwardConfig, forward_work
-from repro.core.queue import DISCARD, WorkQueue
+from repro.core.forwarding import ForwardConfig, flatten_axis_names, forward_work
+from repro.core.queue import DISCARD, WorkQueue, enqueue
 
-__all__ = ["plan_rebalance", "rebalance"]
+__all__ = ["plan_rebalance", "plan_rebalance_hierarchical", "rebalance"]
+
+
+def _ceil_div(a: jax.Array, b) -> jax.Array:
+    return (a + b - 1) // b
 
 
 def plan_rebalance(count: jax.Array, axis_name, num_ranks: int) -> Tuple[jax.Array, jax.Array]:
     """Per-rank (start, target): my items [0,count) map to global positions
     [start, start+count) and global position j belongs on rank j // target."""
-    counts = jax.lax.all_gather(count, axis_name)  # (R,)
-    me = jax.lax.axis_index(axis_name)
+    axes = flatten_axis_names(axis_name)
+    counts = jax.lax.all_gather(count, axes)  # (R,)
+    me = jax.lax.axis_index(axes)
     start = (jnp.cumsum(counts) - counts)[me]
     total = jnp.sum(counts)
-    target = jnp.maximum((total + num_ranks - 1) // num_ranks, 1)
+    target = jnp.maximum(_ceil_div(total, num_ranks), 1)
     return start.astype(jnp.int32), target.astype(jnp.int32)
 
 
-def rebalance(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array]:
+def plan_rebalance_hierarchical(
+    count: jax.Array, axis_name, level_sizes: Tuple[int, ...]
+) -> dict:
+    """The topology-aware plan: one all_gather of per-rank resident counts
+    over the joint mesh, from which every rank derives — replicated,
+    collective-free — the group quotas, surplus/deficit line, and per-group
+    lane targets.
+
+    Returns the plan arrays (all per-GROUP, ``G = R // F`` groups of
+    ``F = level_sizes[-1]`` fastest-axis lanes):
+
+      ``start``      my items' global in-GROUP position offset (scalar)
+      ``group``      my group index (scalar)
+      ``kept``       (G,) residents each group keeps (≤ group quota)
+      ``lane_target``(G,) ceil assignment stride inside each group
+      ``sur_start``  (G,) exclusive prefix of the groups' surplus line
+      ``cum_def``    (G,) inclusive prefix of the groups' deficit slots
+    """
+    axes = flatten_axis_names(axis_name)
+    F = int(level_sizes[-1])
+    counts = jax.lax.all_gather(count, axes)  # (R,) lexicographic
+    R = counts.shape[0]
+    G = R // F
+    me = jax.lax.axis_index(axes)
+    grp = me // F
+
+    gcnt = counts.reshape(G, F)
+    gtot = jnp.sum(gcnt, axis=1)  # (G,) residents per group
+    total = jnp.sum(gtot)
+    quota = jnp.maximum(_ceil_div(total, G), 1)  # balanced group share
+    kept = jnp.minimum(gtot, quota)  # what stays in-group
+    surplus = gtot - kept
+    deficit = quota - kept
+    cum_sur = jnp.cumsum(surplus)
+    cum_def = jnp.cumsum(deficit)
+    s_total = cum_sur[-1]
+    # what each group actually receives: its deficit, first-come in group
+    # order, until the global surplus line is exhausted
+    recv = jnp.clip(
+        jnp.minimum(cum_def, s_total) - jnp.minimum(cum_def - deficit, s_total), 0
+    )
+    final = kept + recv  # (G,) post-rebalance group population
+    lane_target = jnp.maximum(_ceil_div(final, F), 1)
+
+    off = jnp.cumsum(counts) - counts  # (R,) global resident offsets
+    start = off[me] - off[grp * F]  # my offset within my group's line
+    return {
+        "start": start.astype(jnp.int32),
+        "group": grp.astype(jnp.int32),
+        "kept": kept.astype(jnp.int32),
+        "lane_target": lane_target.astype(jnp.int32),
+        "sur_start": (cum_sur - surplus).astype(jnp.int32),
+        "cum_def": cum_def.astype(jnp.int32),
+    }
+
+
+def _hierarchical_dest(plan: dict, pos: jax.Array, fast_size: int) -> jax.Array:
+    """Destination rank for my resident item at in-group position ``pos``."""
+    F = fast_size
+    g = plan["group"]
+    G = plan["kept"].shape[0]
+    stay = pos < plan["kept"][g]
+    # in-group keepers: order-preserving ceil assignment over the group lanes
+    dest_stay = g * F + jnp.minimum(pos // plan["lane_target"][g], F - 1)
+    # surplus: position on the global surplus line → deficit slot → group m
+    j = plan["sur_start"][g] + (pos - plan["kept"][g])
+    m = jnp.clip(jnp.searchsorted(plan["cum_def"], j, side="right"), 0, G - 1)
+    k = j - jnp.where(m > 0, plan["cum_def"][m - 1], 0)
+    lane = jnp.minimum((plan["kept"][m] + k) // plan["lane_target"][m], F - 1)
+    dest_move = m * F + lane
+    return jnp.where(stay, dest_stay, dest_move).astype(jnp.int32)
+
+
+def _resident_positions(q: WorkQueue) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(resident_mask, rank-among-residents per lane, resident count)."""
+    lane = jnp.arange(q.capacity, dtype=jnp.int32)
+    resident = (lane < q.count) & (q.dest == DISCARD)
+    r32 = resident.astype(jnp.int32)
+    idx = jnp.cumsum(r32) - r32  # stable order-preserving local index
+    return resident, idx, jnp.sum(r32)
+
+
+def _intra_config(cfg: ForwardConfig) -> ForwardConfig:
+    """The fastest-tier sub-mesh as a flat padded config: every collective of
+    a round forwarded with it binds to the fast axis only."""
+    return ForwardConfig(
+        axis_name=cfg.axis_name[-1],
+        num_ranks=cfg.level_sizes[-1],
+        capacity=cfg.capacity,
+        peer_capacity=cfg.level_capacities[-1],
+        exchange="padded",
+        sort_method=cfg.sort_method,
+        use_pallas=cfg.use_pallas,
+    )
+
+
+def rebalance(
+    q: WorkQueue, cfg: ForwardConfig, *, scope: str = "global"
+) -> Tuple[WorkQueue, jax.Array]:
     """One balanced redistribution round.  Must run inside ``shard_map``.
 
-    Returns ``(balanced_queue, total)``.  After this call every rank holds
-    either ``floor`` or ``ceil`` of the mean population (subject to the usual
-    capacity clamps).
+    Only resident items (``dest == DISCARD``) are re-destinated — pending
+    items (``dest >= 0``) keep their destinations and ride the same round.
+    Returns ``(balanced_queue, total)`` with ``total`` the global in-flight
+    count.  After this call every rank holds either ``floor`` or ``ceil`` of
+    the mean resident population (subject to the usual capacity clamps) plus
+    whatever pending work was addressed to it.
+
+    ``scope``:
+      * ``"global"`` — equalise across all ranks.  Hierarchical configs use
+        the topology-aware surplus/deficit plan (module docstring): balance
+        within each fastest-axis group first, cross slower tiers only with
+        true surplus.
+      * ``"intra"`` — hierarchical configs only: equalise within each
+        fastest-axis group and forward over the fast axis alone; the lowered
+        round ships zero payload bytes over any slower fabric.  In-group
+        pending items are delivered; cross-group pending items sit the round
+        out and keep their destination (see the module docstring).
     """
-    start, target = plan_rebalance(q.count, cfg.axis_name, cfg.num_ranks)
-    lane = jnp.arange(q.capacity, dtype=jnp.int32)
-    valid = lane < q.count
-    new_dest = jnp.where(valid, (start + lane) // target, DISCARD)
-    new_dest = jnp.minimum(new_dest, cfg.num_ranks - 1)
-    q = WorkQueue(items=q.items, dest=new_dest.astype(jnp.int32), count=q.count, drops=q.drops)
+    resident, idx, n_res = _resident_positions(q)
+
+    if scope == "intra":
+        if cfg.exchange != "hierarchical":
+            raise ValueError(
+                "scope='intra' needs a hierarchical ForwardConfig — a flat "
+                "config has no topology to restrict the rebalance to"
+            )
+        sub = _intra_config(cfg)
+        F = sub.num_ranks
+        me = jax.lax.axis_index(flatten_axis_names(cfg.axis_name))
+        lane = jnp.arange(q.capacity, dtype=jnp.int32)
+        # Pending items carry GLOBAL rank destinations but the intra round's
+        # rank space is the F fast-axis lanes: in-group pending translate to
+        # their lane and are delivered; pending addressed OUTSIDE the group
+        # cannot ride a fast-axis-only round, so they sit the round out and
+        # are re-appended afterwards with their destination intact (a later
+        # global round delivers them).
+        pending = (lane < q.count) & (q.dest >= 0)
+        in_group = pending & (q.dest // F == me // F)
+        held_back = pending & ~in_group
+        start, target = plan_rebalance(n_res, sub.axis_name, F)
+        plan_dest = jnp.minimum((start + idx) // target, F - 1)
+        new_dest = jnp.where(
+            resident, plan_dest, jnp.where(in_group, q.dest % F, DISCARD)
+        )
+        q_round = dataclasses.replace(q, dest=new_dest.astype(jnp.int32))
+        balanced, _total = forward_work(q_round, sub)
+        balanced = enqueue(balanced, q.items, q.dest, held_back)
+        total = jax.lax.psum(
+            balanced.count, flatten_axis_names(cfg.axis_name)
+        )
+        return balanced, total
+    if scope != "global":
+        raise ValueError(f"unknown rebalance scope {scope!r}")
+
+    if cfg.exchange == "hierarchical":
+        plan = plan_rebalance_hierarchical(n_res, cfg.axis_name, cfg.level_sizes)
+        new_dest = _hierarchical_dest(plan, plan["start"] + idx, cfg.level_sizes[-1])
+    else:
+        start, target = plan_rebalance(n_res, cfg.axis_name, cfg.num_ranks)
+        new_dest = jnp.minimum((start + idx) // target, cfg.num_ranks - 1)
+    new_dest = jnp.where(resident, new_dest, q.dest).astype(jnp.int32)
+    q = dataclasses.replace(q, dest=new_dest)
     return forward_work(q, cfg)

@@ -75,80 +75,102 @@ def _field_bits(n_values: int) -> int:
 
 
 def pack_keys_hierarchical(
-    dest: jax.Array, count: jax.Array, num_nodes: int, fast_size: int
+    dest: jax.Array, count: jax.Array, level_sizes: Tuple[int, ...]
 ) -> jax.Array:
-    """Node-major two-level keys ``(dest_node, dest_lane_within_node, slot)``.
+    """Lexicographic N-level keys ``(d_0, d_1, …, d_{L-1}, slot)`` — one
+    bit-field per mesh tier, slowest first.
 
-    One sort of these keys yields BOTH stage permutations of the hierarchical
-    exchange: the bit-field layout is lexicographic in (node, lane, slot), so
-    the sorted order simultaneously (a) groups items per destination *lane*
-    sub-grouped per destination *node* — stage A's send layout is a pure
-    segment permutation of it — and (b) keeps every (node, lane) run in stable
-    slot order, which is exactly the per-node contiguity stage B re-exchanges.
+    One sort of these keys yields EVERY stage permutation of the N-level
+    hierarchical exchange: the bit-field layout is lexicographic in
+    ``(d_0, …, d_{L-1}, slot)``, so the sorted order simultaneously groups
+    items per destination digit at every tier (each stage's send layout is a
+    pure segment permutation of it) while keeping every destination run in
+    stable slot order — exactly the per-segment contiguity each slower stage
+    re-exchanges.
 
-    Global ranks are node-major (``rank = dest_node * fast_size + lane``), so
-    the key order coincides with the flat ``pack_keys`` order — cross-validated
-    in tests — but the field split makes the (num_nodes, fast_size) count
-    matrix and both stage layouts directly addressable.
+    Global ranks are lexicographic in the digits (``rank = ((d_0·A_1 + d_1)·A_2
+    + …)``, slowest-major — "node-major" in the 2-level case), so the key order
+    coincides with the flat :func:`pack_keys` order — cross-validated in
+    tests — but the field split makes the ``level_sizes``-shaped count tensor
+    and every stage layout directly addressable.
 
-    Invalid lanes (lane >= count, dest out of range) get ``node = num_nodes``
-    and sort past every valid key.
+    Invalid lanes (lane >= count, dest out of range) get slowest digit
+    ``A_0`` (one past the last value) and sort past every valid key.
     """
+    level_sizes = tuple(int(a) for a in level_sizes)
     cap = dest.shape[0]
     ib = _idx_bits(cap)
-    nb = _field_bits(num_nodes + 1)
-    lb = _field_bits(fast_size)
-    if nb + lb + ib > 32:
+    bits = [_field_bits(level_sizes[0] + 1)] + [
+        _field_bits(a) for a in level_sizes[1:]
+    ]
+    if sum(bits) + ib > 32:
         raise ValueError(
-            f"hierarchical key needs {nb}+{lb}+{ib} bits > 32; "
+            f"hierarchical key needs {'+'.join(map(str, bits))}+{ib} bits > 32; "
             "use method='argsort'"
         )
-    num_ranks = num_nodes * fast_size
+    num_ranks = 1
+    for a in level_sizes:
+        num_ranks *= a
     lane = jnp.arange(cap, dtype=jnp.uint32)
     valid = (lane < count.astype(jnp.uint32)) & (dest >= 0) & (dest < num_ranks)
-    node = jnp.where(valid, dest // fast_size, num_nodes).astype(jnp.uint32)
-    dlane = jnp.where(valid, dest % fast_size, 0).astype(jnp.uint32)
-    return (node << (lb + ib)) | (dlane << ib) | lane
+    d = jnp.where(valid, dest, 0).astype(jnp.uint32)
+    key = lane
+    shift = ib
+    # fastest digit sits just above the slot bits; slowest ends up on top
+    for a, b in zip(reversed(level_sizes[1:]), reversed(bits[1:])):
+        key = key | ((d % jnp.uint32(a)) << shift)
+        d = d // jnp.uint32(a)
+        shift += b
+    slowest = jnp.where(valid, d, jnp.uint32(level_sizes[0]))
+    return key | (slowest << shift)
 
 
 def unpack_keys_hierarchical(
-    keys: jax.Array, capacity: int, num_nodes: int, fast_size: int
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Inverse of :func:`pack_keys_hierarchical` → (node, lane_within_node, slot)."""
+    keys: jax.Array, capacity: int, level_sizes: Tuple[int, ...]
+) -> Tuple[Tuple[jax.Array, ...], jax.Array]:
+    """Inverse of :func:`pack_keys_hierarchical` → ``((d_0, …, d_{L-1}), slot)``
+    with digits slowest-first."""
+    level_sizes = tuple(int(a) for a in level_sizes)
     ib = _idx_bits(capacity)
-    lb = _field_bits(fast_size)
-    node = (keys >> (lb + ib)).astype(jnp.int32)
-    dlane = ((keys >> ib) & jnp.uint32((1 << lb) - 1)).astype(jnp.int32)
+    bits = [_field_bits(level_sizes[0] + 1)] + [
+        _field_bits(a) for a in level_sizes[1:]
+    ]
     slot = (keys & jnp.uint32((1 << ib) - 1)).astype(jnp.int32)
-    return node, dlane, slot
+    digits = []
+    shift = ib
+    for b in reversed(bits[1:]):
+        digits.append(((keys >> shift) & jnp.uint32((1 << b) - 1)).astype(jnp.int32))
+        shift += b
+    digits.append((keys >> shift).astype(jnp.int32))
+    return tuple(reversed(digits)), slot
 
 
 def sort_permutation_hierarchical(
     dest: jax.Array,
     count: jax.Array,
-    num_nodes: int,
-    fast_size: int,
+    level_sizes: Tuple[int, ...],
     *,
     method: str = "pack",
 ) -> Tuple[jax.Array, jax.Array]:
     """The hierarchical exchange's §4.2.1 analogue: ONE key sort that yields
-    both stage permutations.
+    every stage permutation of the N-level route.
 
-    Returns ``(perm, count_matrix)`` where ``perm`` is the node-major
-    destination-sort permutation (identical to the flat
-    :func:`sort_permutation` order, since global ranks are node-major) and
-    ``count_matrix`` is the ``(num_nodes, fast_size)`` per-(dest_node,
-    dest_lane) histogram — the only control-plane input either stage of
-    ``exchange_hierarchical`` needs.
+    Returns ``(perm, count_tensor)`` where ``perm`` is the lexicographic
+    (slowest-major) destination-sort permutation (identical to the flat
+    :func:`sort_permutation` order, since global ranks are lexicographic in
+    the digits) and ``count_tensor`` is the ``level_sizes``-shaped
+    per-destination-digit histogram — the only control-plane input any stage
+    of ``exchange_hierarchical`` needs.
     """
-    num_ranks = num_nodes * fast_size
+    level_sizes = tuple(int(a) for a in level_sizes)
+    num_ranks = 1
+    for a in level_sizes:
+        num_ranks *= a
     cap = dest.shape[0]
     if method == "pack":
-        keys = pack_keys_hierarchical(dest, count, num_nodes, fast_size)
+        keys = pack_keys_hierarchical(dest, count, level_sizes)
         sorted_keys = jax.lax.sort(keys)
-        _node, _dlane, perm = unpack_keys_hierarchical(
-            sorted_keys, cap, num_nodes, fast_size
-        )
+        _digits, perm = unpack_keys_hierarchical(sorted_keys, cap, level_sizes)
     elif method == "argsort":
         lane = jnp.arange(cap, dtype=jnp.int32)
         valid = (lane < count) & (dest >= 0) & (dest < num_ranks)
@@ -157,7 +179,7 @@ def sort_permutation_hierarchical(
     else:
         raise ValueError(f"unknown sort method {method!r}")
     hist = destination_histogram(dest, count, num_ranks)
-    return perm, hist[:num_ranks].reshape(num_nodes, fast_size)
+    return perm, hist[:num_ranks].reshape(level_sizes)
 
 
 def destination_histogram(dest: jax.Array, count: jax.Array, num_ranks: int) -> jax.Array:

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
-from repro.core.forwarding import ForwardConfig, forward_work
+from repro.core.forwarding import ForwardConfig, flatten_axis_names, forward_work
 from repro.core.queue import WorkQueue
 
 __all__ = ["run_until_done"]
@@ -25,7 +25,7 @@ __all__ = ["run_until_done"]
 def _vary(tree: Any, axis_name) -> Any:
     """Mark every leaf as device-varying over ``axis_name`` so the while-loop
     carry types stay stable even if the app's aux starts out replicated."""
-    axes = tuple(axis_name) if isinstance(axis_name, (tuple, list)) else (axis_name,)
+    axes = flatten_axis_names(axis_name)
 
     def cast(x):
         return compat.pcast_varying(jnp.asarray(x), axes)
@@ -48,6 +48,15 @@ def run_until_done(
         the input queue and *emits* into a fresh output queue (the paper's
         separate in/out arrays, §3.2).  ``aux`` is arbitrary app state
         (framebuffer, particle traces, ...).
+
+        Drops contract: the driver owns the cumulative drop count.  Each
+        round it accumulates the OUTPUT queue's ``drops`` (the round's own
+        enqueue overflows plus the forwarding round's clamps); the input
+        queue round_fn receives always carries ``drops == 0``, so a round_fn
+        that copies its input queue's ``drops`` into the output queue (a
+        natural thing to do when threading queue state through) cannot
+        double-count earlier rounds.  round_fn must not invent a nonzero
+        starting ``drops`` of its own beyond what its enqueues produce.
       q0: initial queue (already filled by the app's ray-gen stage).
       aux0: initial app state.
       cfg: forwarding configuration.
@@ -63,6 +72,12 @@ def run_until_done(
 
     def body(carry):
         q, aux, _total, rnd, drops = carry
+        # The input queue's cumulative drops already ride the loop carry;
+        # hand round_fn a zero-drop view so a round_fn that threads the input
+        # queue's drops into its output cannot double-count them (see the
+        # drops contract in the docstring).
+        q = WorkQueue(items=q.items, dest=q.dest, count=q.count,
+                      drops=jnp.zeros_like(q.drops))
         out_q, aux = round_fn(q, aux, rnd)
         new_q, total = forward_work(out_q, cfg)
         # Per-round queues are fresh, so cumulative overflow drops must ride

@@ -53,6 +53,39 @@ def sort_permutation(
     return perm, d_sorted, hist
 
 
+def sort_permutation_hierarchical(
+    dest: jax.Array,
+    count: jax.Array,
+    level_sizes,
+    *,
+    tile: int = 2048,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Pallas-path equivalent of ``core.sorting.sort_permutation_hierarchical``
+    — the N-level key layout routed through the ``sort_keys`` kernel.
+
+    Global ranks are lexicographic in the mesh digits (slowest-major), so the
+    flat packed key ``(dest << idx_bits) | lane`` and the multi-field key
+    ``(d_0, …, d_{L-1}, slot)`` induce the SAME sort order: concatenating the
+    digit bit-fields of a lexicographic rank IS the rank field (cross-validated
+    against the XLA path in tests).  The kernel therefore packs the flat key —
+    one pack+histogram pass — and this wrapper reshapes the histogram into the
+    ``level_sizes``-shaped count tensor every stage of the hierarchical
+    exchange addresses.
+
+    Returns ``(perm, count_tensor)``; raises like the flat path when the
+    packed key exceeds 32 bits.
+    """
+    level_sizes = tuple(int(a) for a in level_sizes)
+    num_ranks = 1
+    for a in level_sizes:
+        num_ranks *= a
+    perm, _d_sorted, hist = sort_permutation(
+        dest, count, num_ranks, tile=tile, interpret=interpret
+    )
+    return perm, hist[:num_ranks].reshape(level_sizes)
+
+
 def sort_by_destination(
     items: Any,
     dest: jax.Array,

@@ -37,6 +37,21 @@ def make_node_mesh(nodes: int = 2, devices_per_node: int = 4):
     return compat.make_mesh((nodes, devices_per_node), ("node", "device"))
 
 
+def make_pod_mesh(pods: int = 2, nodes: int = 2, devices_per_node: int = 2):
+    """Small 3-D (pod, node, device) CPU mesh — the N-level exchange's
+    (slowest, …, fastest) shape; the (2, 2, 2) default fits the 8-device
+    test platform.  "pod" spans the DCN, "node" the inter-host fabric,
+    "device" the intra-node ICI/NVLink."""
+    return compat.make_mesh((pods, nodes, devices_per_node), ("pod", "node", "device"))
+
+
+def make_production_pod_mesh(pods: int = 2, nodes: int = 2, devices_per_node: int = 128):
+    """Multi-pod forwarding mesh: (pod, node, device) with DCN across pods,
+    host fabric across nodes, ICI within — 2 × 2 × 128 = 512 chips shaped
+    for the 3-level hierarchical route instead of a flat joint axis."""
+    return compat.make_mesh((pods, nodes, devices_per_node), ("pod", "node", "device"))
+
+
 def make_test_mesh(data: int = 2, model: int = 4):
     """Small CPU mesh for tests/examples."""
     return compat.make_mesh((data, model), ("data", "model"))

@@ -97,34 +97,55 @@ def _parse_groups(line: str):
     return tuple(groups) or None
 
 
+def _rank_digits(rank: int, level_sizes) -> tuple:
+    """Decompose a lexicographic (slowest-major) rank id into its per-tier
+    digits.  The slowest tier's extent is not needed — its digit is whatever
+    remains above the faster strides — so ``level_sizes[0]`` may be 0."""
+    ds = []
+    for a in reversed(tuple(level_sizes)[1:]):
+        ds.append(rank % a)
+        rank //= a
+    ds.append(rank)
+    return tuple(reversed(ds))
+
+
+def group_tier(groups, level_sizes):
+    """Classify one collective's participant groups against a lexicographic
+    N-level mesh (``level_sizes`` ranks per tier, slowest first).
+
+    Returns the tier index (0 = slowest) when every group varies in exactly
+    ONE tier digit — the pure single-fabric pattern of a hierarchical-
+    exchange stage — or ``"cross"`` (some group spans several tiers, e.g. a
+    flat all_to_all routed over the whole mesh, or a global psum),
+    ``"local"`` (singleton groups), or ``"unknown"`` (no group info)."""
+    if not groups:
+        return "unknown"
+    tiers = set()
+    for g in groups:
+        if len(g) <= 1:
+            continue
+        digits = [_rank_digits(i, level_sizes) for i in g]
+        varying = {
+            t
+            for t in range(len(level_sizes))
+            if len({d[t] for d in digits}) > 1
+        }
+        tiers.add(next(iter(varying)) if len(varying) == 1 else "cross")
+    if not tiers:
+        return "local"
+    return tiers.pop() if len(tiers) == 1 else "cross"
+
+
 def group_axis(groups, fast_size: int) -> str:
-    """Classify one collective's participant groups against a node-major 2-D
-    mesh with ``fast_size`` ranks per node.
+    """2-level wrapper over :func:`group_tier` for node-major ``(slow, fast)``
+    meshes with ``fast_size`` ranks per node.
 
     Returns ``"fast"`` (every group stays inside one node), ``"slow"`` (every
     group holds one lane across nodes — the pure inter-node pattern),
-    ``"cross"`` (groups span nodes AND lanes, e.g. a flat all_to_all routed
-    over the whole 2-D mesh, or a global psum), ``"local"`` (singleton
+    ``"cross"`` (groups span nodes AND lanes), ``"local"`` (singleton
     groups), or ``"unknown"`` (no group info)."""
-    if not groups:
-        return "unknown"
-    kinds = set()
-    for g in groups:
-        if len(g) <= 1:
-            kinds.add("local")
-            continue
-        nodes = {i // fast_size for i in g}
-        lanes = {i % fast_size for i in g}
-        if len(nodes) == 1:
-            kinds.add("fast")
-        elif len(lanes) == 1:
-            kinds.add("slow")
-        else:
-            kinds.add("cross")
-    kinds.discard("local")
-    if not kinds:
-        return "local"
-    return kinds.pop() if len(kinds) == 1 else "cross"
+    tier = group_tier(groups, (0, fast_size))
+    return {0: "slow", 1: "fast"}.get(tier, tier)
 
 
 def collective_ops(hlo_text: str, *, with_groups: bool = False) -> list:
@@ -182,6 +203,38 @@ def per_axis_collective_bytes(hlo_text: str, fast_size: int) -> Dict[str, int]:
     for _kind, nbytes, groups in collective_ops(hlo_text, with_groups=True):
         out[group_axis(groups, fast_size)] += nbytes
     return out
+
+
+def per_tier_collective_bytes(
+    hlo_text: str, level_sizes, *, min_bytes: int = 0
+) -> Dict:
+    """Collective result bytes bucketed by mesh tier (see :func:`group_tier`):
+    integer keys ``0 … L-1`` (0 = slowest fabric) for single-tier patterns,
+    plus ``"cross"`` / ``"local"`` / ``"unknown"``.
+
+    ``min_bytes`` filters the inventory to payload-sized ops — the natural
+    form of "zero slow-fabric payload bytes" assertions, which must ignore
+    the tiny count/termination control plane."""
+    out: Dict = {t: 0 for t in range(len(tuple(level_sizes)))}
+    out.update({"cross": 0, "local": 0, "unknown": 0})
+    for _kind, nbytes, groups in collective_ops(hlo_text, with_groups=True):
+        if nbytes >= min_bytes:
+            out[group_tier(groups, level_sizes)] += nbytes
+    return out
+
+
+def tier_bytes_model(level_sizes, level_capacities, item_bytes: int) -> list:
+    """Model: bulk payload bytes ONE rank pushes across each mesh tier per
+    hierarchical forwarding round, slowest tier first.
+
+    Stage ``l`` ships ``level_sizes[l]`` padded segments of
+    ``level_capacities[l]`` rows over tier ``l``'s fabric; the
+    ``level_sizes[l] - 1`` segments addressed off-group actually cross it
+    (extent-1 tiers skip their stage: 0 bytes)."""
+    return [
+        float((a - 1) * s * item_bytes) if a > 1 else 0.0
+        for a, s in zip(level_sizes, level_capacities)
+    ]
 
 
 def slow_axis_bytes_model(

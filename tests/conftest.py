@@ -48,3 +48,12 @@ def mesh_nodes42():
     from repro.launch.mesh import make_node_mesh
 
     return make_node_mesh(4, 2)
+
+
+@pytest.fixture(scope="session")
+def mesh_pods222():
+    """A 3-D (pod=2, node=2, device=2) forwarding mesh — the N-level
+    exchange's (slowest, …, fastest) shape."""
+    from repro.launch.mesh import make_pod_mesh
+
+    return make_pod_mesh(2, 2, 2)

@@ -146,6 +146,60 @@ def test_hierarchical_round_budget_two_payload_two_count(mesh_nodes24, use_palla
     assert sorted(ax for _b, ax in counts) == ["fast", "slow"], counts
 
 
+def test_3level_round_budget_one_payload_one_count_per_axis(mesh_pods222):
+    """N-level budget guard: on a (pod, node, device) mesh, exactly THREE
+    payload all_to_alls (one per mesh axis, each a pure single-tier pattern)
+    + three tiny count collectives, and no other payload-sized op touches a
+    slower fabric."""
+    from repro.roofline.analysis import group_tier
+
+    sizes = (2, 2, 2)
+    cfg = ForwardConfig(
+        ("pod", "node", "device"), R, CAP, exchange="hierarchical",
+        level_sizes=sizes,
+    )
+    txt = _lower_hier_round(mesh_pods222, cfg)
+    ops = collective_ops(txt, with_groups=True)
+    threshold = min(cfg.level_capacities) * WORDS * 4
+    a2a = [(b, group_tier(g, sizes)) for k, b, g in ops if k == "all-to-all"]
+    payload = [(b, t) for b, t in a2a if b >= threshold]
+    counts = [(b, t) for b, t in a2a if b < threshold]
+    assert len(payload) == 3, f"want THREE payload all_to_alls, got {a2a}"
+    assert len(counts) == 3, f"want THREE count all_to_alls, got {a2a}"
+    # one payload collective per tier, each of the padded per-segment size
+    assert sorted(t for _b, t in payload) == [0, 1, 2], payload
+    for b, t in payload:
+        assert b == sizes[t] * cfg.level_capacities[t] * WORDS * 4, payload
+    assert sorted(t for _b, t in counts) == [0, 1, 2], counts
+    # nothing else ships payload-sized data across tier 0 or 1 (or mixed)
+    stray = [
+        (k, b) for k, b, g in ops
+        if b >= threshold and group_tier(g, sizes) in (0, 1, "cross")
+        and k != "all-to-all"
+    ]
+    assert stray == [], stray
+
+
+def test_3level_extent1_axis_skips_its_stage():
+    """An extent-1 tier must contribute NO collective at all — its stage is
+    the identity, so a (2, 1, 4) mesh budgets like a 2-level route."""
+    from repro.launch.mesh import make_pod_mesh
+    from repro.roofline.analysis import group_tier
+
+    sizes = (2, 1, 4)
+    mesh = make_pod_mesh(*sizes)
+    cfg = ForwardConfig(
+        ("pod", "node", "device"), R, CAP, exchange="hierarchical",
+        level_sizes=sizes,
+    )
+    txt = _lower_hier_round(mesh, cfg)
+    ops = collective_ops(txt, with_groups=True)
+    a2a = [(b, group_tier(g, sizes)) for k, b, g in ops if k == "all-to-all"]
+    assert sorted({t for _b, t in a2a}) == [0, 2], a2a  # tier 1 never appears
+    threshold = min(cfg.level_capacities[0], cfg.level_capacities[2]) * WORDS * 4
+    assert sum(1 for b, _t in a2a if b >= threshold) == 2, a2a
+
+
 def test_hierarchical_slow_axis_padding_is_per_node(mesh_nodes24):
     """The headline claim: slow-axis bytes are padded per NODE segment.  At
     EQUAL burst tolerance K (slot rows a single destination can absorb

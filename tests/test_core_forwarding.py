@@ -193,6 +193,52 @@ def test_multi_round_termination(mesh8):
     assert int(np.asarray(rounds)[0]) == 5
 
 
+def test_drops_not_double_counted_when_round_fn_threads_queue_drops(mesh8):
+    """Drops contract of run_until_done: the driver owns the cumulative drop
+    count, so a round_fn that copies its INPUT queue's ``drops`` into its
+    output queue (natural when threading queue state) must not inflate the
+    total — the driver hands round_fn a zero-drop view of the input queue.
+
+    Construction: rank 0 sends 6 rays to rank 1 in the seed queue and in each
+    of the first 3 loop rounds, with peer slots clamped at 2 — exactly 4
+    sender-side drops per forwarding round, 16 total.  The round_fn
+    deliberately carries ``q_in.drops`` into its output queue; with the old
+    accounting the carried value re-entered the sum every round (a
+    triangular overcount: 56 here)."""
+    cfg = ForwardConfig("data", R, CAP, peer_capacity=2, exchange="padded")
+
+    def emit_burst(out, me, gate):
+        n = 6
+        dest = jnp.where(gate, 1, DISCARD) * jnp.ones(n, jnp.int32)
+        return enqueue(out, make_rays(n), dest.astype(jnp.int32), jnp.ones(n, bool))
+
+    def round_fn(q_in, acc, rnd):
+        me = jax.lax.axis_index("data")
+        out = make_queue(ray_proto(), CAP)
+        # thread the input queue's drops through — the driver must make
+        # this a no-op, not a double count
+        out = WorkQueue(items=out.items, dest=out.dest, count=out.count,
+                        drops=q_in.drops)
+        return emit_burst(out, me, (me == 0) & (rnd < 3)), acc
+
+    def drive(_x):
+        me = jax.lax.axis_index("data")
+        q0 = emit_burst(make_queue(ray_proto(), CAP), me, me == 0)
+        q, acc, rounds = run_until_done(
+            round_fn, q0, jnp.zeros(()), cfg, max_rounds=8
+        )
+        return q.drops[None], rounds[None]
+
+    f = jax.jit(
+        compat.shard_map(drive, mesh=mesh8, in_specs=P("data"),
+                         out_specs=(P("data"), P("data")))
+    )
+    drops, _rounds = f(jnp.arange(8.0))
+    # 4 forwarding rounds × (6 emitted − 2 delivered) = 16 — NOT the
+    # carried-forward triangular sum the double count would produce
+    assert int(np.asarray(drops).sum()) == 16, np.asarray(drops)
+
+
 def test_rebalance_equalizes_load(mesh8):
     cfg = ForwardConfig("data", R, CAP, exchange="padded")
 

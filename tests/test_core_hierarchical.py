@@ -35,9 +35,9 @@ class Item:
     src: jax.Array
 
 
-def _make_fn(mesh, cfg):
+def _make_fn(mesh, cfg, axes=AXES):
     def fwd(items_val, dest, counts):
-        me = jax.lax.axis_index(AXES)
+        me = jax.lax.axis_index(axes)
         q = WorkQueue(
             items=Item(val=items_val, src=me * jnp.ones(CAP, jnp.int32)),
             dest=dest,
@@ -50,8 +50,8 @@ def _make_fn(mesh, cfg):
     return jax.jit(
         compat.shard_map(
             fwd, mesh=mesh,
-            in_specs=(P(AXES), P(AXES), P(AXES)),
-            out_specs=(P(AXES), P(AXES), P(AXES), P(AXES), P()),
+            in_specs=(P(axes), P(axes), P(axes)),
+            out_specs=(P(axes), P(axes), P(axes), P(axes), P()),
         )
     )
 
@@ -262,9 +262,236 @@ def test_degenerate_axes_match_onehot(nodes, devs):
         _run_pair(hier, onehot, counts, dest, val)
 
 
+# ------------------------------------------------------ 3-level (pod, node, device)
+AXES3 = ("pod", "node", "device")
+
+
+def _ample3(level_sizes, **kw):
+    """Per-tier stage capacities so large no stage clamp can ever fire (stage
+    l's buffer holds at most CAP · prod(faster sizes) rows): the only
+    remaining drop site is the receiver capacity — same as the oracle's."""
+    caps, mult = [], 1
+    for a in reversed(level_sizes):
+        caps.append(CAP * mult)
+        mult *= a
+    return ForwardConfig(
+        AXES3, R, CAP, exchange="hierarchical", level_sizes=level_sizes,
+        level_capacities=tuple(reversed(caps)), **kw,
+    )
+
+
+@pytest.fixture(scope="module")
+def fns222(mesh_pods222):
+    return (
+        _make_fn(mesh_pods222, _ample3((2, 2, 2)), AXES3),
+        _make_fn(
+            mesh_pods222, ForwardConfig(AXES3, R, CAP, exchange="onehot"), AXES3
+        ),
+    )
+
+
+@given(data=st.data())
+@settings(max_examples=15, deadline=None)
+def test_3level_matches_onehot_bitwise(fns222, data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    counts = rng.integers(0, CAP + 1, R).astype(np.int32)
+    dest = rng.integers(-1, R, (R, CAP)).astype(np.int32)  # incl. DISCARD lanes
+    val = rng.normal(size=(R, CAP)).astype(np.float32)
+    _run_pair(*fns222, counts, dest, val)
+
+
+def test_3level_hotspot_matches_onehot(fns222):
+    """Everyone floods rank 0 at full queue across all three tiers."""
+    counts = np.full(R, CAP, np.int32)
+    dest = np.zeros((R, CAP), np.int32)
+    val = np.random.default_rng(3).normal(size=(R, CAP)).astype(np.float32)
+    _run_pair(*fns222, counts, dest, val)
+
+
+@given(data=st.data())
+@settings(max_examples=8, deadline=None)
+def test_3level_tight_slots_conserve_items_plus_drops(mesh_pods222, data):
+    """Default (tight, load-proportional) per-tier capacities under skew:
+    every stage clamp must land in `drops` — received + dropped == emitted."""
+    fn = _make_fn(
+        mesh_pods222,
+        ForwardConfig(
+            AXES3, R, CAP, exchange="hierarchical", level_sizes=(2, 2, 2)
+        ),
+        AXES3,
+    )
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    counts = rng.integers(0, CAP + 1, R).astype(np.int32)
+    dest = rng.integers(0, R, (R, CAP)).astype(np.int32)
+    dest[::2] = 0  # heavy skew across pods and nodes
+    val = rng.normal(size=(R, CAP)).astype(np.float32)
+    _v, _s, out_counts, out_drops, total = fn(
+        jnp.asarray(val).reshape(-1),
+        jnp.asarray(dest).reshape(-1),
+        jnp.asarray(counts),
+    )
+    received = int(np.asarray(out_counts).sum())
+    dropped = int(np.asarray(out_drops).sum())
+    assert received + dropped == int(counts.sum())
+    assert int(total) == received
+
+
+@pytest.mark.parametrize(
+    "shape",
+    [(1, 2, 4), (2, 1, 4), (2, 4, 1), (1, 1, 8), (8, 1, 1), (1, 8, 1)],
+    ids=lambda s: "x".join(map(str, s)),
+)
+def test_3level_degenerate_axes_match_onehot(shape):
+    """Extent-1 tiers anywhere in the hierarchy skip their stage — the route
+    must stay bit-exact with the oracle, hot-spot included."""
+    from repro.launch.mesh import make_pod_mesh
+
+    mesh = make_pod_mesh(*shape)
+    hier = _make_fn(mesh, _ample3(shape), AXES3)
+    onehot = _make_fn(
+        mesh, ForwardConfig(AXES3, R, CAP, exchange="onehot"), AXES3
+    )
+    rng = np.random.default_rng(sum(shape))
+    for hotspot in (False, True):
+        counts = (
+            np.full(R, CAP, np.int32)
+            if hotspot
+            else rng.integers(0, CAP + 1, R).astype(np.int32)
+        )
+        dest = (
+            np.zeros((R, CAP), np.int32)
+            if hotspot
+            else rng.integers(0, R, (R, CAP)).astype(np.int32)
+        )
+        val = rng.normal(size=(R, CAP)).astype(np.float32)
+        _run_pair(hier, onehot, counts, dest, val)
+
+
+def test_3level_pallas_path_matches_xla_path(mesh_pods222):
+    fn_p = _make_fn(mesh_pods222, _ample3((2, 2, 2), use_pallas=True), AXES3)
+    fn_x = _make_fn(mesh_pods222, _ample3((2, 2, 2)), AXES3)
+    rng = np.random.default_rng(11)
+    counts = rng.integers(0, CAP + 1, R).astype(np.int32)
+    dest = rng.integers(0, R, (R, CAP)).astype(np.int32)
+    val = rng.normal(size=(R, CAP)).astype(np.float32)
+    args = (
+        jnp.asarray(val).reshape(-1),
+        jnp.asarray(dest).reshape(-1),
+        jnp.asarray(counts),
+    )
+    p = [np.asarray(x) for x in fn_p(*args)]
+    x = [np.asarray(x) for x in fn_x(*args)]
+    np.testing.assert_array_equal(p[2], x[2])
+    for r in range(R):
+        n = int(p[2].reshape(-1)[r])
+        np.testing.assert_array_equal(
+            p[0].reshape(R, CAP)[r][:n], x[0].reshape(R, CAP)[r][:n]
+        )
+    assert int(p[3].sum()) == int(x[3].sum())
+
+
+def test_joint_tier_axes_match_onehot(mesh_pods222):
+    """A tier may group several mesh axes into one joint fabric: the 2-level
+    route over ((pod, node), device) must equal the oracle on the same mesh."""
+    hier = _make_fn(
+        mesh_pods222,
+        ForwardConfig(
+            (("pod", "node"), "device"), R, CAP, exchange="hierarchical",
+            level_sizes=(4, 2), level_capacities=(2 * CAP, CAP),
+        ),
+        AXES3,
+    )
+    onehot = _make_fn(
+        mesh_pods222, ForwardConfig(AXES3, R, CAP, exchange="onehot"), AXES3
+    )
+    rng = np.random.default_rng(17)
+    counts = rng.integers(0, CAP + 1, R).astype(np.int32)
+    dest = rng.integers(0, R, (R, CAP)).astype(np.int32)
+    val = rng.normal(size=(R, CAP)).astype(np.float32)
+    _run_pair(hier, onehot, counts, dest, val)
+
+
+def test_joint_tier_rafi_context_forwards(mesh_pods222):
+    """RafiContext must accept a joint-tier axis_name end to end: the
+    PartitionSpec side flattens the nesting while the config keeps the tier
+    structure (regression: P((('pod','node'),'device')) is not a legal spec)."""
+    from repro.core import RafiContext, enqueue
+
+    proto = Item(val=jnp.zeros(()), src=jnp.zeros((), jnp.int32))
+    ctx = RafiContext(
+        mesh_pods222, proto, axis_name=(("pod", "node"), "device"),
+        capacity=CAP, exchange="hierarchical",
+    )
+    assert ctx.cfg.level_sizes == (4, 2)
+
+    def fill(_x):
+        from repro.core.context import _stack_queue
+
+        me = jax.lax.axis_index(("pod", "node", "device"))
+        lq = ctx.local_queue()
+        lq = enqueue(
+            lq,
+            Item(val=jnp.arange(4.0) + me * 10, src=me * jnp.ones(4, jnp.int32)),
+            ((me + jnp.arange(4)) % R).astype(jnp.int32),
+            jnp.ones(4, bool),
+        )
+        return _stack_queue(lq)
+
+    from jax.sharding import PartitionSpec as PS
+
+    q = ctx.shard(
+        fill, in_specs=PS(("pod", "node", "device")), out_specs=ctx.queue_specs()
+    )(jnp.arange(8.0))
+    nq, total = ctx.forward_rays()(q)
+    assert int(total) == R * 4
+    assert np.asarray(nq.count).sum() == R * 4
+
+
+def test_joint_tier_cycling_delivers_everything(mesh_pods222):
+    """deliver_by_cycling must flatten joint-tier axis names for its
+    ppermute/psum (regression: nested tuples are not bindable axis names)."""
+    from repro.core import enqueue, make_queue
+    from repro.core.cycling import deliver_by_cycling
+
+    axes = ("pod", "node", "device")
+    cfg = ForwardConfig(
+        (("pod", "node"), "device"), R, CAP, exchange="hierarchical",
+        level_sizes=(4, 2),
+    )
+
+    def kernel(_x):
+        proto = Item(val=jnp.zeros(()), src=jnp.zeros((), jnp.int32))
+        q = make_queue(proto, CAP)
+        me = jax.lax.axis_index(axes)
+        n = 5
+        k = jnp.arange(n)
+        items = Item(
+            val=(k + me * 100).astype(jnp.float32),
+            src=me * jnp.ones(n, jnp.int32),
+        )
+        q = enqueue(q, items, ((me * 3 + k) % R).astype(jnp.int32), jnp.ones(n, bool))
+        absorbed, total = deliver_by_cycling(q, cfg)
+        return absorbed.count[None], total, absorbed.items.val
+
+    f = jax.jit(
+        compat.shard_map(
+            kernel, mesh=mesh_pods222, in_specs=P(axes),
+            out_specs=(P(axes), P(), P(axes)),
+        )
+    )
+    counts, total, vals = f(jnp.arange(8.0))
+    counts = np.asarray(counts)
+    vals = np.asarray(vals).reshape(R, CAP)
+    assert int(total) == R * 5
+    got = sorted(int(vals[r, i]) for r in range(R) for i in range(counts[r]))
+    assert got == sorted(s * 100 + k for s in range(R) for k in range(5))
+
+
 # ------------------------------------------------- ForwardConfig validation
+
+
 def test_config_rejects_flat_axis():
-    with pytest.raises(ValueError, match=r"\(slow, fast\)"):
+    with pytest.raises(ValueError, match="slowest"):
         ForwardConfig("data", R, CAP, exchange="hierarchical", fast_size=4)
 
 
@@ -278,11 +505,76 @@ def test_config_rejects_non_dividing_fast_size():
         ForwardConfig(AXES, R, CAP, exchange="hierarchical", fast_size=3)
 
 
-def test_config_rejects_three_axes():
-    with pytest.raises(ValueError, match=r"\(slow, fast\)"):
+def test_config_three_axes_need_level_sizes():
+    """N>2 tiers cannot be derived from the 2-level fast_size alias alone."""
+    with pytest.raises(ValueError, match="level_sizes"):
+        ForwardConfig(AXES3, R, CAP, exchange="hierarchical", fast_size=4)
+    cfg = ForwardConfig(
+        AXES3, R, CAP, exchange="hierarchical", level_sizes=(2, 2, 2)
+    )
+    assert cfg.level_sizes == (2, 2, 2)
+    assert len(cfg.level_capacities) == 3
+    # legacy aliases mirror the fastest / slowest tiers
+    assert cfg.fast_size == 2
+    assert cfg.peer_capacity == cfg.level_capacities[-1]
+    assert cfg.node_capacity == cfg.level_capacities[0]
+
+
+def test_config_rejects_bad_level_sizes():
+    with pytest.raises(ValueError, match="multiply"):
         ForwardConfig(
-            ("pod", "node", "device"), R, CAP, exchange="hierarchical", fast_size=4
+            AXES3, R, CAP, exchange="hierarchical", level_sizes=(2, 2, 4)
         )
+    with pytest.raises(ValueError, match="one rank count per"):
+        ForwardConfig(
+            AXES3, R, CAP, exchange="hierarchical", level_sizes=(2, 4)
+        )
+    with pytest.raises(ValueError, match="contradicts"):
+        ForwardConfig(
+            AXES, R, CAP, exchange="hierarchical", level_sizes=(2, 4), fast_size=2
+        )
+    with pytest.raises(ValueError, match="one segment size per"):
+        ForwardConfig(
+            AXES3, R, CAP, exchange="hierarchical", level_sizes=(2, 2, 2),
+            level_capacities=(8, 8),
+        )
+    with pytest.raises(ValueError, match="contradicts"):
+        ForwardConfig(
+            AXES, R, CAP, exchange="hierarchical", level_sizes=(2, 4),
+            level_capacities=(8, 8), peer_capacity=16,
+        )
+
+
+def test_config_rejects_hierarchical_fields_on_flat_backends():
+    """Flat backends would silently ignore topology fields — reject them."""
+    for exchange in ("padded", "ragged", "onehot"):
+        with pytest.raises(ValueError, match="hierarchical"):
+            ForwardConfig("data", R, CAP, exchange=exchange, fast_size=4)
+        with pytest.raises(ValueError, match="hierarchical"):
+            ForwardConfig("data", R, CAP, exchange=exchange, node_capacity=8)
+        with pytest.raises(ValueError, match="hierarchical"):
+            ForwardConfig("data", R, CAP, exchange=exchange, level_sizes=(2, 4))
+        with pytest.raises(ValueError, match="hierarchical"):
+            ForwardConfig(
+                "data", R, CAP, exchange=exchange, level_capacities=(8, 8)
+            )
+
+
+def test_config_rejects_peer_capacity_on_slotless_backends():
+    """ragged segments are contiguous and onehot gathers everything — a
+    peer_capacity there is a config bug, not a tuning knob."""
+    for exchange in ("ragged", "onehot"):
+        with pytest.raises(ValueError, match="peer_capacity"):
+            ForwardConfig("data", R, CAP, exchange=exchange, peer_capacity=8)
+
+
+def test_config_rejects_nonpositive_shapes():
+    with pytest.raises(ValueError, match="positive"):
+        ForwardConfig("data", 0, CAP, exchange="padded")
+    with pytest.raises(ValueError, match="positive"):
+        ForwardConfig("data", R, 0, exchange="padded")
+    with pytest.raises(ValueError, match="sort_method"):
+        ForwardConfig("data", R, CAP, exchange="padded", sort_method="bogus")
 
 
 def test_default_capacities_match_backend_fanout():

@@ -95,51 +95,63 @@ def test_pack_keys_rejects_overflow():
         S.pack_keys(jnp.zeros(1 << 26, jnp.int32), jnp.int32(0), 1 << 10)
 
 
-# ------------------------------------------- hierarchical two-level key sort
-@pytest.mark.parametrize("num_nodes,fast_size", [(2, 4), (4, 2), (1, 8), (8, 1)])
+# --------------------------------------------- hierarchical N-level key sort
+@pytest.mark.parametrize(
+    "level_sizes",
+    [(2, 4), (4, 2), (1, 8), (8, 1), (2, 2, 2), (2, 1, 4), (1, 2, 4), (2, 2, 2, 1)],
+)
 @pytest.mark.parametrize("method", ["pack", "argsort"])
-def test_hierarchical_sort_matches_flat_sort(num_nodes, fast_size, method):
-    """Global ranks are node-major, so the (node, lane, slot) two-level key
-    order must coincide with the flat (dest, slot) order — one sort serves
-    both the flat and the two-stage exchange."""
+def test_hierarchical_sort_matches_flat_sort(level_sizes, method):
+    """Global ranks are lexicographic in the tier digits (node-major in the
+    2-level case), so the (d_0, …, d_{L-1}, slot) N-level key order must
+    coincide with the flat (dest, slot) order — one sort serves both the flat
+    and the N-stage exchange."""
     cap = 64
-    R = num_nodes * fast_size
-    rng = np.random.default_rng(num_nodes * 10 + fast_size)
+    R = int(np.prod(level_sizes))
+    rng = np.random.default_rng(sum(level_sizes) * 10 + len(level_sizes))
     dest = jnp.array(rng.integers(-1, R + 1, cap), jnp.int32)
     count = jnp.int32(50)
-    perm_h, cnt_matrix = S.sort_permutation_hierarchical(
-        dest, count, num_nodes, fast_size, method=method
+    perm_h, cnt_tensor = S.sort_permutation_hierarchical(
+        dest, count, level_sizes, method=method
     )
     perm_f, _d, counts_f = S.sort_permutation(dest, count, R, method="pack")
     np.testing.assert_array_equal(np.asarray(perm_h), np.asarray(perm_f))
-    assert cnt_matrix.shape == (num_nodes, fast_size)
+    assert cnt_tensor.shape == level_sizes
     np.testing.assert_array_equal(
-        np.asarray(cnt_matrix).reshape(-1), np.asarray(counts_f)[:R]
+        np.asarray(cnt_tensor).reshape(-1), np.asarray(counts_f)[:R]
     )
 
 
-@given(st.lists(st.integers(-1, 8), min_size=1, max_size=64), st.integers(0, 64))
-@settings(max_examples=30, deadline=None)
-def test_hierarchical_keys_roundtrip(dests, count):
+@pytest.mark.parametrize("level_sizes", [(2, 4), (2, 2, 2), (2, 1, 4)])
+@given(data=st.data())
+@settings(max_examples=20, deadline=None)
+def test_hierarchical_keys_roundtrip(level_sizes, data):
     cap = 64
-    num_nodes, fast_size = 2, 4
+    R = int(np.prod(level_sizes))
+    dests = data.draw(st.lists(st.integers(-1, R), min_size=1, max_size=cap))
+    count = data.draw(st.integers(0, cap))
     dest = jnp.zeros(cap, jnp.int32).at[: len(dests)].set(jnp.array(dests, jnp.int32))
-    keys = S.pack_keys_hierarchical(dest, jnp.int32(count), num_nodes, fast_size)
-    node, dlane, slot = S.unpack_keys_hierarchical(keys, cap, num_nodes, fast_size)
+    keys = S.pack_keys_hierarchical(dest, jnp.int32(count), level_sizes)
+    digits, slot = S.unpack_keys_hierarchical(keys, cap, level_sizes)
     lane = np.arange(cap)
     d = np.asarray(dest)
-    valid = (lane < count) & (d >= 0) & (d < num_nodes * fast_size)
-    np.testing.assert_array_equal(
-        np.asarray(node), np.where(valid, d // fast_size, num_nodes)
-    )
-    np.testing.assert_array_equal(
-        np.asarray(dlane), np.where(valid, d % fast_size, 0)
-    )
+    valid = (lane < count) & (d >= 0) & (d < R)
+    want = d.copy()
+    for t, a in reversed(list(enumerate(level_sizes))):
+        if t == 0:
+            np.testing.assert_array_equal(
+                np.asarray(digits[0]), np.where(valid, want, level_sizes[0])
+            )
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(digits[t]), np.where(valid, want % a, 0)
+            )
+            want = want // a
     np.testing.assert_array_equal(np.asarray(slot), lane)
 
 
 def test_hierarchical_keys_reject_overflow():
     with pytest.raises(ValueError):
         S.pack_keys_hierarchical(
-            jnp.zeros(1 << 26, jnp.int32), jnp.int32(0), 1 << 8, 4
+            jnp.zeros(1 << 26, jnp.int32), jnp.int32(0), (1 << 8, 4)
         )
