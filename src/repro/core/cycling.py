@@ -46,10 +46,14 @@ def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig) -> Tuple[W
 
     The hop uses the same packed wire format as ``forward_work``: the item
     payload AND the in-flight destination vector are packed into one
-    ``(C, W+1)`` uint32 buffer, compacted with a single sort permutation
-    (items and dests used to be sorted in two separate passes), and shipped
-    with ONE ``collective_permute`` — one payload permute, one payload
-    collective, exactly like the forwarding round.
+    ``(C, W+1)`` uint32 buffer, compacted in ONE payload pass (items and
+    dests used to be sorted in two separate passes), and shipped with ONE
+    ``collective_permute`` — one payload pass, one payload collective,
+    exactly like the forwarding round.  The compaction honours
+    ``cfg.marshal``: the sort mode runs a single-bucket key sort and gathers
+    through the permutation; the scatter mode skips the sort — the passing
+    mask's exclusive prefix sum IS the compacted position, and rows are
+    scattered there directly.
 
     Returns ``(in_flight_queue_after_hop, absorbed_queue)``; both fixed
     capacity.  Must run inside shard_map.
@@ -62,15 +66,30 @@ def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig) -> Tuple[W
 
     absorbed = enqueue(absorbed, q.items, jnp.where(mine, me, DISCARD).astype(jnp.int32), valid)
 
-    from repro.core.sorting import sort_permutation
-
-    # stable compaction: give passing items key 0, others key 1 (tail) —
-    # ONE key sort, ONE payload gather for items+dest together
-    fake_dest = jnp.where(passing, 0, DISCARD).astype(jnp.int32)
-    perm, _, counts = sort_permutation(fake_dest, q.count, 1)
-    n_pass = counts[0]
     packed, spec = T.pack_payload({"dest": q.dest, "items": q.items})
-    packed_c = jnp.take(packed, perm, axis=0)
+    if cfg.marshal == "scatter":
+        from repro.core.exchange import _scatter
+
+        # sort-free stable compaction: position = exclusive prefix of the
+        # passing mask (the 1-bucket counting sort), one payload scatter
+        p32 = passing.astype(jnp.int32)
+        rank = jnp.cumsum(p32) - p32
+        n_pass = jnp.sum(p32)
+        packed_c = _scatter(
+            packed,
+            jnp.where(passing, rank, q.capacity),
+            q.capacity,
+            use_pallas=cfg.use_pallas,
+        )
+    else:
+        from repro.core.sorting import sort_permutation
+
+        # stable compaction: give passing items key 0, others key 1 (tail) —
+        # ONE key sort, ONE payload gather for items+dest together
+        fake_dest = jnp.where(passing, 0, DISCARD).astype(jnp.int32)
+        perm, _, counts = sort_permutation(fake_dest, q.count, 1)
+        n_pass = counts[0]
+        packed_c = jnp.take(packed, perm, axis=0)
 
     shipped = _ring_permute(packed_c, cfg.axis_name, cfg.num_ranks)
     shipped_count = _ring_permute(n_pass, cfg.axis_name, cfg.num_ranks)

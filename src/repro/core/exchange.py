@@ -3,11 +3,22 @@
 Wire format: the caller packs the whole work-item pytree into ONE
 ``(capacity, words)`` uint32 buffer (``core.types.pack_payload`` — the
 paper's contiguous 44-byte ray).  Every backend moves that single buffer with
-a SINGLE payload collective per round, and the send-side marshal composes the
-destination-sort permutation with the send-layout gather so the payload is
-read exactly once and written exactly once (§4.2.1/§6.1) — there is no
-separate "sort the payload, then gather the segments" double pass, and no
-per-pytree-leaf collective fan-out.
+a SINGLE payload collective per round, and the send-side marshal is ONE
+payload pass (§4.2.1/§6.1) in either of two bit-exact modes:
+
+* ``marshal="sort"`` — the destination-sort permutation is composed with the
+  send-layout gather (``packed[perm[off[r] + s]]``): no separate "sort the
+  payload, then gather the segments" double pass;
+* ``marshal="scatter"`` — sort-free: the caller supplies the counting-sort
+  plan (``dest_clean``, in-bucket ``dest_rank`` — one cheap pass over the
+  destination vector, ``core.sorting.destination_rank``) and each packed row
+  is scattered straight to its send-layout slot ``base[dest] + rank``.  No
+  keys, no O(C log C) sort, and the histogram IS the send-count vector.
+
+Both modes place items identically (the scatter reproduces the sort's
+lexicographic stable source order), and neither fans out per pytree leaf.
+The marshal law, alongside the collective budget below: ONE payload pass per
+round pre-collective, whichever mode runs.
 
 Collective budget per ``forward_work`` round (guarded by
 ``tests/test_collective_budget.py``):
@@ -73,11 +84,16 @@ bound mesh axis:
   code path, used only by tests.
 
 All backends share the contract: inputs are the *unsorted* packed payload
-plus the destination-sort permutation and per-destination send counts;
-output is a compacted packed receive buffer plus per-peer receive counts.
-Segment overflow (sender-side ``> peer_capacity``, or receiver-side total
-``> capacity``) is dropped and counted — the queue-capacity contract of
-§3.3/§6.3.
+plus the marshal plan — the destination-sort permutation (``marshal="sort"``)
+or the sanitized-dest/in-bucket-rank pair (``marshal="scatter"``) — and the
+per-destination send counts; output is a compacted packed receive buffer plus
+per-peer receive counts.  Segment overflow (sender-side ``> peer_capacity``,
+or receiver-side total ``> capacity``) is dropped and counted EXACTLY ONCE —
+the queue-capacity contract of §3.3/§6.3: every drop site clamps counts
+*before* they feed any later stage, so an item clamped at one tier never
+reappears in a later tier's (or the receiver's) overflow accounting
+(regression-tested across stacked tier clamps in
+``tests/test_core_scatter.py``).
 """
 from __future__ import annotations
 
@@ -95,6 +111,7 @@ __all__ = [
     "exchange_ragged",
     "exchange_hierarchical",
     "exchange_onehot",
+    "padded_send_buffer",
 ]
 
 
@@ -122,6 +139,31 @@ def exchange_count_matrix(send_counts: jax.Array, axis_name) -> jax.Array:
     exchanges are needed before the payload collective.
     """
     return jax.lax.all_gather(send_counts, axis_name)
+
+
+def _scatter(
+    buf: jax.Array, dstpos: jax.Array, n_slots: int, *, use_pallas: bool
+) -> jax.Array:
+    """The scatter marshal's single payload pass: ``out[dstpos[i]] = buf[i]``.
+
+    Positions at/past ``n_slots`` (the caller's drop/trash sentinel) are
+    discarded — §3.3 semantics.  The Pallas kernel
+    (``kernels/bucket_scatter.scatter_rows``) stores rows at their slots
+    directly; the XLA fallback scatters only the 1-word LANE INDEX and reads
+    the payload back through the inverse — XLA lowers a W-word row scatter
+    far worse than the equivalent gather, and the index scatter is
+    control-plane-sized (like the histogram), so the payload still moves in
+    exactly ONE pass.  Slots no lane claimed hold garbage on this path (row 0)
+    and zeros on the Pallas path — both are masked downstream by the
+    exchanged counts, exactly like the sort path's past-the-segment slots.
+    """
+    if use_pallas:
+        from repro.kernels.bucket_scatter import ops as bs_ops
+
+        return bs_ops.scatter_rows(buf, dstpos, num_slots=n_slots)
+    lane = jnp.arange(buf.shape[0], dtype=jnp.int32)
+    inv = jnp.zeros((n_slots,), jnp.int32).at[dstpos].set(lane, mode="drop")
+    return jnp.take(buf, inv, axis=0)
 
 
 def _clamp_subsegments(cnt: jax.Array, slot: int) -> Tuple[jax.Array, jax.Array]:
@@ -190,6 +232,46 @@ def _compact_blocks(
     return out, new_count, total_recv - new_count
 
 
+def padded_send_buffer(
+    packed: jax.Array,  # (C, W) uint32 — UNSORTED packed payload
+    perm: jax.Array,  # (C,) sort mode: destination-sort permutation
+    send_counts: jax.Array,  # (R,) valid-destination counts
+    *,
+    num_ranks: int,
+    peer_capacity: int,
+    use_pallas: bool = False,
+    marshal: str = "sort",
+    dest_clean: jax.Array = None,  # (C,) scatter mode: sanitized destination
+    dest_rank: jax.Array = None,  # (C,) scatter mode: stable in-bucket rank
+) -> jax.Array:
+    """The padded exchange's send-side marshal — the round's ONE payload pass
+    (isolated so ``benchmarks/run.py --profile`` can time it standalone).
+
+    Sort mode gathers ``packed[perm[off[r] + s]]``; scatter mode scatters row
+    ``i`` to ``dest_clean[i]·S + dest_rank[i]`` (rank ≥ S → §3.3 drop).
+    Returns the ``(R, S, W)`` send buffer; rows past each segment's clamped
+    count are garbage (sort) or zeros (scatter) and masked by the exchanged
+    counts downstream.
+    """
+    R, S = num_ranks, peer_capacity
+    cap = packed.shape[0]
+    if marshal == "scatter":
+        keep = (dest_clean < R) & (dest_rank < S)
+        dstpos = jnp.where(keep, dest_clean * S + dest_rank, R * S)
+        send_buf = _scatter(packed, dstpos, R * S, use_pallas=use_pallas)
+        return send_buf.reshape(R, S, -1)
+    off = jnp.cumsum(send_counts) - send_counts  # segment starts, sorted order
+    r_idx = jnp.repeat(jnp.arange(R, dtype=jnp.int32), S)
+    s_idx = jnp.tile(jnp.arange(S, dtype=jnp.int32), R)
+    slotpos = jnp.clip(off[r_idx] + s_idx, 0, cap - 1)  # position in sorted order
+    src = jnp.take(perm, slotpos)  # compose with the sort → source lane
+    if use_pallas:
+        from repro.kernels.marshal import ops as marshal_ops
+
+        return marshal_ops.fused_marshal(packed, src, num_ranks=R, slot=S)
+    return jnp.take(packed, src, axis=0).reshape(R, S, -1)
+
+
 def exchange_padded(
     packed: jax.Array,  # (C, W) uint32 — UNSORTED packed payload
     perm: jax.Array,  # (C,) destination-sort permutation (sorted pos → lane)
@@ -200,31 +282,28 @@ def exchange_padded(
     capacity: int,
     peer_capacity: int,
     use_pallas: bool = False,
+    marshal: str = "sort",
+    dest_clean: jax.Array = None,  # (C,) scatter mode: sanitized destination
+    dest_rank: jax.Array = None,  # (C,) scatter mode: stable in-bucket rank
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Padded-slot exchange of the packed payload.
 
-    Single-pass marshal: the send buffer row for (peer r, slot s) is
-    ``packed[perm[off[r] + s]]`` — destination sort and slot layout composed
-    into ONE gather, so the payload is read once and written once on the send
-    side.  Returns ``(recv_packed, recv_counts, total, drops)``.
+    Single-pass marshal, either mode: in sort mode the send buffer row for
+    (peer r, slot s) is ``packed[perm[off[r] + s]]`` — destination sort and
+    slot layout composed into ONE gather; in scatter mode row ``i`` goes
+    straight to slot ``dest_clean[i]·S + dest_rank[i]`` (rank ≥ S → the §3.3
+    sender clamp) — ONE scatter, no sort at all.  Either way the payload is
+    read once and written once on the send side.  Returns ``(recv_packed,
+    recv_counts, total, drops)``.
     """
     R, S = num_ranks, peer_capacity
-    cap = packed.shape[0]
     clamped = jnp.minimum(send_counts, S)
     send_drops = jnp.sum(send_counts - clamped)
-    off = jnp.cumsum(send_counts) - send_counts  # segment starts, sorted order
-
-    r_idx = jnp.repeat(jnp.arange(R, dtype=jnp.int32), S)
-    s_idx = jnp.tile(jnp.arange(S, dtype=jnp.int32), R)
-    slotpos = jnp.clip(off[r_idx] + s_idx, 0, cap - 1)  # position in sorted order
-    src = jnp.take(perm, slotpos)  # compose with the sort → source lane
-    if use_pallas:
-        from repro.kernels.marshal import ops as marshal_ops
-
-        send_buf = marshal_ops.fused_marshal(packed, src, num_ranks=R, slot=S)
-    else:
-        send_buf = jnp.take(packed, src, axis=0).reshape(R, S, -1)
-
+    send_buf = padded_send_buffer(
+        packed, perm, send_counts, num_ranks=R, peer_capacity=S,
+        use_pallas=use_pallas, marshal=marshal,
+        dest_clean=dest_clean, dest_rank=dest_rank,
+    )
     recv_counts = exchange_counts(clamped, axis_name)  # the ONE count collective
     recv_buf = _a2a(send_buf, axis_name)  # the ONE payload collective
 
@@ -269,6 +348,9 @@ def exchange_hierarchical(
     level_sizes: Tuple[int, ...],  # ranks per tier, slowest first
     level_capacities: Tuple[int, ...],  # padded rows per peer segment, per tier
     use_pallas: bool = False,
+    marshal: str = "sort",
+    dest_clean: jax.Array = None,  # (C,) scatter mode: sanitized destination
+    dest_rank: jax.Array = None,  # (C,) scatter mode: stable in-bucket rank
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """N-stage packed exchange over an N-D ``(slowest, …, fastest)`` mesh.
 
@@ -284,6 +366,17 @@ def exchange_hierarchical(
     flat-exchange cost parity).  Returns ``(recv_packed, recv_counts, total,
     drops)`` — counts are per *source group* of the slowest non-trivial axis,
     unlike the flat backends' per-rank counts.
+
+    Marshal modes: the first non-trivial stage is the round's single local
+    payload pass — in sort mode the destination-sort permutation is composed
+    into that stage's send gather; in scatter mode each row is scattered
+    straight to its stage slot ``d_l·S + starts[rest, d_l] + rank`` (the
+    in-bucket rank against the FULL destination is exactly the in-sub-segment
+    rank, because every sub-segment holds one destination).  Every stage's
+    sub-segment counts/offsets derive from the ONE histogram (reshaped per
+    tier) and the per-stage count collectives — the sorted destination vector
+    is never re-scanned (no per-tier ``segment_bounds_from_sorted`` neighbor
+    compares), on either marshal path.
     """
     level_sizes = tuple(int(a) for a in level_sizes)
     R = num_ranks
@@ -310,8 +403,17 @@ def exchange_hierarchical(
     if not stages:
         # 1-rank mesh: the round is a local compaction — no collectives
         allowed = jnp.minimum(cnt, capacity)
-        rows = jnp.take(perm, jnp.clip(jnp.arange(capacity), 0, C - 1))
-        out = gather(packed, rows, 1, capacity)[0]
+        if marshal == "scatter":
+            keep = (dest_clean < R) & (dest_rank < capacity)
+            out = _scatter(
+                packed,
+                jnp.where(keep, dest_rank, capacity),
+                capacity,
+                use_pallas=use_pallas,
+            )
+        else:
+            rows = jnp.take(perm, jnp.clip(jnp.arange(capacity), 0, C - 1))
+            out = gather(packed, rows, 1, capacity)[0]
         return out, allowed, allowed[0], jnp.sum(cnt - allowed)
 
     for i, l in enumerate(stages):
@@ -319,14 +421,30 @@ def exchange_hierarchical(
         cnt2d = cnt.reshape(R // A, A)  # rows: buffer order, cols: peer digit
         allowed, starts = _clamp_subsegments(cnt2d, S)
         drops = drops + jnp.sum(cnt2d - allowed)
-        pos = _subsegment_gather(allowed, starts, base.reshape(R // A, A), S)
-        if via_perm:
-            # first non-trivial stage: compose the sort permutation straight
-            # into the send gather — the payload's single read of the round
-            rows = jnp.take(perm, jnp.clip(pos, 0, C - 1).reshape(-1))
+        if via_perm and marshal == "scatter":
+            # first non-trivial stage, sort-free: scatter each row straight
+            # into the stage layout — the payload's single local pass of the
+            # round.  Sub-segment (rest, d_l) holds exactly one destination,
+            # so the in-bucket rank IS the in-sub-segment position; ranks at
+            # or past the stage clamp land in the trash slot (§3.3).
+            row = jnp.clip(dest_clean // A, 0, R // A - 1)
+            col = jnp.clip(dest_clean % A, 0, A - 1)
+            keep = (dest_clean < R) & (dest_rank < allowed[row, col])
+            dstpos = jnp.where(
+                keep, col * S + starts[row, col] + dest_rank, A * S
+            )
+            send = _scatter(packed, dstpos, A * S, use_pallas=use_pallas)
+            send = send.reshape(A, S, W)
         else:
-            rows = jnp.clip(pos, 0, n_rows - 1).reshape(-1)
-        send = gather(buf, rows, A, S)
+            pos = _subsegment_gather(allowed, starts, base.reshape(R // A, A), S)
+            if via_perm:
+                # first non-trivial stage: compose the sort permutation
+                # straight into the send gather — the payload's single read
+                # of the round
+                rows = jnp.take(perm, jnp.clip(pos, 0, C - 1).reshape(-1))
+            else:
+                rows = jnp.clip(pos, 0, n_rows - 1).reshape(-1)
+            send = gather(buf, rows, A, S)
 
         if i == len(stages) - 1:
             # final stage: per-source-group totals suffice — blocks are
@@ -361,17 +479,21 @@ def exchange_ragged(
     capacity: int,
     peer_capacity: int = 0,  # unused; signature parity
     use_pallas: bool = False,
+    marshal: str = "sort",
+    dest_clean: jax.Array = None,  # (C,) scatter mode: sanitized destination
+    dest_rank: jax.Array = None,  # (C,) scatter mode: stable in-bucket rank
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """ragged_all_to_all exchange — the MPI_Alltoallv / GPU-RDMA analogue.
 
-    The packed payload is permuted ONCE into destination order (contiguous
-    per-peer segments) and shipped in ONE variable-size collective; the
-    receive side is written compacted directly (no unpack pass), which is the
-    paper's "large contiguous blocks at very high bandwidth" property.  The
-    control plane is one all-gather of the send-count vector (see
-    :func:`exchange_count_matrix`).
+    The packed payload is placed ONCE into destination order (contiguous
+    per-peer segments) — a gather through the sort permutation, or a sort-free
+    scatter to ``off[dest] + rank`` — and shipped in ONE variable-size
+    collective; the receive side is written compacted directly (no unpack
+    pass), which is the paper's "large contiguous blocks at very high
+    bandwidth" property.  The control plane is one all-gather of the
+    send-count vector (see :func:`exchange_count_matrix`).
     """
-    del peer_capacity, use_pallas  # segments are contiguous: no slot gather
+    del peer_capacity  # segments are contiguous: no slot gather
     me = jax.lax.axis_index(axis_name)
     off = jnp.cumsum(send_counts) - send_counts
 
@@ -379,7 +501,15 @@ def exchange_ragged(
     send_sizes, output_offsets, recv_sizes = _ragged_control_plane(cnt, me, capacity)
     send_drops = jnp.sum(send_counts - send_sizes)
 
-    sorted_packed = jnp.take(packed, perm, axis=0)  # the ONE payload permute
+    if marshal == "scatter":  # the ONE payload pass, sort-free
+        keep = dest_clean < num_ranks
+        pos = off[jnp.clip(dest_clean, 0, num_ranks - 1)] + dest_rank
+        dstpos = jnp.where(keep, pos, packed.shape[0])
+        sorted_packed = _scatter(
+            packed, dstpos, packed.shape[0], use_pallas=use_pallas
+        )
+    else:
+        sorted_packed = jnp.take(packed, perm, axis=0)  # the ONE payload permute
     out = jnp.zeros((capacity, packed.shape[1]), packed.dtype)
     out = compat.ragged_all_to_all(  # the ONE payload collective
         sorted_packed,
@@ -404,17 +534,28 @@ def exchange_onehot(
     capacity: int,
     peer_capacity: int = 0,
     use_pallas: bool = False,
+    marshal: str = "sort",
+    dest_clean: jax.Array = None,
+    dest_rank: jax.Array = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """All-gather reference oracle (tests only): every rank sees everything,
     selects what is addressed to it, and compacts stably by (source, lane).
-    Deliberately a different code path from the production backends.
+    Deliberately a different code path from the production backends (in
+    scatter mode only the initial into-destination-order placement differs).
     """
-    del peer_capacity, use_pallas
+    del peer_capacity
     R = num_ranks
     me = jax.lax.axis_index(axis_name)
     off = jnp.cumsum(send_counts) - send_counts
     cap = packed.shape[0]
-    sorted_packed = jnp.take(packed, perm, axis=0)
+    if marshal == "scatter":
+        keep = dest_clean < R
+        pos = off[jnp.clip(dest_clean, 0, R - 1)] + dest_rank
+        sorted_packed = _scatter(
+            packed, jnp.where(keep, pos, cap), cap, use_pallas=use_pallas
+        )
+    else:
+        sorted_packed = jnp.take(packed, perm, axis=0)
     lane = jnp.arange(cap, dtype=jnp.int32)
     # reconstruct per-item dest from segments: dest[i] = r iff off[r] <= i < off[r]+cnt
     seg_end = off + send_counts

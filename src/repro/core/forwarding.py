@@ -2,19 +2,29 @@
 
 Per round, inside ``shard_map`` (so collectives bind to a real mesh axis):
 
-  1. key sort (§4.2.1, ``core.sorting``): pack (dest, lane) keys, sort them,
-     and keep only the *permutation* — the payload is not touched;
+  1. marshal plan (§4.2.1, ``core.sorting``) — one of two modes:
+     ``marshal="sort"`` packs (dest, lane) keys, sorts them, and keeps only
+     the *permutation* (the payload is not touched); ``marshal="scatter"``
+     skips the sort entirely — one counting-sort pass over the destination
+     vector yields each item's stable in-bucket rank plus the histogram
+     (send counts for free), enough to place every row directly;
   2. pack the work-item pytree into ONE ``(capacity, words)`` uint32 buffer
      (``core.types.pack_payload`` — the paper's contiguous trivially-copyable
      ray on the wire);
   3. exchange (§4.2.2, ``core.exchange``): ONE count collective plus ONE
-     payload collective move the packed buffer; the send-side marshal is a
-     single gather that composes the sort permutation with the send layout,
-     so each ray is read exactly once and written exactly once (§6.1);
+     payload collective move the packed buffer; the send-side marshal is ONE
+     payload pass — a single gather composing the sort permutation with the
+     send layout (sort mode), or a single scatter straight into the send
+     layout at ``base[dest] + rank`` (scatter mode) — so each ray is read
+     exactly once and written exactly once (§6.1) either way;
   4. wrap up (§4.2.3): the received buffer is unpacked back into the item
      pytree and becomes the next input queue, destinations reset to DISCARD,
      the emit counter resets, and a ``psum`` of received counts yields the
      *global* in-flight total for distributed termination.
+
+The two marshal modes are bit-exact end to end (the scatter placement
+reproduces the sort's lexicographic stable source order — property-tested in
+``tests/test_core_scatter.py``); the sort path is kept as the oracle.
 
 Beyond the paper: because sort, exchange and termination test are all traced
 into one XLA program, a full multi-round computation runs under a single
@@ -91,9 +101,16 @@ class ForwardConfig:
         (the slowest tier's per-segment rows).
       exchange: "ragged" (TPU production) | "padded" (portable) |
         "hierarchical" (N-stage, N-D meshes) | "onehot" (test oracle).
-      sort_method: "pack" (paper-faithful packed keys) | "argsort".
-      use_pallas: route the key-sort and the fused pack+permute marshal
-        through the Pallas kernels (``kernels/sort_keys``, ``kernels/marshal``).
+      marshal: "sort" (§4.2.1 key sort + composed send gather — the
+        bit-exactness oracle) | "scatter" (sort-free bucket scatter: one
+        counting-sort pass over the destination vector, then packed rows are
+        scattered straight into the send layout — one payload pass per round
+        pre-collective).  The two modes place items identically.
+      sort_method: "pack" (paper-faithful packed keys) | "argsort".  Only
+        consulted by ``marshal="sort"`` (the scatter plan has no keys).
+      use_pallas: route the marshal-plan and payload-pass kernels through
+        Pallas (``kernels/sort_keys`` + ``kernels/marshal`` for the sort
+        mode, ``kernels/bucket_scatter`` for the scatter mode).
     """
 
     axis_name: Any
@@ -101,6 +118,7 @@ class ForwardConfig:
     capacity: int
     peer_capacity: int = 0
     exchange: str = "padded"
+    marshal: str = "sort"
     sort_method: str = "pack"
     use_pallas: bool = False
     fast_size: int = 0
@@ -111,6 +129,8 @@ class ForwardConfig:
     def __post_init__(self):
         if self.exchange not in _EXCHANGES:
             raise ValueError(f"unknown exchange {self.exchange!r}")
+        if self.marshal not in ("sort", "scatter"):
+            raise ValueError(f"unknown marshal {self.marshal!r}")
         if self.sort_method not in ("pack", "argsort"):
             raise ValueError(f"unknown sort_method {self.sort_method!r}")
         if self.num_ranks <= 0 or self.capacity <= 0:
@@ -240,7 +260,26 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array
     ranks after the exchange, used for distributed-termination detection.
     """
     R = cfg.num_ranks
-    if cfg.exchange == "hierarchical":
+    perm = dest_clean = dest_rank = None
+    if cfg.marshal == "scatter":
+        # Sort-free bucket plan: ONE counting-sort pass over the (cheap,
+        # 1-word-per-item) destination vector yields the sanitized dest, each
+        # item's stable in-bucket rank, and the histogram — the send counts
+        # fall out for free and every exchange stage derives its layout from
+        # them (no keys, no sort, no per-tier boundary detection).  Works for
+        # flat AND hierarchical routes: ranks are lexicographic in the tier
+        # digits, so in-bucket rank against the full destination IS the
+        # in-sub-segment rank at every tier.
+        if cfg.use_pallas:
+            from repro.kernels.bucket_scatter import ops as bs_ops
+
+            dest_clean, dest_rank, hist = bs_ops.rank_and_histogram(
+                q.dest, q.count, num_ranks=R
+            )
+        else:
+            dest_clean, dest_rank, hist = S.destination_rank(q.dest, q.count, R)
+        send_counts = hist[:R]
+    elif cfg.exchange == "hierarchical":
         # Lexicographic N-level keys: ONE sort yields every stage permutation.
         # The Pallas path is routed explicitly through kernels/sort_keys (the
         # flat packed key sorts identically because ranks are lexicographic
@@ -277,6 +316,9 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array
         num_ranks=R,
         capacity=cfg.capacity,
         use_pallas=cfg.use_pallas,
+        marshal=cfg.marshal,
+        dest_clean=dest_clean,
+        dest_rank=dest_rank,
     )
     if cfg.exchange == "hierarchical":
         kwargs.update(

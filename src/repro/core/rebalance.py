@@ -168,6 +168,7 @@ def _intra_config(cfg: ForwardConfig) -> ForwardConfig:
         capacity=cfg.capacity,
         peer_capacity=cfg.level_capacities[-1],
         exchange="padded",
+        marshal=cfg.marshal,
         sort_method=cfg.sort_method,
         use_pallas=cfg.use_pallas,
     )

@@ -1,21 +1,44 @@
-"""Sort-by-destination — the TPU adaptation of RaFI §4.2.1.
+"""Sort-by-destination — the TPU adaptation of RaFI §4.2.1 — and its
+sort-free successor, the bucket-scatter marshal plan.
 
 The paper packs ``dest << 32 | idx`` into a uint64, radix-sorts the keys with
 cub, then permutes the payload ("each ray gets read exactly once and written
 exactly once").  Destinations occupy very few bits (≤1024 ranks → 10 bits),
-so on TPU we adapt rather than port:
+so on TPU we adapt rather than port.  Two marshal modes share this module
+(selected by ``ForwardConfig(marshal=...)``):
 
-* **pack**  — the paper-faithful path: keys ``(dest << idx_bits) | idx`` in a
-  single uint32 (x64 is off by default in JAX; 32 bits suffice whenever
+``marshal="sort"`` — the paper-faithful path:
+
+* **pack**  — keys ``(dest << idx_bits) | idx`` in a single uint32 (x64 is
+  off by default in JAX; 32 bits suffice whenever
   ``log2(R+1) + log2(C) ≤ 32``), sorted with ``jax.lax.sort`` (XLA's native
   TPU sorter, the cub analogue).  Sorting a packed key is bit-identical to a
   stable sort on ``dest``.
 * **argsort** — stable argsort on the destination vector; fallback when the
   packed key would not fit 32 bits.
+
+``marshal="scatter"`` — the counting-sort observation: destination ranks live
+in a tiny domain (R ≤ a few hundred), so a generic O(C log C) key sort is
+overkill.  :func:`destination_rank` computes, in ONE pass over the (cheap,
+1-word-per-item) destination vector, everything the send marshal needs — the
+sanitized destination, each item's stable rank *within* its destination
+bucket, and the histogram (send counts fall out for free).  The exchange then
+scatters packed payload rows straight into the send-buffer layout
+(``base[dest] + rank``): no key materialization, no sort, no separate gather
+— one payload pass pre-collective.  The sort path is kept as the
+bit-exactness oracle (the scatter placement must reproduce its lexicographic
+stable source order end to end; property-tested in
+``tests/test_core_scatter.py``).
+
+Shared pieces:
+
 * the per-destination histogram is computed with a one-hot contraction (MXU
   friendly) / scatter-add, replacing the paper's boundary-detection kernel;
   ``segment_bounds_from_sorted`` keeps the paper's exact begin/end-detection
-  formulation for cross-validation (property-tested equal).
+  formulation for cross-validation only (property-tested equal) — the
+  exchanges derive every segment bound in O(R) from the one histogram
+  (:func:`segment_bounds_from_histogram`), never by re-scanning the sorted
+  destination vector per tier.
 
 Invalid items (lane ≥ count, or dest < 0) get destination ``R`` (one past the
 last rank) so they sort to the tail and fall out of every segment.
@@ -34,8 +57,10 @@ __all__ = [
     "sort_permutation",
     "sort_permutation_hierarchical",
     "destination_histogram",
+    "destination_rank",
     "segment_offsets",
     "segment_bounds_from_sorted",
+    "segment_bounds_from_histogram",
     "pack_keys",
     "pack_keys_hierarchical",
     "unpack_keys",
@@ -191,9 +216,64 @@ def destination_histogram(dest: jax.Array, count: jax.Array, num_ranks: int) -> 
     return jnp.zeros((num_ranks + 1,), jnp.int32).at[d].add(1)
 
 
+def destination_rank(
+    dest: jax.Array, count: jax.Array, num_ranks: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The bucket-scatter marshal plan — ONE pass over the destination vector.
+
+    Returns ``(d_clean, rank, hist)``:
+
+    * ``d_clean`` (C,) int32 — the sanitized destination (invalid lanes → R);
+    * ``rank``    (C,) int32 — the lane's stable rank among earlier lanes with
+      the SAME sanitized destination (the counting-sort position: item ``i``
+      of the sorted order is exactly the item with ``rank == i - off[d]``, so
+      ``base[d_clean] + rank`` reproduces the §4.2.1 stable sort placement
+      without materializing keys or sorting);
+    * ``hist``    (R+1,) int32 — the per-destination histogram (slot R =
+      invalid/discard), identical to :func:`destination_histogram` — the send
+      counts fall out of the same pass for free.
+
+    Formulation: one-hot exclusive prefix sum over the lane axis — via
+    ``lax.associative_scan`` rather than ``jnp.cumsum``, deliberately:
+    XLA:CPU lowers a 2-D axis-0 cumsum to *parallel* reduce-window calls
+    whose thread-pool fork/join contends with the SPMD ranks sharing the
+    host (measurably slower inside an 8-way shard_map round), while the
+    log-depth scan lowers to plain fused adds/slices.  (The Pallas kernel of
+    ``kernels/bucket_scatter`` computes the identical quantities with
+    chunked MXU prefix matmuls; its pure-jnp ``ref`` keeps the naive cumsum
+    as a third, independent formulation.)
+    """
+    cap = dest.shape[0]
+    lane = jnp.arange(cap, dtype=jnp.int32)
+    valid = (lane < count) & (dest >= 0) & (dest < num_ranks)
+    d = jnp.where(valid, dest, num_ranks).astype(jnp.int32)
+    onehot = (
+        d[:, None] == jnp.arange(num_ranks + 1, dtype=jnp.int32)[None, :]
+    ).astype(jnp.int32)
+    incl = jax.lax.associative_scan(jnp.add, onehot, axis=0)
+    excl = incl - onehot  # earlier same-bucket lanes
+    rank = jnp.take_along_axis(excl, d[:, None], axis=1)[:, 0]
+    return d, rank.astype(jnp.int32), incl[-1].astype(jnp.int32)
+
+
 def segment_offsets(send_counts: jax.Array) -> jax.Array:
     """Exclusive prefix sum → start offset of each rank's segment."""
     return jnp.cumsum(send_counts) - send_counts
+
+
+def segment_bounds_from_histogram(send_counts: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(begin, end) of every rank's segment, derived in O(R) from the ONE
+    histogram — no pass over the (sorted) destination vector at all.
+
+    This is what the exchanges use at every hierarchical tier: stage ``l``
+    reshapes the histogram-derived counts and prefix-sums them per sub-
+    segment, so the L-stage route re-reads the destination vector ZERO times
+    after the single histogram pass.  :func:`segment_bounds_from_sorted`
+    (the paper's neighbor-compare boundary detection, one O(C) pass per call)
+    survives only as the cross-validation oracle — property-tested equal.
+    """
+    off = segment_offsets(send_counts)
+    return off, off + send_counts
 
 
 def segment_bounds_from_sorted(sorted_dest: jax.Array, num_ranks: int) -> Tuple[jax.Array, jax.Array]:

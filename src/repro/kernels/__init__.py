@@ -3,6 +3,8 @@
 Layout: one subpackage per kernel —
 
   sort_keys/       §4.2.1 key-pack + per-destination histogram (MXU one-hot)
+  bucket_scatter/  sort-free marshal: in-bucket rank + histogram in one pass,
+                   payload scattered straight into the send layout
   compact/         cross-tile prefix-sum stream compaction (the TPU "atomic queue")
   marshal/         §4.2.2 segment marshal/unmarshal via scalar-prefetch dynamic slices
   nbody_forces/    §5.5 tiled O(N²) pairwise gravity (MXU-aligned)
@@ -12,13 +14,27 @@ Layout: one subpackage per kernel —
 Each subpackage has ``kernel.py`` (pl.pallas_call + BlockSpec VMEM tiling),
 ``ops.py`` (jit'd public wrapper with an ``interpret`` switch), and ``ref.py``
 (pure-jnp oracle).  On this CPU container kernels run with ``interpret=True``;
-on TPU they compile via Mosaic.
+on TPU they compile via Mosaic.  The ``RAFI_PALLAS_INTERPRET`` env var
+overrides the default ("1"/"true" forces interpret mode even on TPU, "0"
+forces Mosaic) — CI uses it (via the ``pallas_interpret`` pytest marker in
+``tests/conftest.py``) to exercise every kernel in tier-1 without a TPU.
 """
+import os
+
 import jax
 
 from repro.compat import sds  # noqa: F401  (re-export: kernels build out_shapes with it)
 
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
 
 def default_interpret() -> bool:
-    """Interpret Pallas kernels unless we are actually on TPU."""
+    """Interpret Pallas kernels unless we are actually on TPU; the
+    ``RAFI_PALLAS_INTERPRET`` env var overrides in either direction."""
+    env = os.environ.get("RAFI_PALLAS_INTERPRET", "").strip().lower()
+    if env in _TRUTHY:
+        return True
+    if env in _FALSY:
+        return False
     return jax.default_backend() != "tpu"

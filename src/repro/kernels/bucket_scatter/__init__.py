@@ -1,0 +1,12 @@
+"""Fused bucket-scatter marshal: histogram + prefix-scan + scatter, sort-free.
+
+The §4.2.1 sort exists only to make per-destination segments contiguous for
+the exchange.  Destination ranks live in a tiny domain (R ≤ a few hundred),
+so a counting sort wins outright: ``rank_and_histogram`` computes each item's
+stable rank within its destination bucket AND the per-destination histogram
+in one pass over the (1-word-per-item) destination vector, and
+``scatter_rows`` places packed payload rows directly at ``base[dest] + rank``
+in the send-buffer layout — one payload pass, no keys, no sort, no separate
+gather.  ``ForwardConfig(marshal="scatter")`` routes here; the sort path
+stays as the bit-exactness oracle.
+"""

@@ -1,0 +1,185 @@
+"""Pallas kernels: the fused single-pass bucket-scatter marshal.
+
+``rank_and_histogram`` — the counting-sort control plane, replacing key
+pack + ``jax.lax.sort``: one pass over the destination vector yields the
+sanitized destination, each lane's stable rank among earlier lanes of the
+SAME destination, and the per-destination histogram (= the exchange's send
+counts, for free).  ``base[dest] + rank`` then reproduces the §4.2.1 stable
+sort placement exactly — no key materialization, no O(C log C) sort.
+
+The prefix is computed in CHUNK-row blocks mapped onto the MXU: a
+strictly-lower-triangular (CHUNK, CHUNK) mask matmul'd with the chunk's
+one-hot destination matrix gives every lane its exclusive same-bucket count
+inside the chunk; chunk totals roll into a running histogram between blocks,
+and the running histogram itself is carried across grid steps in the
+revisited histogram output block (TPU grid steps run sequentially — the
+canonical Pallas reduction pattern, as in ``kernels/sort_keys``).
+
+VMEM budget per step: TILE·3·4 B (dest, d_clean, rank) + CHUNK²·4 B (the
+64 KiB triangular mask at CHUNK=128) + CHUNK·(R+1)·4 B (one-hot) — for
+TILE=2048, R=512: ~120 KiB, far inside a v5e core's ~16 MB.
+
+``scatter_rows`` — the single payload pass: ``out[dstpos[i]] = src[i]``.
+The caller composes the bucket plan with the send layout
+(``dstpos = base[dest] + rank``); each grid step stores a TILE of rows at
+dynamically-addressed offsets of the revisited output block (grid steps are
+sequential, so the read-modify-write is race-free — same contract as
+``kernels/marshal.unmarshal``).  A trash row past the last slot absorbs
+dropped lanes (invalid destination, or rank beyond the segment clamp — the
+§3.3 drop rule) and is cut from the result.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import sds
+
+
+def _rank_hist_kernel(
+    dest_ref, count_ref, dclean_ref, rank_ref, hist_ref, *, num_ranks, tile, chunk
+):
+    step = pl.program_id(0)
+    lane0 = step * tile
+    lane = lane0 + jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+    d = dest_ref[...]
+    count = count_ref[0]
+    valid = (lane < count) & (d >= 0) & (d < num_ranks)
+    d_clean = jnp.where(valid, d, num_ranks)
+    dclean_ref[...] = d_clean
+
+    @pl.when(step == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    ).astype(jnp.float32)
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, (chunk, num_ranks + 1), 1)
+    run = hist_ref[...].astype(jnp.float32)  # totals of all previous lanes
+    for c in range(tile // chunk):  # static unroll: CHUNK-row prefix blocks
+        d_c = jax.lax.dynamic_slice(d_clean, (c * chunk,), (chunk,))
+        onehot = (d_c[:, None] == r_iota).astype(jnp.float32)
+        excl = jax.lax.dot_general(  # strictly-lower tri → exclusive prefix
+            tri, onehot, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        rank_c = jnp.sum((excl + run[None, :]) * onehot, axis=1)
+        rank_ref[pl.ds(c * chunk, chunk)] = rank_c.astype(jnp.int32)
+        run = run + jnp.sum(onehot, axis=0)
+    hist_ref[...] = run.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_ranks", "tile", "chunk", "interpret")
+)
+def rank_and_histogram(
+    dest: jax.Array,
+    count: jax.Array,
+    *,
+    num_ranks: int,
+    tile: int = 2048,
+    chunk: int = 0,
+    interpret: bool = False,
+):
+    """Returns ``(d_clean (C,) i32, rank (C,) i32, hist (R+1,) i32)``; invalid
+    lanes get destination R and rank among the R-bucket tail.
+
+    Counts ride the MXU in float32, exact only below 2**24 — larger
+    capacities raise (the scatter analogue of ``pack_keys``'s 32-bit key
+    overflow ValueError; use the XLA path, which scans in int32).
+    """
+    cap = dest.shape[0]
+    if cap > 1 << 24:
+        raise ValueError(
+            f"capacity {cap} exceeds the float32-exact count range (2**24); "
+            "in-bucket ranks would silently collide — use the XLA path "
+            "(core.sorting.destination_rank)"
+        )
+    tile = min(tile, cap)
+    if cap % tile:
+        raise ValueError(f"capacity {cap} not divisible by tile {tile}")
+    chunk = chunk or math.gcd(tile, 128)
+    if tile % chunk:
+        raise ValueError(f"tile {tile} not divisible by chunk {chunk}")
+    kern = functools.partial(
+        _rank_hist_kernel, num_ranks=num_ranks, tile=tile, chunk=chunk
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(cap // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((num_ranks + 1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            sds((cap,), jnp.int32, dest, count),
+            sds((cap,), jnp.int32, dest, count),
+            sds((num_ranks + 1,), jnp.int32, dest, count),
+        ],
+        interpret=interpret,
+    )(dest, count.reshape(1).astype(jnp.int32))
+
+
+def _scatter_rows_kernel(idx_ref, in_ref, out_ref, *, tile):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    for t in range(tile):  # static unroll: `tile` dynamic row stores per step
+        out_ref[pl.ds(idx_ref[i * tile + t], 1), :] = in_ref[pl.ds(t, 1), :]
+
+
+@functools.partial(jax.jit, static_argnames=("num_slots", "interpret", "tile"))
+def scatter_rows(
+    src: jax.Array,  # (N, D) packed payload rows
+    dstpos: jax.Array,  # (N,) int32 send-layout row per source row
+    *,
+    num_slots: int,
+    interpret: bool = False,
+    tile: int = 8,
+) -> jax.Array:
+    """The fused single-pass scatter marshal: ``out[dstpos[i]] = src[i]``.
+
+    ``dstpos`` is the bucket plan composed with the send layout
+    (``base[dest] + rank``), so this one scatter subsumes what used to be
+    key-sort-then-segment-gather — each payload row is read exactly once and
+    written exactly once.  Rows with ``dstpos`` at/past ``num_slots`` (or
+    negative) land in a trash row that is cut from the result (§3.3 drops);
+    untouched slots are zero.  The index vector lands in SMEM by scalar
+    prefetch; each grid step stores a TILE of rows (padded up to a whole
+    tile, padding aimed at the trash row).
+    """
+    n, d = src.shape
+    pos = dstpos.astype(jnp.int32)
+    # out-of-range EITHER side (negative, or at/past num_slots) → trash row
+    idx = jnp.where((pos < 0) | (pos > num_slots), num_slots, pos)
+    n_pad = -(-n // tile) * tile
+    if n_pad != n:
+        idx = jnp.concatenate([idx, jnp.full((n_pad - n,), num_slots, jnp.int32)])
+        src = jnp.concatenate([src, jnp.zeros((n_pad - n, d), src.dtype)])
+    out = pl.pallas_call(
+        functools.partial(_scatter_rows_kernel, tile=tile),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_pad // tile,),
+            in_specs=[pl.BlockSpec((tile, d), lambda i, idx: (i, 0))],
+            out_specs=pl.BlockSpec((num_slots + 1, d), lambda i, idx: (0, 0)),
+        ),
+        out_shape=sds((num_slots + 1, d), src.dtype, src, idx),
+        interpret=interpret,
+    )(idx, src)
+    return out[:num_slots]

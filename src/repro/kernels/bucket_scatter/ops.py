@@ -1,0 +1,54 @@
+"""Public wrapper: the sort-free bucket-scatter marshal plan + payload pass.
+
+``ForwardConfig(marshal="scatter", use_pallas=True)`` routes here:
+``rank_and_histogram`` replaces the ``sort_keys`` pack+sort (same control
+data — sanitized destination, stable in-bucket rank, histogram — no keys, no
+sort), and ``scatter_rows`` is the round's single payload pass (the scatter
+dual of ``kernels/marshal.gather_rows``).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.bucket_scatter import kernel as K
+
+
+def rank_and_histogram(
+    dest: jax.Array,
+    count: jax.Array,
+    *,
+    num_ranks: int,
+    tile: int = 2048,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pallas-path equivalent of ``core.sorting.destination_rank``:
+    ``(d_clean, rank, hist)`` in one kernel pass over the destination
+    vector."""
+    if interpret is None:
+        interpret = default_interpret()
+    cap = dest.shape[0]
+    # pick a tile that divides the capacity
+    t = min(tile, cap)
+    while cap % t:
+        t //= 2
+    return K.rank_and_histogram(
+        dest, count, num_ranks=num_ranks, tile=t, interpret=interpret
+    )
+
+
+def scatter_rows(
+    src: jax.Array,
+    dstpos: jax.Array,
+    *,
+    num_slots: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(N, W) packed payload + composed send-layout positions → (num_slots, W)
+    send buffer in ONE payload pass (see ``kernel.scatter_rows``)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return K.scatter_rows(src, dstpos, num_slots=num_slots, interpret=interpret)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the bucket-scatter kernels."""
+import jax.numpy as jnp
+
+
+def rank_and_histogram(dest, count, *, num_ranks):
+    """(d_clean, rank-within-bucket, histogram) via one-hot exclusive cumsum."""
+    cap = dest.shape[0]
+    lane = jnp.arange(cap, dtype=jnp.int32)
+    valid = (lane < count) & (dest >= 0) & (dest < num_ranks)
+    d = jnp.where(valid, dest, num_ranks).astype(jnp.int32)
+    onehot = (
+        d[:, None] == jnp.arange(num_ranks + 1, dtype=jnp.int32)[None, :]
+    ).astype(jnp.int32)
+    excl = jnp.cumsum(onehot, axis=0) - onehot
+    rank = jnp.take_along_axis(excl, d[:, None], axis=1)[:, 0]
+    return d, rank.astype(jnp.int32), jnp.sum(onehot, axis=0).astype(jnp.int32)
+
+
+def scatter_rows(src, dstpos, *, num_slots):
+    """out[dstpos[i]] = src[i]; out-of-range rows (negative or at/past
+    num_slots) are dropped.  (``.at[].set`` WRAPS negative indices even with
+    mode="drop", so negatives are redirected past the end explicitly.)"""
+    pos = dstpos.astype(jnp.int32)
+    idx = jnp.where(pos < 0, num_slots, pos)
+    out = jnp.zeros((num_slots, src.shape[1]), src.dtype)
+    return out.at[idx].set(src, mode="drop")

@@ -271,6 +271,56 @@ def slow_axis_bytes_model(
     raise ValueError(f"no slow-axis model for exchange {exchange!r}")
 
 
+def marshal_cost_model(
+    marshal: str,
+    *,
+    capacity: int,
+    item_bytes: int,
+    send_rows: int,
+    num_ranks: int = 0,
+) -> Dict[str, float]:
+    """Model: send-side marshal work ONE rank does per forwarding round —
+    the §6.1 "all of [sort/marshal] are trivially cheap" claim, made
+    checkable next to the collective byte models.
+
+    Both modes obey the marshal law — exactly ONE pass over the PACKED
+    PAYLOAD pre-collective (read C rows, write ``send_rows`` padded rows);
+    what ``marshal="scatter"`` deletes is everything the sort did to the KEY
+    vector first:
+
+    * ``sort``: key pack (read C dest words, write C keys) + the
+      compare-exchange sort — modeled as ``ceil(log2 C)`` read+write passes
+      over the C-word key vector (XLA's bitonic/merge family) — then the one
+      composed payload gather.
+    * ``scatter``: the counting-sort plan (read C dest words, write C ranks +
+      C sanitized dests, accumulate the (R+1)-word histogram) — a single
+      O(C) pass, no keys — then the one payload scatter.
+
+    Returns ``{"payload_passes", "payload_bytes", "plan_bytes",
+    "total_bytes"}`` (bytes are on-chip traffic, not wire bytes; compare
+    against the exchange's collective bytes to see marshal overhead shrink
+    from O(C log C) + 2-passes-equivalent to the single-pass floor).
+    """
+    payload_bytes = float((capacity + send_rows) * item_bytes)
+    word = 4.0
+    if marshal == "sort":
+        log2c = max(1, int(np.ceil(np.log2(max(capacity, 2)))))
+        plan = capacity * word * 2  # key pack: read dest, write keys
+        plan += log2c * 2 * capacity * word  # sort passes over the keys
+    elif marshal == "scatter":
+        plan = capacity * word  # read dest
+        plan += 2 * capacity * word  # write d_clean + in-bucket rank
+        plan += (num_ranks + 1) * word  # histogram accumulator
+    else:
+        raise ValueError(f"no marshal model for {marshal!r}")
+    return {
+        "payload_passes": 1.0,  # the marshal law, either mode
+        "payload_bytes": payload_bytes,
+        "plan_bytes": float(plan),
+        "total_bytes": payload_bytes + float(plan),
+    }
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Sum of result-shape bytes per collective kind; handles both post-SPMD
     HLO (``all-gather(...)``) and StableHLO (``"stablehlo.all_gather"``)."""

@@ -21,6 +21,25 @@ import pytest
 from repro import compat
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "pallas_interpret: force Pallas kernels into interpret mode for this "
+        "test (sets RAFI_PALLAS_INTERPRET=1) so tier-1 exercises the kernel "
+        "code paths — bucket_scatter, sort_keys, marshal — without a TPU.  "
+        "On the CPU container interpret is already the default; on a TPU "
+        "runner the marker keeps these tests backend-independent.",
+    )
+
+
+@pytest.fixture(autouse=True)
+def _pallas_interpret_toggle(request, monkeypatch):
+    """Honour the ``pallas_interpret`` marker via the env var that
+    ``repro.kernels.default_interpret`` consults (the CI toggle)."""
+    if request.node.get_closest_marker("pallas_interpret"):
+        monkeypatch.setenv("RAFI_PALLAS_INTERPRET", "1")
+
+
 @pytest.fixture(scope="session")
 def mesh8():
     """A 1-D 8-way mesh over axis 'data'."""

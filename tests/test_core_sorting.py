@@ -90,6 +90,46 @@ def test_segment_bounds_match_histogram_offsets(dests):
     np.testing.assert_array_equal(np.asarray(begin), off)
 
 
+@given(
+    st.lists(st.integers(-2, 9), min_size=0, max_size=100),
+    st.integers(0, 100),
+)
+@settings(max_examples=40, deadline=None)
+def test_destination_rank_matches_sort(dests, count):
+    """The counting-sort plan is the sort's inverse image: item i must land at
+    sorted position off[d_clean[i]] + rank[i], and the histogram must equal
+    the sort path's — no keys, no sort, same placement."""
+    cap = 128
+    R = 8
+    dest = jnp.full((cap,), -1, jnp.int32).at[: len(dests)].set(
+        jnp.array(dests, jnp.int32)
+    )
+    d_clean, rank, hist = S.destination_rank(dest, jnp.int32(count), R)
+    perm, d_sorted, counts = S.sort_permutation(dest, jnp.int32(count), R)
+    np.testing.assert_array_equal(np.asarray(hist), np.asarray(counts))
+    off = np.concatenate([[0], np.cumsum(np.asarray(hist))[:-1]])
+    pos = off[np.asarray(d_clean)] + np.asarray(rank)
+    # scatter-to-pos inverts the sort permutation exactly
+    inv = np.empty(cap, np.int64)
+    inv[np.asarray(perm)] = np.arange(cap)
+    np.testing.assert_array_equal(pos, inv)
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=60))
+@settings(max_examples=40, deadline=None)
+def test_segment_bounds_from_histogram_match_neighbor_compare(dests):
+    """The O(R) histogram-derived bounds must agree with the paper's O(C)
+    neighbor-compare boundary detection — the latter survives only as this
+    cross-validation oracle; no exchange stage re-scans the sorted vector."""
+    R = 6
+    d_sorted = jnp.array(sorted(dests), jnp.int32)
+    counts = jnp.array(np.bincount(dests, minlength=R), jnp.int32)
+    begin_h, end_h = S.segment_bounds_from_histogram(counts)
+    begin_s, end_s = S.segment_bounds_from_sorted(d_sorted, R)
+    np.testing.assert_array_equal(np.asarray(begin_h), np.asarray(begin_s))
+    np.testing.assert_array_equal(np.asarray(end_h), np.asarray(end_s))
+
+
 def test_pack_keys_rejects_overflow():
     with pytest.raises(ValueError):
         S.pack_keys(jnp.zeros(1 << 26, jnp.int32), jnp.int32(0), 1 << 10)

@@ -12,6 +12,11 @@ except ImportError:  # container without hypothesis — deterministic stub
     from _hypothesis_stub import given, settings, st
 
 from repro.core import work_item
+from repro.kernels.bucket_scatter import (
+    kernel as bs_kernel,
+    ops as bs_ops,
+    ref as bs_ref,
+)
 from repro.kernels.compact import ops as compact_ops, ref as compact_ref
 from repro.kernels.delta_tracking import ops as dt_ops, ref as dt_ref
 from repro.kernels.marshal import ops as marshal_ops, kernel as marshal_k, ref as marshal_ref
@@ -59,6 +64,93 @@ def test_sort_keys_full_sort_matches_core():
     np.testing.assert_array_equal(np.asarray(pc), np.asarray(rc))
     np.testing.assert_array_equal(np.asarray(pi.b), np.asarray(ri.b))
     np.testing.assert_allclose(np.asarray(pi.a), np.asarray(ri.a))
+
+
+# ----------------------------------------------------------- bucket_scatter
+@pytest.mark.pallas_interpret
+@pytest.mark.parametrize(
+    "cap,tile", [(64, 16), (256, 256), (96, 32), (192, 64), (128, 128)]
+)
+@pytest.mark.parametrize("num_ranks", [4, 8, 64])
+def test_bucket_scatter_rank_hist_matches_ref(cap, tile, num_ranks):
+    """The chunked-MXU prefix kernel vs the one-hot cumsum oracle — d_clean,
+    in-bucket rank, and histogram all bit-equal (incl. non-128-multiple tiles
+    that exercise the gcd chunking)."""
+    rng = np.random.default_rng(cap + num_ranks)
+    dest = jnp.array(rng.integers(-2, num_ranks + 2, cap), jnp.int32)
+    count = jnp.int32(rng.integers(0, cap + 1))
+    dk, rk, hk = bs_kernel.rank_and_histogram(
+        dest, count, num_ranks=num_ranks, tile=tile, interpret=True
+    )
+    dr, rr, hr = bs_ref.rank_and_histogram(dest, count, num_ranks=num_ranks)
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(rr))
+    np.testing.assert_array_equal(np.asarray(hk), np.asarray(hr))
+
+
+@pytest.mark.pallas_interpret
+@pytest.mark.parametrize("n,slots,D", [(64, 64, 3), (256, 80, 9), (100, 64, 1)])
+def test_bucket_scatter_rows_matches_ref(n, slots, D):
+    """scatter_rows vs its jnp oracle, incl. out-of-range (dropped) rows and
+    duplicate trash positions."""
+    rng = np.random.default_rng(n + slots)
+    src = jnp.array(rng.integers(0, 2**32, (n, D), dtype=np.uint32))
+    pos = jnp.array(rng.integers(-3, slots + 3, n), jnp.int32)
+    got = bs_kernel.scatter_rows(src, pos, num_slots=slots, interpret=True)
+    want = bs_ref.scatter_rows(src, pos, num_slots=slots)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.pallas_interpret
+def test_bucket_scatter_negative_positions_are_dropped():
+    """Negative dstpos must land in the trash, not wrap to a valid slot
+    (``.at[].set`` wraps negatives even with mode='drop' — the ref guards
+    explicitly, the kernel redirects them past the end)."""
+    src = jnp.ones((4, 2), jnp.uint32)
+    pos = jnp.array([-1, -4, 1, 9], jnp.int32)  # only index 2 survives
+    want = jnp.zeros((4, 2), jnp.uint32).at[1].set(1)
+    got_k = bs_kernel.scatter_rows(src, pos, num_slots=4, interpret=True)
+    got_r = bs_ref.scatter_rows(src, pos, num_slots=4)
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got_r), np.asarray(want))
+
+
+def test_bucket_scatter_rejects_f32_inexact_capacity():
+    """Counts ride the MXU in f32: capacities past 2**24 must raise loudly
+    (the scatter analogue of pack_keys' 32-bit overflow), never collide."""
+    with pytest.raises(ValueError, match="2\\*\\*24"):
+        bs_kernel.rank_and_histogram(
+            jnp.zeros((1 << 25,), jnp.int32), jnp.int32(0), num_ranks=4,
+            interpret=True,
+        )
+
+
+@pytest.mark.pallas_interpret
+def test_bucket_scatter_reproduces_sort_placement():
+    """The tentpole equivalence at the kernel level: scattering every row to
+    ``off[dest] + rank`` reproduces key-pack + lax.sort + gather bit-exactly
+    on the valid prefix — the counting sort IS the stable sort."""
+    from repro.core import sorting as S
+
+    cap, R, W = 256, 16, 7
+    rng = np.random.default_rng(21)
+    dest = jnp.array(rng.integers(-1, R + 1, cap), jnp.int32)
+    count = jnp.int32(200)
+    packed = jnp.array(rng.integers(0, 2**32, (cap, W), dtype=np.uint32))
+    d_clean, rank, hist = bs_ops.rank_and_histogram(
+        dest, count, num_ranks=R, interpret=True
+    )
+    off = jnp.cumsum(hist[:R]) - hist[:R]
+    keep = d_clean < R
+    dstpos = jnp.where(keep, off[jnp.clip(d_clean, 0, R - 1)] + rank, cap)
+    got = bs_ops.scatter_rows(packed, dstpos, num_slots=cap, interpret=True)
+    perm, _d, counts = S.sort_permutation(dest, count, R, method="pack")
+    want = jnp.take(packed, perm, axis=0)
+    n_valid = int(np.asarray(hist[:R]).sum())
+    np.testing.assert_array_equal(
+        np.asarray(got)[:n_valid], np.asarray(want)[:n_valid]
+    )
+    np.testing.assert_array_equal(np.asarray(hist), np.asarray(counts))
 
 
 # ------------------------------------------------------------------ compact

@@ -48,6 +48,25 @@ def test_collective_bytes_stablehlo():
     assert out["all-reduce"] == 128 * 2
 
 
+def test_marshal_cost_model_scatter_undercuts_sort():
+    """The marshal law: both modes make exactly ONE payload pass, and the
+    scatter plan's O(C) bytes must undercut the sort's O(C log C) key traffic
+    at every size (the whole point of the bucket-scatter marshal)."""
+    from repro.roofline.analysis import marshal_cost_model
+
+    for cap in (256, 4096, 1 << 16):
+        send_rows = 2 * cap
+        kw = dict(capacity=cap, item_bytes=44, send_rows=send_rows, num_ranks=256)
+        sort = marshal_cost_model("sort", **kw)
+        scat = marshal_cost_model("scatter", **kw)
+        assert sort["payload_passes"] == scat["payload_passes"] == 1.0
+        assert sort["payload_bytes"] == scat["payload_bytes"]
+        assert scat["plan_bytes"] < sort["plan_bytes"]
+        assert scat["total_bytes"] < sort["total_bytes"]
+    with pytest.raises(ValueError):
+        marshal_cost_model("bogus", capacity=8, item_bytes=4, send_rows=8)
+
+
 def test_roofline_terms_dominance():
     t = RooflineTerms(
         flops=197e12 * 256,          # exactly 1 s of compute on 256 chips
