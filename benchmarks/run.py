@@ -28,6 +28,17 @@
                          intra scope) with per-tier payload bytes from the
                          lowered HLO — intra must put zero below the
                          fastest tier.
+  autotune_drift_*       ISSUE 5: drifting hot-spot scenario (the hot
+                         destination rotates mid-run) driven by
+                         ``tune.autotune_forward`` — per-burst rows show the
+                         capacities/drops trajectory; the final row compares
+                         the tuned config's modeled padded wire bytes against
+                         the §6.3 worst-case static sizing that achieves the
+                         same zero drops.  The section FAILS unless the tuner
+                         converges drop-free at ≤ the static wire cost.
+  fwd_walltime_telemetry_* only with ``--compare off,telemetry``: forwarding
+                         walltime with the flight recorder off vs on
+                         (interleaved medians, like the marshal gate).
   sort_throughput_*      §4.2.1 key pack+sort throughput (keys/s), XLA vs
                          Pallas(interpret) paths.
   app_*                  §5 application throughputs (CPU, small scenes).
@@ -50,7 +61,15 @@ exchange regresses the flat one by >5% walltime on a single-node mesh;
 3-level route's modeled slowest-tier bytes undercut both alternatives;
 ``--compare sort,scatter`` is the PR-4 gate: the marshal sweep on the flat
 and (2, 2, 2) meshes, failing if the scatter marshal regresses the sort path
-by >5% walltime at any point (BENCH_PR4.json is this gate's ``--json`` dump).
+by >5% walltime at any point (BENCH_PR4.json is this gate's ``--json`` dump);
+``--compare off,telemetry`` is the PR-5 gate: telemetry-on walltime must stay
+within a 1.05× geomean of telemetry-off across the sweep, and the
+autotune_drift section must converge — BENCH_PR5.json is this gate's dump.
+``--autotune`` runs the autotune_drift section alone.
+
+Every ``--json`` dump carries provenance: git SHA, jax version, platform,
+the command line, and the ``ForwardConfig`` fields + mesh shape of each
+benchmarked configuration (``meta.configs``) — enough to re-run any row.
 """
 import os
 
@@ -60,6 +79,7 @@ import argparse
 import dataclasses
 import json
 import platform
+import sys
 import time
 
 import jax
@@ -71,6 +91,31 @@ from repro import compat
 
 ROWS = []
 PROFILE = False  # --profile: per-phase fwd_profile_* rows (see docstring)
+CONFIGS = {}  # tag -> ForwardConfig fields + mesh shape (JSON provenance)
+
+
+def record_cfg(tag: str, cfg, mesh=None) -> None:
+    """Register a benchmarked ForwardConfig (+ its mesh shape) for the JSON
+    dump's provenance block — every BENCH_*.json names the exact configs it
+    measured, not just the row names."""
+    d = dataclasses.asdict(cfg)
+    if mesh is not None:
+        d["mesh_shape"] = {str(k): int(v) for k, v in dict(mesh.shape).items()}
+    CONFIGS.setdefault(tag, d)
+
+
+def _git_sha():
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "-C", os.path.dirname(os.path.abspath(__file__)),
+             "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        )
+        return out.stdout.strip() or None
+    except Exception:
+        return None
 
 
 def _parse_derived(derived: str):
@@ -147,12 +192,23 @@ def _emit_kernel(cfg, n_emit, cap):
         )
         dest = ((me * 7 + lane * 131) % cfg.num_ranks).astype(jnp.int32)
         q = enqueue(q, rays, dest, jnp.ones(n_emit, bool))
-        nq, total = forward_work(q, cfg)
+        if cfg.telemetry:
+            nq, total, stats = forward_work(q, cfg)
+            # add every stats leaf into the output VALUE (no ×0 that XLA
+            # could fold away) so the telemetry-on timing pays for the full
+            # capture; nothing reads the kernel's value, only its walltime
+            telem_sum = sum(jnp.sum(l) for l in jax.tree.leaves(stats))
+        else:
+            nq, total = forward_work(q, cfg)
+            telem_sum = jnp.int32(0)
         # depend on the payload so the exchange isn't DCE'd out of the HLO
         checksum = (
             jnp.sum(nq.items.tmin) + jnp.sum(nq.items.origin) + jnp.sum(nq.items.extra)
         )
-        return nq.count[None] + (checksum * 0).astype(jnp.int32) + x[:1].astype(jnp.int32) * 0
+        return (
+            nq.count[None] + (checksum * 0).astype(jnp.int32)
+            + telem_sum.astype(jnp.int32) + x[:1].astype(jnp.int32) * 0
+        )
 
     return kernel
 
@@ -238,6 +294,7 @@ def fwd_walltime():
             # peer_capacity only exists for padded slots (onehot rejects it)
             kw = {"peer_capacity": cap} if exchange == "padded" else {}
             cfg = ForwardConfig("data", 8, cap, exchange=exchange, **kw)
+            record_cfg(f"fwd_walltime_{exchange}_n{n_emit}", cfg, mesh)
             f = jax.jit(
                 compat.shard_map(_emit_kernel(cfg, n_emit, cap), mesh=mesh,
                                  in_specs=P("data"), out_specs=P("data"))
@@ -386,6 +443,7 @@ def fwd_walltime_hier():
             flat, hier, mesh = _hier_pair(nodes, devs, n_emit, cap)
             R = nodes * devs
             for tag, cfg in (("flat", flat), ("hier", hier)):
+                record_cfg(f"fwd_walltime_hier_{tag}_{nodes}x{devs}", cfg, mesh)
                 us = _time_fwd(cfg, mesh, n_emit, cap)
                 slow_b = slow_axis_bytes_model(
                     cfg.exchange if tag == "hier" else "padded",
@@ -492,6 +550,7 @@ def fwd_walltime_hier3():
         cap = max(256, n_emit * 2)
         flat, hier2, hier3, mesh = _pod_configs(cap)
         for tag, cfg in (("flat", flat), ("hier2", hier2), ("hier3", hier3)):
+            record_cfg(f"fwd_walltime_hier3_{tag}", cfg, mesh)
             us = _time_fwd_axes(cfg, mesh, axes, n_emit, cap)
             tiers = [r * item_b for r in _route_tier_rows(tag, cfg)]
             # burst_rows: the hot-spot burst one destination absorbs without
@@ -568,18 +627,208 @@ def rebalance_skew():
         )
 
 
+# ------------------------------------- ISSUE 5: drifting hot-spot autotune
+def _drift_run_burst(mesh, axes, num_ranks, cap, n_emit, rounds, times):
+    """``tune.autotune_forward`` burst driver for the drifting hot-spot
+    scenario: every round, half of each rank's emits chase a hot destination
+    that ROTATES every 2 rounds — a workload no single static observation
+    sizes correctly, which is exactly what the flight recorder's windowed
+    max is for.  Each distinct config re-jits (configs are static);
+    per-burst walltimes are appended to ``times``."""
+    from repro import telemetry as TM
+    from repro.core import DISCARD, enqueue, make_queue, run_until_done
+
+    def emits(me, rnd):
+        lane = jnp.arange(n_emit)
+        hot = (rnd // 2) % num_ranks
+        dest = jnp.where(lane % 2 == 0, hot, (me + lane) % num_ranks)
+        rays = Ray44(
+            origin=jnp.ones((n_emit, 3)), direction=jnp.ones((n_emit, 3)),
+            tmin=lane.astype(jnp.float32), pixel=lane.astype(jnp.int32),
+            integral=jnp.zeros(n_emit), extra=jnp.zeros((n_emit, 2)),
+        )
+        return rays, dest.astype(jnp.int32)
+
+    compiled = {}
+
+    def run_burst(cfg):
+        if cfg not in compiled:
+            def round_fn(q_in, acc, rnd):
+                me = jax.lax.axis_index(axes)
+                rays, dest = emits(me, rnd + 1)
+                out = make_queue(_ray_proto(), cap)
+                out = enqueue(
+                    out, rays, jnp.where(rnd + 1 < rounds, dest, DISCARD),
+                    jnp.ones(n_emit, bool),
+                )
+                return out, acc
+
+            def drive(_x):
+                me = jax.lax.axis_index(axes)
+                rays, dest = emits(me, 0)
+                q0 = enqueue(
+                    make_queue(_ray_proto(), cap), rays, dest,
+                    jnp.ones(n_emit, bool),
+                )
+                q, _acc, _r, ring = run_until_done(
+                    round_fn, q0, jnp.zeros((), jnp.int32), cfg,
+                    max_rounds=rounds + 2,
+                )
+                return q.drops[None], TM.stack_ring(ring)
+
+            ring_spec = jax.tree.map(
+                lambda _: P(axes),
+                TM.make_ring(
+                    TM.num_tiers(cfg), window=cfg.telemetry_window,
+                    buckets=cfg.telemetry_buckets,
+                ),
+            )
+            compiled[cfg] = jax.jit(
+                compat.shard_map(
+                    drive, mesh=mesh, in_specs=P(axes),
+                    out_specs=(P(axes), ring_spec),
+                )
+            )
+        t0 = time.perf_counter()
+        drops, ring = jax.block_until_ready(compiled[cfg](jnp.arange(8.0)))
+        times.append((time.perf_counter() - t0) * 1e6)
+        return int(np.asarray(drops).sum()), ring
+
+    return run_burst
+
+
+def autotune_drift():
+    """ISSUE 5 acceptance: on the drifting hot-spot, ``autotune_forward``
+    must converge from a deliberately undersized config to VERIFIED zero
+    clamp drops, with modeled padded wire bytes ≤ the §6.3 worst-case static
+    sizing that achieves the same (per tier, a slot concatenates the emits
+    of every source sub-segment feeding it — n_emit × that fan-in is the
+    provable bound and the tuner's ceiling)."""
+    from repro import telemetry as TM
+    from repro.core import ForwardConfig, item_nbytes
+    from repro.launch.mesh import make_pod_mesh
+    from repro.roofline.analysis import occupancy_waste_model
+    from repro.tune import TunePolicy, autotune_forward
+
+    item_b = item_nbytes(_ray_proto())
+    cap, n_emit, rounds = 1024, 96, 8
+    axes3 = ("pod", "node", "device")
+    scenarios = (
+        (
+            "flat", _mesh8(), "data", (8,), (n_emit,),
+            dict(exchange="padded", peer_capacity=8),
+        ),
+        (
+            "hier3", make_pod_mesh(2, 2, 2), axes3, (2, 2, 2),
+            (4 * n_emit, 2 * n_emit, n_emit),
+            dict(
+                exchange="hierarchical", level_sizes=(2, 2, 2),
+                level_capacities=(8, 8, 8),
+            ),
+        ),
+    )
+    for tag, mesh, axes, sizes, bounds, kw in scenarios:
+        times = []
+        run_burst = _drift_run_burst(mesh, axes, 8, cap, n_emit, rounds, times)
+        cfg0 = ForwardConfig(
+            axes, 8, cap, telemetry=True, telemetry_window=rounds + 2, **kw
+        )
+        final, report = autotune_forward(
+            run_burst, cfg0,
+            policy=TunePolicy(headroom=1.25, granularity=8),
+            bounds=bounds, max_bursts=6,
+        )
+        for s, us in zip(report.steps, times):
+            emit(
+                f"autotune_drift_{tag}_burst{s.burst}", us,
+                f"drops={s.drops}"
+                f";caps={'/'.join(map(str, s.capacities))}"
+                f";planned={'/'.join(map(str, s.planned))}"
+                f";demand_max={'/'.join(map(str, s.demand_max))}",
+            )
+        tuned = occupancy_waste_model(
+            sizes, TM.tier_capacities(final), item_b
+        )
+        static = occupancy_waste_model(sizes, bounds, item_b)
+        record_cfg(f"autotune_drift_{tag}_final", final, mesh)
+        emit(
+            f"autotune_drift_{tag}_final", float(np.mean(times)),
+            f"converged={int(report.converged)};final_drops={report.final_drops}"
+            f";bursts={report.bursts}"
+            f";tuned_wire_B={tuned['wire_B']:.0f}"
+            f";static_wire_B={static['wire_B']:.0f}"
+            f";caps={'/'.join(map(str, TM.tier_capacities(final)))}",
+        )
+        if (
+            not report.converged
+            or report.final_drops != 0
+            or tuned["wire_B"] > static["wire_B"]
+        ):
+            raise RuntimeError(
+                f"autotune_drift_{tag} failed: converged={report.converged} "
+                f"final_drops={report.final_drops} tuned_wire_B="
+                f"{tuned['wire_B']:.0f} static_wire_B={static['wire_B']:.0f}"
+            )
+
+
+# ------------------------------------- ISSUE 5: telemetry overhead gate
+def fwd_walltime_telemetry(samples=8):
+    """Flight-recorder overhead sweep: the same forwarding round with
+    ``telemetry`` off vs on (flat padded + 3-level hierarchical), timed
+    interleaved per point (see :func:`_paired_times`).  Returns
+    ``{(tag, variant, n_emit): us}`` for the ``--compare off,telemetry``
+    gate (on/off walltime geomean must stay ≤ 1.05)."""
+    from repro.core import ForwardConfig
+    from repro.launch.mesh import make_pod_mesh
+
+    mesh_flat = _mesh8()
+    mesh_pod = make_pod_mesh(2, 2, 2)
+    axes3 = ("pod", "node", "device")
+    times = {}
+    for n_emit in (256, 2048):
+        cap = max(256, n_emit * 2)
+        points = (
+            (
+                "flat", mesh_flat, "data",
+                lambda t: ForwardConfig(
+                    "data", 8, cap, exchange="padded", telemetry=t
+                ),
+            ),
+            (
+                "hier3", mesh_pod, axes3,
+                lambda t: ForwardConfig(
+                    axes3, 8, cap, exchange="hierarchical",
+                    level_sizes=(2, 2, 2), telemetry=t,
+                ),
+            ),
+        )
+        for tag, mesh, axes, mk_cfg in points:
+            best = _paired_times(
+                {"off": mk_cfg(False), "telemetry": mk_cfg(True)},
+                mesh, axes, n_emit, cap, samples,
+            )
+            record_cfg(f"telemetry_{tag}_n{n_emit}", mk_cfg(True), mesh)
+            for variant, us in best.items():
+                times[(tag, variant, n_emit)] = us
+                rays_s = 8 * n_emit / (us / 1e6)
+                emit(
+                    f"fwd_walltime_telemetry_{tag}_{variant}_n{n_emit}", us,
+                    f"rays_per_s={rays_s:.2e}",
+                )
+    return times
+
+
 # ------------------------------------- ISSUE 4: sort vs scatter marshal
-def _paired_marshal_times(mk_cfg, mesh, axes, n_emit, cap, samples):
-    """Time both marshal modes of one mesh point INTERLEAVED (sort, scatter,
-    sort, scatter, …) and report the per-mode MEDIAN: on a shared CPU host
-    the load drifts on second scales, so timing the two modes in separate
-    windows (as ``_timeit`` would) swings their ratio by far more than the
-    5% gate margin — interleaving cancels the drift, and the median is
-    robust to the scheduler spikes that dominate these ~2 ms programs.
-    Returns ``{marshal: us}``."""
+def _paired_times(cfgs, mesh, axes, n_emit, cap, samples):
+    """Time several configs of one mesh point INTERLEAVED (a, b, a, b, …)
+    and report the per-config MEDIAN: on a shared CPU host the load drifts
+    on second scales, so timing the variants in separate windows (as
+    ``_timeit`` would) swings their ratio by far more than a 5% gate margin
+    — interleaving cancels the drift, and the median is robust to the
+    scheduler spikes that dominate these ~2 ms programs.  Returns
+    ``{name: us}``."""
     fns, x = {}, jnp.arange(8.0)
-    for marshal in ("sort", "scatter"):
-        cfg = mk_cfg(marshal)
+    for name, cfg in cfgs.items():
         f = jax.jit(
             compat.shard_map(
                 _emit_kernel(cfg, n_emit, cap), mesh=mesh,
@@ -588,14 +837,21 @@ def _paired_marshal_times(mk_cfg, mesh, axes, n_emit, cap, samples):
         )
         jax.block_until_ready(f(x))  # compile + warm
         jax.block_until_ready(f(x))
-        fns[marshal] = f
-    ts = {"sort": [], "scatter": []}
+        fns[name] = f
+    ts = {name: [] for name in cfgs}
     for _ in range(samples):
-        for marshal in ("sort", "scatter"):
+        for name in cfgs:
             t0 = time.perf_counter()
-            jax.block_until_ready(fns[marshal](x))
-            ts[marshal].append((time.perf_counter() - t0) * 1e6)
+            jax.block_until_ready(fns[name](x))
+            ts[name].append((time.perf_counter() - t0) * 1e6)
     return {m: float(np.median(v)) for m, v in ts.items()}
+
+
+def _paired_marshal_times(mk_cfg, mesh, axes, n_emit, cap, samples):
+    return _paired_times(
+        {m: mk_cfg(m) for m in ("sort", "scatter")},
+        mesh, axes, n_emit, cap, samples,
+    )
 
 
 def fwd_walltime_marshal(samples=8):
@@ -636,6 +892,7 @@ def fwd_walltime_marshal(samples=8):
             for marshal, us in best.items():
                 times[(tag, marshal, n_emit)] = us
                 cfg = mk_cfg(marshal)
+                record_cfg(f"fwd_walltime_marshal_{tag}_{marshal}_n{n_emit}", cfg, mesh)
                 send_rows = (
                     8 * cfg.peer_capacity if tag == "flat"
                     else 2 * cfg.level_capacities[-1]
@@ -678,6 +935,41 @@ def compare_backends(spec: str) -> int:
     burst absorption costs: 4 flat, 2 hier2, 1 hier3.)  Returns a nonzero
     exit code on gate failure."""
     names = tuple(s.strip() for s in spec.split(","))
+    if names == ("off", "telemetry"):
+        # PR-5 gate: the flight recorder must be ~free — telemetry-on
+        # walltime within a 1.05× GEOMEAN of telemetry-off across the sweep
+        # (same per-point interleaved-median methodology as the marshal
+        # gate) — and the autotune_drift section must converge drop-free at
+        # ≤ the static worst-case wire cost (it raises otherwise).
+        times = fwd_walltime_telemetry(samples=40)
+        ratios = []
+        for (tag, variant, n_emit), us in sorted(times.items()):
+            if variant != "telemetry":
+                continue
+            ratio = us / times[(tag, "off", n_emit)]
+            ratios.append(ratio)
+            emit(f"compare_telemetry_{tag}_n{n_emit}", us, f"ratio={ratio:.3f}")
+        geomean = float(np.exp(np.mean(np.log(ratios))))
+        emit("compare_telemetry_geomean", 0.0, f"ratio={geomean:.3f}")
+        if geomean > 1.05:
+            print(
+                f"# COMPARE FAILED: telemetry-on regresses telemetry-off by "
+                f"{geomean:.2f}x > 1.05x (geomean over the sweep)"
+            )
+            return 1
+        print(
+            f"# compare ok: telemetry/off walltime geomean {geomean:.3f} "
+            f"(per-point: {', '.join(f'{r:.3f}' for r in ratios)})"
+        )
+        try:
+            autotune_drift()
+        except RuntimeError as e:
+            # gate contract: nonzero exit + the JSON dump still written
+            # (with compare_failed=true), like every other compare mode —
+            # never a traceback that loses the collected rows
+            print(f"# COMPARE FAILED: {e}")
+            return 1
+        return 0
     if names == ("sort", "scatter"):
         # PR-4 gate: across the sweep the scatter marshal must be no more
         # than 5% slower than the sort path — a regression there means the
@@ -745,8 +1037,8 @@ def compare_backends(spec: str) -> int:
     if names != ("flat", "hierarchical"):
         raise SystemExit(
             "error: --compare supports 'flat,hierarchical', "
-            "'flat,hierarchical2,hierarchical3', or 'sort,scatter', "
-            f"got {spec!r}"
+            "'flat,hierarchical2,hierarchical3', 'sort,scatter', or "
+            f"'off,telemetry', got {spec!r}"
         )
     n_emit, cap = 2048, 4096
     flat, hier, mesh = _hier_pair(1, 8, n_emit, cap)
@@ -839,7 +1131,9 @@ SECTIONS = [
     ("fwd_walltime_hier", fwd_walltime_hier),
     ("fwd_walltime_hier3", fwd_walltime_hier3),
     ("fwd_walltime_marshal", fwd_walltime_marshal),
+    ("fwd_walltime_telemetry", fwd_walltime_telemetry),
     ("rebalance_skew", rebalance_skew),
+    ("autotune_drift", autotune_drift),
     ("sort_throughput", sort_throughput),
     ("app_rates", app_rates),
     ("moe_dispatch", moe_dispatch),
@@ -858,6 +1152,10 @@ def _write_json(path: str, **extra_meta) -> None:
             "backend": jax.default_backend(),
             "device_count": jax.device_count(),
             "platform": platform.platform(),
+            "git_sha": _git_sha(),
+            "argv": sys.argv[1:],
+            "xla_flags": os.environ.get("XLA_FLAGS", ""),
+            "configs": CONFIGS,
             **extra_meta,
         },
         "rows": ROWS,
@@ -879,6 +1177,9 @@ def main(argv=None) -> None:
                     help="per-phase breakdown (marshal / count collective / "
                          "payload collective / unmarshal) of the padded "
                          "fwd_walltime_* rounds, as fwd_profile_* rows")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run only the ISSUE-5 autotune_drift section "
+                         "(drifting hot-spot + adaptive capacity controller)")
     ap.add_argument("--compare", metavar="A,B[,C]", default=None,
                     help="regression gate: 'flat,hierarchical' times both "
                          "exchanges on a single-node mesh and exits nonzero "
@@ -887,11 +1188,15 @@ def main(argv=None) -> None:
                          "(2,2,2)-mesh sweep + rebalance_skew and gates on "
                          "the modeled slowest-tier bytes; 'sort,scatter' "
                          "runs the marshal sweep and gates on scatter "
-                         "regressing sort by >5%% walltime")
+                         "regressing sort by >5%% walltime; 'off,telemetry' "
+                         "gates the flight recorder at a 1.05x walltime "
+                         "geomean and runs the autotune_drift acceptance")
     args = ap.parse_args(argv)
 
     global PROFILE
     PROFILE = args.profile
+    if args.autotune:
+        args.only = "autotune_drift"
 
     print("name,us_per_call,derived")
     if args.compare:

@@ -2,7 +2,9 @@
 
 Mirrors the paper's introductory usage: define a work-item type, emit items
 to destination ranks from per-rank kernels, call the forwarding collective,
-and drive a multi-round computation to distributed termination.
+and drive a multi-round computation to distributed termination — here with
+the sort-free ``marshal="scatter"`` hot path and the traffic flight recorder
+(``telemetry=True``) on, printing the burst's traffic summary at the end.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro import telemetry as TM
 
 from repro.core import (
     DISCARD, ForwardConfig, enqueue, forward_work, make_queue,
@@ -35,7 +38,12 @@ class Ray:
 PROTO = Ray(value=jnp.zeros(()), hops=jnp.zeros((), jnp.int32))
 R, CAP = 8, 128
 mesh = compat.make_mesh((R,), ("data",))
-cfg = ForwardConfig(axis_name="data", num_ranks=R, capacity=CAP, exchange="padded")
+# scatter marshal = the sort-free single-pass hot path (PR 4); telemetry =
+# the per-round traffic flight recorder (PR 5) riding the while-loop carry
+cfg = ForwardConfig(
+    axis_name="data", num_ranks=R, capacity=CAP, exchange="padded",
+    marshal="scatter", telemetry=True, telemetry_window=8,
+)
 
 
 # 2. A per-rank "kernel": read incoming work, emit outgoing work (§3.3).
@@ -53,7 +61,8 @@ def round_fn(q_in, acc, rnd):
     return out, acc
 
 
-# 3. Drive to distributed termination (§4.2.3) — all on device.
+# 3. Drive to distributed termination (§4.2.3) — all on device.  With
+#    telemetry on, the StatsRing of the last W rounds rides the loop carry.
 def drive(_):
     me = jax.lax.axis_index("data")
     q0 = make_queue(PROTO, CAP)
@@ -63,15 +72,34 @@ def drive(_):
         me * jnp.ones(4, jnp.int32),
         jnp.ones(4, bool),
     )
-    q, acc, rounds = run_until_done(round_fn, q0, jnp.zeros(()), cfg, max_rounds=16)
-    return acc[None], rounds[None]
+    q, acc, rounds, ring = run_until_done(round_fn, q0, jnp.zeros(()), cfg, max_rounds=16)
+    return acc[None], rounds[None], TM.stack_ring(ring)
 
 
-f = jax.jit(compat.shard_map(drive, mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P("data"))))
-acc, rounds = f(jnp.arange(float(R)))
+ring_specs = jax.tree.map(
+    lambda _: P("data"),
+    TM.make_ring(TM.num_tiers(cfg), window=cfg.telemetry_window,
+                 buckets=cfg.telemetry_buckets),
+)
+f = jax.jit(compat.shard_map(
+    drive, mesh=mesh, in_specs=P("data"),
+    out_specs=(P("data"), P("data"), ring_specs),
+))
+acc, rounds, ring = f(jnp.arange(float(R)))
 print(f"deposited per rank: {acc}")
 print(f"rounds to distributed termination: {int(rounds[0])}")
 expected = sum((r + 1) * 4 for r in range(R)) * 0.5**4
 print(f"total deposited: {float(acc.sum()):.3f}  (expected {expected:.3f})")
 assert abs(float(acc.sum()) - expected) < 1e-3
+
+# 4. Read the flight recorder back on the host — what the burst's traffic
+#    looked like, and what repro.tune would size the send slots to.
+summary = TM.summarize(ring, tier_capacities=TM.tier_capacities(cfg))
+print(
+    f"telemetry: {summary['rounds']} rounds recorded, "
+    f"max segment demand {summary['demand_max'][0]} "
+    f"(peer slots sized {summary['tier_capacities'][0]}), "
+    f"clamp drops {summary['drops']}"
+)
+assert summary["drops"] == 0
 print("OK")

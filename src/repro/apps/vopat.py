@@ -214,9 +214,18 @@ def render(
     blobs=None,
     max_rounds: int = 512,
     exchange: str = "padded",
+    marshal: str = "sort",
     use_pallas: bool = False,
+    telemetry: bool = False,
+    telemetry_window: int = 32,
 ) -> Tuple[np.ndarray, dict]:
-    """Distributed render. Returns (image (H,W) float, stats dict)."""
+    """Distributed render. Returns (image (H,W) float, stats dict).
+
+    With ``telemetry`` the drive loop carries the flight-recorder ring and
+    the stats dict gains a ``"telemetry"`` summary (per-tier demand
+    histogram/max, clamp drops — see ``repro.telemetry.summarize``): the
+    measured basis for replacing this module's worst-case §6.3 queue sizing
+    with ``repro.tune``-planned capacities."""
     R = mesh.shape[AXIS]
     if blobs is None:
         blobs = F.default_blobs(scene.num_blobs, scene.seed)
@@ -231,7 +240,9 @@ def render(
     # peer slots only exist for the padded exchange (ragged/onehot reject it)
     slots = {"peer_capacity": cap} if exchange == "padded" else {}
     cfg = ForwardConfig(
-        AXIS, R, cap, exchange=exchange, use_pallas=use_pallas, **slots
+        AXIS, R, cap, exchange=exchange, marshal=marshal,
+        use_pallas=use_pallas, telemetry=telemetry,
+        telemetry_window=telemetry_window, **slots
     )
     key = jax.random.PRNGKey(scene.seed)
 
@@ -244,22 +255,47 @@ def render(
         q0, fb = _raygen(
             me, part=part, blobs=blobs, key=key, scene=scene, cap=cap, num_ranks=R
         )
+        if telemetry:
+            from repro.telemetry import stats as TS
+
+            q, fb, rounds, ring = run_until_done(
+                round_fn, q0, fb, cfg, max_rounds=max_rounds
+            )
+            img = jax.lax.psum(fb, AXIS)
+            return img, rounds[None], q.drops[None], TS.stack_ring(ring)
         q, fb, rounds = run_until_done(round_fn, q0, fb, cfg, max_rounds=max_rounds)
         img = jax.lax.psum(fb, AXIS)
         return img, rounds[None], q.drops[None]
 
+    out_specs = (P(), P(AXIS), P(AXIS))
+    if telemetry:
+        from repro.telemetry import stats as TS
+
+        ring_proto = TS.make_ring(
+            TS.num_tiers(cfg), window=cfg.telemetry_window,
+            buckets=cfg.telemetry_buckets,
+        )
+        out_specs = out_specs + (jax.tree.map(lambda _: P(AXIS), ring_proto),)
     f = jax.jit(
         compat.shard_map(
-            drive, mesh=mesh, in_specs=P(AXIS), out_specs=(P(), P(AXIS), P(AXIS)),
+            drive, mesh=mesh, in_specs=P(AXIS), out_specs=out_specs,
             # interpret-mode pallas_call can't track varying-manual-axes
             check_vma=not use_pallas,
         )
     )
-    img, rounds, drops = f(jnp.arange(R, dtype=jnp.float32))
+    out = f(jnp.arange(R, dtype=jnp.float32))
+    img, rounds, drops = out[:3]
     img = np.asarray(img).reshape(scene.height, scene.width) / scene.spp
-    return img, {
+    stats = {
         "rounds": int(np.max(np.asarray(rounds))),
         "drops": int(np.sum(np.asarray(drops))),
         "majorant": mu,
         "capacity": cap,
     }
+    if telemetry:
+        from repro import telemetry as TM
+
+        stats["telemetry"] = TM.summarize(
+            out[3], tier_capacities=TM.tier_capacities(cfg)
+        )
+    return img, stats

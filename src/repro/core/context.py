@@ -31,6 +31,7 @@ from repro.core import queue as Q
 from repro.core import termination as term
 from repro.core.forwarding import ForwardConfig, flatten_axis_names, forward_work
 from repro.core.types import item_nbytes
+from repro.telemetry import stats as TS
 
 __all__ = ["RafiContext"]
 
@@ -63,6 +64,9 @@ class RafiContext:
         node_capacity: int = 0,
         level_sizes=(),
         level_capacities=(),
+        telemetry: bool = False,
+        telemetry_window: int = 16,
+        telemetry_buckets: int = 8,
     ):
         self.mesh = mesh
         self.proto = proto
@@ -89,6 +93,9 @@ class RafiContext:
             node_capacity=node_capacity,
             level_sizes=tuple(level_sizes),
             level_capacities=tuple(level_capacities),
+            telemetry=telemetry,
+            telemetry_window=telemetry_window,
+            telemetry_buckets=telemetry_buckets,
         )
         # PartitionSpec entries cannot nest: a joint-tier axis_name like
         # (("pod", "node"), "device") shards dim 0 over the flattened axes
@@ -128,17 +135,25 @@ class RafiContext:
 
     def forward_rays(self) -> Callable:
         """The paper's ``forwardRays()``: a jitted global function taking a
-        stacked global queue and returning ``(forwarded_queue, total)``."""
+        stacked global queue and returning ``(forwarded_queue, total)`` —
+        plus the round's rank-stacked ``RoundStats`` when the context has
+        ``telemetry`` on."""
         cfg = self.cfg
 
         def step(q_stacked):
+            if cfg.telemetry:
+                new_q, total, stats = forward_work(_unstack_queue(q_stacked), cfg)
+                return _stack_queue(new_q), total, TS.stack_ring(stats)
             new_q, total = forward_work(_unstack_queue(q_stacked), cfg)
             return _stack_queue(new_q), total
 
+        out_specs = (self._queue_out_specs(), P())
+        if cfg.telemetry:
+            out_specs = out_specs + (self._stats_specs(),)
         return self.shard(
             step,
             in_specs=(self._queue_out_specs(),),
-            out_specs=(self._queue_out_specs(), P()),
+            out_specs=out_specs,
         )
 
     def run_until_done(
@@ -152,20 +167,33 @@ class RafiContext:
 
         ``round_fn(in_queue, aux, round_idx) -> (out_queue, aux)`` is per-rank
         traced code using the device interface (enqueue/get_incoming).
+
+        With ``telemetry`` on the context, the driver also returns the
+        rank-stacked ``telemetry.StatsRing`` of the burst's last
+        ``telemetry_window`` rounds (leaves ``(R, window, …)`` on the host) —
+        feed it to ``telemetry.summarize`` / ``tune.plan_capacities``.
         """
         cfg = self.cfg
 
         def drive(q0_stacked, aux0):
             q0 = _unstack_queue(q0_stacked)
+            if cfg.telemetry:
+                q, aux, rounds, ring = term.run_until_done(
+                    round_fn, q0, aux0, cfg, max_rounds=max_rounds
+                )
+                return _stack_queue(q), aux, rounds, TS.stack_ring(ring)
             q, aux, rounds = term.run_until_done(
                 round_fn, q0, aux0, cfg, max_rounds=max_rounds
             )
             return _stack_queue(q), aux, rounds
 
+        out_specs = (self._queue_out_specs(), aux_specs, P())
+        if cfg.telemetry:
+            out_specs = out_specs + (self._ring_specs(),)
         return self.shard(
             drive,
             in_specs=(self._queue_out_specs(), aux_specs),
-            out_specs=(self._queue_out_specs(), aux_specs, P()),
+            out_specs=out_specs,
         )
 
     def _queue_out_specs(self):
@@ -175,6 +203,21 @@ class RafiContext:
             count=self._spec,
             drops=self._spec,
         )
+
+    def _stats_specs(self):
+        """Specs of a rank-stacked ``RoundStats`` (every leaf sharded on the
+        prepended rank dim)."""
+        proto = TS.make_stats(TS.num_tiers(self.cfg), self.cfg.telemetry_buckets)
+        return jax.tree.map(lambda _: self._spec, proto)
+
+    def _ring_specs(self):
+        """Specs of a rank-stacked ``StatsRing``."""
+        proto = TS.make_ring(
+            TS.num_tiers(self.cfg),
+            window=self.cfg.telemetry_window,
+            buckets=self.cfg.telemetry_buckets,
+        )
+        return jax.tree.map(lambda _: self._spec, proto)
 
 
 def _stack_queue(q: Q.WorkQueue) -> Q.WorkQueue:

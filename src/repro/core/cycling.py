@@ -14,14 +14,13 @@ all-to-all congestion dominates.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
-
 import jax
 import jax.numpy as jnp
 
 from repro.core import types as T
 from repro.core.forwarding import ForwardConfig, flatten_axis_names
 from repro.core.queue import DISCARD, WorkQueue, enqueue, make_queue
+from repro.telemetry import stats as TS
 
 __all__ = ["cycle_step", "deliver_by_cycling"]
 
@@ -41,7 +40,7 @@ def _ring_permute(x: jax.Array, axis_name, num_ranks: int) -> jax.Array:
     return jax.lax.ppermute(x, flatten_axis_names(axis_name), perm)
 
 
-def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, WorkQueue]:
+def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig):
     """One ring hop: absorb items addressed to this rank, pass the rest on.
 
     The hop uses the same packed wire format as ``forward_work``: the item
@@ -56,7 +55,14 @@ def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig) -> Tuple[W
     scattered there directly.
 
     Returns ``(in_flight_queue_after_hop, absorbed_queue)``; both fixed
-    capacity.  Must run inside shard_map.
+    capacity.  Must run inside shard_map.  With ``cfg.telemetry`` a trailing
+    ``RoundStats`` rides along: a hop has ONE send segment (the whole passing
+    queue shipped to the ring successor), so segment demand is the passing
+    count measured against the queue capacity — the occupancy signal that
+    tells the controller how hard the ring is loaded per hop.  The hop's
+    ``recv_drops`` records what the ABSORB enqueue overflowed (the ship
+    itself is lossless, so ``stage_drops`` stays 0) — the stats sum to the
+    absorbed queue's drop counter, same contract as the exchanges.
     """
     me = jax.lax.axis_index(flatten_axis_names(cfg.axis_name))
     lane = jnp.arange(q.capacity)
@@ -64,6 +70,7 @@ def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig) -> Tuple[W
     mine = valid & (q.dest == me)
     passing = valid & ~mine
 
+    absorb_drops0 = absorbed.drops
     absorbed = enqueue(absorbed, q.items, jnp.where(mine, me, DISCARD).astype(jnp.int32), valid)
 
     packed, spec = T.pack_payload({"dest": q.dest, "items": q.items})
@@ -100,25 +107,50 @@ def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig) -> Tuple[W
         count=shipped_count.astype(jnp.int32),
         drops=q.drops,
     )
+    if cfg.telemetry:
+        stats = TS.single_tier_stats(
+            n_pass[None], q.capacity, cfg.telemetry_buckets,
+            sent_rows=n_pass, stage_drops=jnp.zeros((), jnp.int32),
+            recv_total=shipped_count,
+            recv_drops=absorbed.drops - absorb_drops0,
+        )
+        return nq, absorbed, stats
     return nq, absorbed
 
 
-def deliver_by_cycling(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array]:
+def deliver_by_cycling(q: WorkQueue, cfg: ForwardConfig):
     """Deliver every item by cycling the queue through the full ring (R-1
     hops) — the drop-in 'Barney-style' replacement for one forward_work
-    round.  Returns (absorbed_queue, total_delivered_globally)."""
+    round.  Returns (absorbed_queue, total_delivered_globally); with
+    ``cfg.telemetry`` also a ``StatsRing`` recording one ``RoundStats`` per
+    ring hop (the per-hop in-flight occupancy trace).  The ring's window is
+    ``num_ranks`` — one slot per hop, regardless of ``telemetry_window`` —
+    so the full trace always survives (a 16-round default window on a
+    32-rank ring would silently overwrite the first half)."""
     from repro.core.termination import _vary
 
     absorbed = make_queue(jax.tree.map(lambda a: a[0], q.items), cfg.capacity)
 
     def body(i, c):
+        if cfg.telemetry:
+            nq, na, stats = cycle_step(c[0], c[1], cfg)
+            return (
+                _vary(nq, cfg.axis_name),
+                _vary(na, cfg.axis_name),
+                _vary(TS.ring_push(c[2], stats), cfg.axis_name),
+            )
         nq, na = cycle_step(c[0], c[1], cfg)
         return _vary(nq, cfg.axis_name), _vary(na, cfg.axis_name)
 
-    q, absorbed = jax.lax.fori_loop(
-        0, cfg.num_ranks,
-        body,
-        (_vary(q, cfg.axis_name), _vary(absorbed, cfg.axis_name)),
-    )
+    carry = (_vary(q, cfg.axis_name), _vary(absorbed, cfg.axis_name))
+    if cfg.telemetry:
+        ring0 = TS.make_ring(
+            1, window=cfg.num_ranks, buckets=cfg.telemetry_buckets
+        )
+        carry = carry + (_vary(ring0, cfg.axis_name),)
+    out = jax.lax.fori_loop(0, cfg.num_ranks, body, carry)
+    absorbed = out[1]
     total = jax.lax.psum(absorbed.count, flatten_axis_names(cfg.axis_name))
+    if cfg.telemetry:
+        return absorbed, total, out[2]
     return absorbed, total

@@ -94,15 +94,28 @@ the queue-capacity contract of §3.3/§6.3: every drop site clamps counts
 reappears in a later tier's (or the receiver's) overflow accounting
 (regression-tested across stacked tier clamps in
 ``tests/test_core_scatter.py``).
+
+Telemetry (ISSUE 5): every backend accepts ``telemetry=True`` (plus
+``telemetry_buckets``) and then returns a FIFTH element, a
+``repro.telemetry.RoundStats`` snapshot of the round's traffic — per-tier
+segment-demand histograms, exact max demand, shipped rows, and per-stage
+clamp drops.  Everything recorded is derived from control-plane values the
+round computes anyway (the marshal histogram, the per-stage count
+collectives' results, the clamp arithmetic): stats capture issues ZERO
+additional collectives and never touches the payload, so the collective
+budget above is bit-for-bit unchanged with telemetry on (guarded in
+``tests/test_collective_budget.py``).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.telemetry import stats as TS
 
 __all__ = [
     "exchange_counts",
@@ -285,7 +298,9 @@ def exchange_padded(
     marshal: str = "sort",
     dest_clean: jax.Array = None,  # (C,) scatter mode: sanitized destination
     dest_rank: jax.Array = None,  # (C,) scatter mode: stable in-bucket rank
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    telemetry: bool = False,
+    telemetry_buckets: int = 8,
+):
     """Padded-slot exchange of the packed payload.
 
     Single-pass marshal, either mode: in sort mode the send buffer row for
@@ -294,7 +309,9 @@ def exchange_padded(
     straight to slot ``dest_clean[i]·S + dest_rank[i]`` (rank ≥ S → the §3.3
     sender clamp) — ONE scatter, no sort at all.  Either way the payload is
     read once and written once on the send side.  Returns ``(recv_packed,
-    recv_counts, total, drops)``.
+    recv_counts, total, drops)``, plus a trailing ``RoundStats`` when
+    ``telemetry`` (segment demand here = the per-peer send counts, measured
+    against ``peer_capacity``).
     """
     R, S = num_ranks, peer_capacity
     clamped = jnp.minimum(send_counts, S)
@@ -310,6 +327,13 @@ def exchange_padded(
     out, new_count, recv_drops = _compact_blocks(
         recv_buf, recv_counts, capacity, use_pallas=use_pallas
     )
+    if telemetry:
+        stats = TS.single_tier_stats(
+            send_counts, S, telemetry_buckets,
+            sent_rows=jnp.sum(clamped), stage_drops=send_drops,
+            recv_total=jnp.sum(recv_counts), recv_drops=recv_drops,
+        )
+        return out, recv_counts, new_count, send_drops + recv_drops, stats
     return out, recv_counts, new_count, send_drops + recv_drops
 
 
@@ -351,7 +375,9 @@ def exchange_hierarchical(
     marshal: str = "sort",
     dest_clean: jax.Array = None,  # (C,) scatter mode: sanitized destination
     dest_rank: jax.Array = None,  # (C,) scatter mode: stable in-bucket rank
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    telemetry: bool = False,
+    telemetry_buckets: int = 8,
+):
     """N-stage packed exchange over an N-D ``(slowest, …, fastest)`` mesh.
 
     Dimension-ordered routing, fastest axis first: stage ``l`` combines
@@ -377,10 +403,19 @@ def exchange_hierarchical(
     tier) and the per-stage count collectives — the sorted destination vector
     is never re-scanned (no per-tier ``segment_bounds_from_sorted`` neighbor
     compares), on either marshal path.
+
+    With ``telemetry`` a trailing ``RoundStats`` is returned: tier ``l``'s
+    segment demand is the pre-clamp row total per peer slot COLUMN of stage
+    ``l`` (the concatenated sub-segments one ``level_capacities[l]`` budget
+    clamps), measured against that budget; extent-1 tiers skip their stage
+    and stay zero.  Demand at tier ``l`` is post-clamp of the faster tiers —
+    exactly the traffic the stage observes (and the reason the capacity
+    controller converges over a few bursts rather than in one).
     """
     level_sizes = tuple(int(a) for a in level_sizes)
     R = num_ranks
     C, W = packed.shape
+    rec = TS.make_stats(len(level_sizes), telemetry_buckets) if telemetry else None
 
     def gather(buf, rows, n_slots, slot):
         if use_pallas:
@@ -414,13 +449,36 @@ def exchange_hierarchical(
         else:
             rows = jnp.take(perm, jnp.clip(jnp.arange(capacity), 0, C - 1))
             out = gather(packed, rows, 1, capacity)[0]
-        return out, allowed, allowed[0], jnp.sum(cnt - allowed)
+        local_drops = jnp.sum(cnt - allowed)
+        if telemetry:
+            # no stage ran: only the receiver-side compaction is observable
+            rec = dataclasses.replace(
+                rec,
+                recv_total=jnp.sum(cnt).astype(jnp.int32),
+                recv_drops=local_drops.astype(jnp.int32),
+            )
+            return out, allowed, allowed[0], local_drops, rec
+        return out, allowed, allowed[0], local_drops
 
     for i, l in enumerate(stages):
         A, S = level_sizes[l], level_capacities[l]
         cnt2d = cnt.reshape(R // A, A)  # rows: buffer order, cols: peer digit
         allowed, starts = _clamp_subsegments(cnt2d, S)
-        drops = drops + jnp.sum(cnt2d - allowed)
+        stage_drops = jnp.sum(cnt2d - allowed)
+        drops = drops + stage_drops
+        if telemetry:
+            # segment demand at tier l = pre-clamp rows per peer slot column
+            col_demand = jnp.sum(cnt2d, axis=0)
+            rec = dataclasses.replace(
+                rec,
+                demand_hist=rec.demand_hist.at[l].set(
+                    TS.occupancy_histogram(col_demand, S, telemetry_buckets)
+                ),
+                demand_max=rec.demand_max.at[l].set(jnp.max(col_demand)),
+                demand_total=rec.demand_total.at[l].set(jnp.sum(col_demand)),
+                sent_rows=rec.sent_rows.at[l].set(jnp.sum(allowed)),
+                stage_drops=rec.stage_drops.at[l].set(stage_drops),
+            )
         if via_perm and marshal == "scatter":
             # first non-trivial stage, sort-free: scatter each row straight
             # into the stage layout — the payload's single local pass of the
@@ -455,6 +513,13 @@ def exchange_hierarchical(
             out, new_count, recv_drops = _compact_blocks(
                 recv, recv_counts, capacity, use_pallas=use_pallas
             )
+            if telemetry:
+                rec = dataclasses.replace(
+                    rec,
+                    recv_total=jnp.sum(recv_counts).astype(jnp.int32),
+                    recv_drops=recv_drops.astype(jnp.int32),
+                )
+                return out, recv_counts, new_count, drops + recv_drops, rec
             return out, recv_counts, new_count, drops + recv_drops
 
         # count collective for axis l: per-sub-segment survivor counts, so
@@ -482,7 +547,9 @@ def exchange_ragged(
     marshal: str = "sort",
     dest_clean: jax.Array = None,  # (C,) scatter mode: sanitized destination
     dest_rank: jax.Array = None,  # (C,) scatter mode: stable in-bucket rank
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    telemetry: bool = False,
+    telemetry_buckets: int = 8,
+):
     """ragged_all_to_all exchange — the MPI_Alltoallv / GPU-RDMA analogue.
 
     The packed payload is placed ONCE into destination order (contiguous
@@ -521,6 +588,21 @@ def exchange_ragged(
         axis_name=axis_name,
     )
     new_count = jnp.sum(recv_sizes)
+    if telemetry:
+        # No per-peer slots here — the §3.3 clamp is the receiver queue, so
+        # segment demand = the count matrix's per-destination column totals
+        # (replicated identically on every rank; quantiles/maxima are
+        # unaffected, totals are ×R — documented in telemetry.summarize's
+        # population semantics).  Senders own the drop accounting on this
+        # backend (each counts what the control plane cut from its row), so
+        # recv_drops stays 0 — stats sum to the exchange's drops return.
+        col_demand = jnp.sum(cnt, axis=0)
+        stats = TS.single_tier_stats(
+            col_demand, capacity, telemetry_buckets,
+            sent_rows=jnp.sum(send_sizes), stage_drops=send_drops,
+            recv_total=col_demand[me], recv_drops=jnp.zeros((), jnp.int32),
+        )
+        return out, recv_sizes, new_count, send_drops, stats
     return out, recv_sizes, new_count, send_drops
 
 
@@ -537,7 +619,9 @@ def exchange_onehot(
     marshal: str = "sort",
     dest_clean: jax.Array = None,
     dest_rank: jax.Array = None,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    telemetry: bool = False,
+    telemetry_buckets: int = 8,
+):
     """All-gather reference oracle (tests only): every rank sees everything,
     selects what is addressed to it, and compacts stably by (source, lane).
     Deliberately a different code path from the production backends (in
@@ -571,4 +655,13 @@ def exchange_onehot(
     total = jnp.sum(mine.astype(jnp.int32))
     new_count = jnp.minimum(total, capacity)
     recv_counts = jnp.sum((all_dest == me).astype(jnp.int32), axis=1)
+    if telemetry:
+        # oracle capture: my per-destination send counts vs the receiver
+        # queue (the only clamp this backend has)
+        stats = TS.single_tier_stats(
+            send_counts, capacity, telemetry_buckets,
+            sent_rows=jnp.sum(send_counts), stage_drops=jnp.zeros((), jnp.int32),
+            recv_total=total, recv_drops=total - new_count,
+        )
+        return gathered, recv_counts, new_count, total - new_count, stats
     return gathered, recv_counts, new_count, total - new_count

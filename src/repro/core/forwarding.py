@@ -111,6 +111,17 @@ class ForwardConfig:
       use_pallas: route the marshal-plan and payload-pass kernels through
         Pallas (``kernels/sort_keys`` + ``kernels/marshal`` for the sort
         mode, ``kernels/bucket_scatter`` for the scatter mode).
+      telemetry: record a ``repro.telemetry.RoundStats`` traffic snapshot per
+        round (per-tier segment-demand histograms, max demand, per-stage §3.3
+        clamp drops) from control-plane values the round already computes —
+        zero additional collectives.  ``forward_work`` then returns the stats
+        as a third output and ``run_until_done`` carries a ``StatsRing`` of
+        the last ``telemetry_window`` rounds through its while-loop,
+        returning it as a fourth output for ``repro.tune`` to re-plan
+        capacities from.
+      telemetry_window: rounds the on-device ring keeps (oldest overwritten).
+      telemetry_buckets: demand-histogram buckets per tier; bucket B-1 is the
+        at-or-above-capacity overflow bucket (see ``telemetry.bucket_width``).
     """
 
     axis_name: Any
@@ -125,6 +136,9 @@ class ForwardConfig:
     node_capacity: int = 0
     level_sizes: Tuple[int, ...] = ()
     level_capacities: Tuple[int, ...] = ()
+    telemetry: bool = False
+    telemetry_window: int = 16
+    telemetry_buckets: int = 8
 
     def __post_init__(self):
         if self.exchange not in _EXCHANGES:
@@ -133,6 +147,15 @@ class ForwardConfig:
             raise ValueError(f"unknown marshal {self.marshal!r}")
         if self.sort_method not in ("pack", "argsort"):
             raise ValueError(f"unknown sort_method {self.sort_method!r}")
+        if self.telemetry_window < 1:
+            raise ValueError(
+                f"telemetry_window ({self.telemetry_window}) must be >= 1"
+            )
+        if self.telemetry_buckets < 2:
+            raise ValueError(
+                f"telemetry_buckets ({self.telemetry_buckets}) must be >= 2 "
+                "(bucket B-1 is the at-capacity overflow bucket)"
+            )
         if self.num_ranks <= 0 or self.capacity <= 0:
             raise ValueError(
                 f"num_ranks ({self.num_ranks}) and capacity ({self.capacity}) "
@@ -252,12 +275,15 @@ class ForwardConfig:
         object.__setattr__(self, "node_capacity", caps[0])
 
 
-def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array]:
+def forward_work(q: WorkQueue, cfg: ForwardConfig):
     """One collective forwarding round. Must run inside ``shard_map``.
 
     Returns ``(new_queue, total_in_flight)`` where ``total_in_flight`` is the
     paper's §4.2.3 global reduce — the number of items alive across *all*
     ranks after the exchange, used for distributed-termination detection.
+    With ``cfg.telemetry`` the round's ``RoundStats`` snapshot rides along as
+    a third output (``(new_queue, total, stats)``) — the arity is static in
+    the config, so traced callers thread it without cost.
     """
     R = cfg.num_ranks
     perm = dest_clean = dest_rank = None
@@ -319,6 +345,8 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array
         marshal=cfg.marshal,
         dest_clean=dest_clean,
         dest_rank=dest_rank,
+        telemetry=cfg.telemetry,
+        telemetry_buckets=cfg.telemetry_buckets,
     )
     if cfg.exchange == "hierarchical":
         kwargs.update(
@@ -327,7 +355,15 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array
     else:
         kwargs.update(peer_capacity=cfg.peer_capacity)
     fn = _EXCHANGES[cfg.exchange]
-    recv_packed, recv_counts, new_count, drops = fn(packed, perm, send_counts, **kwargs)
+    stats = None
+    if cfg.telemetry:
+        recv_packed, recv_counts, new_count, drops, stats = fn(
+            packed, perm, send_counts, **kwargs
+        )
+    else:
+        recv_packed, recv_counts, new_count, drops = fn(
+            packed, perm, send_counts, **kwargs
+        )
     del recv_counts
 
     new_q = WorkQueue(
@@ -339,4 +375,6 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig) -> Tuple[WorkQueue, jax.Array
     # §4.2.3: "a final MPI reduce-add on the number of rays received" —
     # the global in-flight total for distributed termination.
     total = jax.lax.psum(new_q.count, flatten_axis_names(cfg.axis_name))
+    if cfg.telemetry:
+        return new_q, total, stats
     return new_q, total

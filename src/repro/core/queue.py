@@ -85,10 +85,16 @@ def enqueue(q: WorkQueue, items, dest, mask) -> WorkQueue:
     Args:
       items: pytree with leaves ``(n, ...)``.
       dest:  ``(n,)`` int32.
-      mask:  ``(n,)`` bool — which lanes actually emit.
+      mask:  ``(n,)`` bool — which lanes actually emit.  Integer masks are
+        accepted with nonzero-is-emit semantics: the mask is normalised to
+        bool BEFORE combining with the dest check, because ``int_mask &
+        (dest >= 0)`` is a BITWISE and (an int mask value of 2 & True == 0 —
+        a silently lost emit) and an un-normalised int mask would also make
+        the prefix-sum count each lane ``mask`` times.  Bool and {0, 1}
+        int32 masks are regression-tested equivalent, drops included.
     """
     cap = q.capacity
-    mask = mask & (dest >= 0)
+    mask = (jnp.asarray(mask) != 0) & (dest >= 0)
     m32 = mask.astype(jnp.int32)
     pos = q.count + jnp.cumsum(m32) - m32  # exclusive prefix sum → append slots
     ok = mask & (pos < cap)

@@ -171,18 +171,23 @@ def _intra_config(cfg: ForwardConfig) -> ForwardConfig:
         marshal=cfg.marshal,
         sort_method=cfg.sort_method,
         use_pallas=cfg.use_pallas,
+        telemetry=cfg.telemetry,
+        telemetry_window=cfg.telemetry_window,
+        telemetry_buckets=cfg.telemetry_buckets,
     )
 
 
 def rebalance(
     q: WorkQueue, cfg: ForwardConfig, *, scope: str = "global"
-) -> Tuple[WorkQueue, jax.Array]:
+):
     """One balanced redistribution round.  Must run inside ``shard_map``.
 
     Only resident items (``dest == DISCARD``) are re-destinated — pending
     items (``dest >= 0``) keep their destinations and ride the same round.
     Returns ``(balanced_queue, total)`` with ``total`` the global in-flight
-    count.  After this call every rank holds either ``floor`` or ``ceil`` of
+    count (plus the round's ``RoundStats`` when ``cfg.telemetry`` — an
+    intra-scope round records against the fast-axis sub-config's single
+    tier).  After this call every rank holds either ``floor`` or ``ceil`` of
     the mean resident population (subject to the usual capacity clamps) plus
     whatever pending work was addressed to it.
 
@@ -224,11 +229,16 @@ def rebalance(
             resident, plan_dest, jnp.where(in_group, q.dest % F, DISCARD)
         )
         q_round = dataclasses.replace(q, dest=new_dest.astype(jnp.int32))
-        balanced, _total = forward_work(q_round, sub)
+        if cfg.telemetry:
+            balanced, _total, stats = forward_work(q_round, sub)
+        else:
+            balanced, _total = forward_work(q_round, sub)
         balanced = enqueue(balanced, q.items, q.dest, held_back)
         total = jax.lax.psum(
             balanced.count, flatten_axis_names(cfg.axis_name)
         )
+        if cfg.telemetry:
+            return balanced, total, stats
         return balanced, total
     if scope != "global":
         raise ValueError(f"unknown rebalance scope {scope!r}")

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro import compat
 from repro.core.forwarding import ForwardConfig, flatten_axis_names, forward_work
 from repro.core.queue import WorkQueue
+from repro.telemetry import stats as TS
 
 __all__ = ["run_until_done"]
 
@@ -63,15 +64,21 @@ def run_until_done(
       max_rounds: hard bound (XLA while loops need no bound, but runaway
         protection mirrors the paper's capacity pragmatism).
 
-    Returns ``(final_queue, final_aux, rounds_executed)``.
+    Returns ``(final_queue, final_aux, rounds_executed)``.  With
+    ``cfg.telemetry`` a ``telemetry.StatsRing`` of the last
+    ``cfg.telemetry_window`` rounds rides the while-loop carry and is
+    returned as a fourth output — EVERY forwarding round is recorded,
+    including the initial ray-gen routing round (so a drive that runs
+    ``rounds`` body iterations returns ``ring.pos == rounds + 1``).
     """
+    telem = cfg.telemetry
 
     def cond(carry):
-        _q, _aux, total, rnd, _drops = carry
+        total, rnd = carry[2], carry[3]
         return (total > 0) & (rnd < max_rounds)
 
     def body(carry):
-        q, aux, _total, rnd, drops = carry
+        q, aux, _total, rnd, drops = carry[:5]
         # The input queue's cumulative drops already ride the loop carry;
         # hand round_fn a zero-drop view so a round_fn that threads the input
         # queue's drops into its output cannot double-count them (see the
@@ -79,31 +86,51 @@ def run_until_done(
         q = WorkQueue(items=q.items, dest=q.dest, count=q.count,
                       drops=jnp.zeros_like(q.drops))
         out_q, aux = round_fn(q, aux, rnd)
-        new_q, total = forward_work(out_q, cfg)
+        if telem:
+            new_q, total, stats = forward_work(out_q, cfg)
+        else:
+            new_q, total = forward_work(out_q, cfg)
         # Per-round queues are fresh, so cumulative overflow drops must ride
         # the loop carry (observability: silent loss is a capacity bug).
         drops = drops + new_q.drops
-        return (
+        out = (
             _vary(new_q, cfg.axis_name),
             _vary(aux, cfg.axis_name),
             total,
             rnd + 1,
             _vary(drops, cfg.axis_name),
         )
+        if telem:
+            ring = TS.ring_push(carry[5], stats)
+            out = out + (_vary(ring, cfg.axis_name),)
+        return out
 
     # Initial forward: route the ray-gen output to its owners (the paper's
     # VoPaT does exactly this — primary rays are "forwarded to itself").
-    q1, total0 = forward_work(q0, cfg)
-    q, aux, _, rounds, drops = jax.lax.while_loop(
-        cond,
-        body,
-        (
-            _vary(q1, cfg.axis_name),
-            _vary(aux0, cfg.axis_name),
-            total0,
-            jnp.zeros((), jnp.int32),
-            _vary(q1.drops, cfg.axis_name),
-        ),
+    if telem:
+        q1, total0, stats0 = forward_work(q0, cfg)
+        ring0 = TS.ring_push(
+            TS.make_ring(
+                TS.num_tiers(cfg),
+                window=cfg.telemetry_window,
+                buckets=cfg.telemetry_buckets,
+            ),
+            stats0,
+        )
+    else:
+        q1, total0 = forward_work(q0, cfg)
+    carry0 = (
+        _vary(q1, cfg.axis_name),
+        _vary(aux0, cfg.axis_name),
+        total0,
+        jnp.zeros((), jnp.int32),
+        _vary(q1.drops, cfg.axis_name),
     )
+    if telem:
+        carry0 = carry0 + (_vary(ring0, cfg.axis_name),)
+    out = jax.lax.while_loop(cond, body, carry0)
+    q, aux, _, rounds, drops = out[:5]
     q = WorkQueue(items=q.items, dest=q.dest, count=q.count, drops=drops)
+    if telem:
+        return q, aux, rounds, out[5]
     return q, aux, rounds

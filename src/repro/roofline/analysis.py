@@ -271,6 +271,70 @@ def slow_axis_bytes_model(
     raise ValueError(f"no slow-axis model for exchange {exchange!r}")
 
 
+def padded_wire_rows(level_sizes, level_capacities) -> list:
+    """Padded send rows ONE rank puts on the wire per round, per tier: stage
+    ``l`` always ships ``level_sizes[l]`` segments of ``level_capacities[l]``
+    rows regardless of demand (that is the price of the padded format);
+    extent-1 tiers skip their stage entirely.  A flat padded exchange is the
+    1-tier instance ``(num_ranks,), (peer_capacity,)``."""
+    return [
+        a * s if a > 1 else 0
+        for a, s in zip(tuple(level_sizes), tuple(level_capacities))
+    ]
+
+
+def occupancy_waste_model(
+    level_sizes,
+    level_capacities,
+    item_bytes: int,
+    *,
+    useful_rows=None,
+    rounds: int = 1,
+    num_ranks: int = 1,
+) -> Dict:
+    """The telemetry subsystem's cost side: padded wire bytes vs useful bytes
+    per tier, the quantity the capacity controller trades against drops.
+
+    ``wire_B`` covers ``num_ranks`` senders over ``rounds`` rounds (each rank
+    pays :func:`padded_wire_rows` per round regardless of demand).  MATCH THE
+    POPULATIONS when passing ``useful_rows``: ``telemetry.summarize(...)
+    ["sent_rows"]`` is summed over every rank and recorded round, so pass
+    ``num_ranks=R`` and ``rounds=window_filled`` alongside it — the defaults
+    (1, 1) are the single-rank single-round static view, and mixing a
+    rank-summed ``useful_rows`` into them would inflate ``useful_B`` by R
+    (waste_frac could even go negative).  Pass ``useful_rows=None`` for the
+    pure static-wire view.  Returns per-tier ``wire_B`` (always paid),
+    ``useful_B`` and ``waste_frac`` (padding fraction of the wire), plus
+    totals — the "modeled padded bytes" gated by the autotune benchmark: a
+    tuned config must never pay more wire than the static worst-case config
+    it replaces.
+    """
+    rows = padded_wire_rows(level_sizes, level_capacities)
+    wire = [float(r * rounds * num_ranks * item_bytes) for r in rows]
+    out = {"tiers": []}
+    for l, w in enumerate(wire):
+        useful = (
+            float(useful_rows[l]) * item_bytes if useful_rows is not None else None
+        )
+        out["tiers"].append(
+            {
+                "wire_B": w,
+                "useful_B": useful,
+                "waste_frac": (
+                    1.0 - useful / w if useful is not None and w else None
+                ),
+            }
+        )
+    out["wire_B"] = sum(wire)
+    if useful_rows is not None:
+        total_useful = float(sum(useful_rows)) * item_bytes
+        out["useful_B"] = total_useful
+        out["waste_frac"] = (
+            1.0 - total_useful / out["wire_B"] if out["wire_B"] else 0.0
+        )
+    return out
+
+
 def marshal_cost_model(
     marshal: str,
     *,

@@ -1,0 +1,50 @@
+"""repro.telemetry — the traffic flight recorder (ISSUE 5, measurement half).
+
+``RoundStats`` snapshots, per forwarding round, the per-tier segment-demand
+histograms, exact max demand, per-stage §3.3 clamp drops and shipped rows —
+all from values the exchange's control plane already computes, with ZERO
+additional collectives.  A ``StatsRing`` keeps the last ``window`` rounds on
+device inside the ``run_until_done`` while-loop carry; the host summarizes a
+ring between bursts and feeds ``repro.tune`` to re-plan capacities.
+
+Enable with ``ForwardConfig(telemetry=True)`` (knobs: ``telemetry_window``,
+``telemetry_buckets``); ``forward_work`` / ``run_until_done`` /
+``RafiContext`` then return the stats / ring as an extra trailing output.
+"""
+from repro.telemetry.stats import (
+    RoundStats,
+    StatsRing,
+    bucket_upper_edges,
+    bucket_width,
+    demand_quantile,
+    make_ring,
+    make_stats,
+    num_tiers,
+    occupancy_bucket,
+    occupancy_histogram,
+    ring_filled,
+    ring_push,
+    single_tier_stats,
+    stack_ring,
+    summarize,
+    tier_capacities,
+)
+
+__all__ = [
+    "RoundStats",
+    "StatsRing",
+    "bucket_upper_edges",
+    "bucket_width",
+    "demand_quantile",
+    "make_ring",
+    "make_stats",
+    "num_tiers",
+    "occupancy_bucket",
+    "occupancy_histogram",
+    "ring_filled",
+    "ring_push",
+    "single_tier_stats",
+    "stack_ring",
+    "summarize",
+    "tier_capacities",
+]

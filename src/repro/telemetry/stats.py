@@ -1,0 +1,299 @@
+"""On-device traffic flight recorder — the measurement half of ISSUE 5.
+
+Every forwarding round already computes the full traffic picture as part of
+its control plane: the marshal histogram is the per-destination demand, the
+hierarchical route's per-stage count ``all_to_all`` results are the
+per-sub-segment demands at every tier, and the §3.3 clamps know exactly what
+they cut.  ``RoundStats`` snapshots those values — and NOTHING else: stats
+capture issues ZERO additional collectives and never touches the payload, so
+the per-axis budget law (one payload + one count collective per mesh axis
+per round) is unchanged with telemetry enabled (guarded in
+``tests/test_collective_budget.py``).
+
+The recorded quantities, per round, per rank:
+
+* ``demand_hist``  (L, B) — per-tier histogram of *segment demand*: for each
+  send segment at tier ``l`` (a per-peer slot of the padded exchange, a
+  per-peer-digit slot column of a hierarchical stage), the rows the workload
+  WANTED to put there, pre-clamp.  Bucketing is fixed-width relative to that
+  tier's configured capacity (:func:`occupancy_bucket`), with the last bucket
+  collecting everything at or above capacity — the demand that §3.3 clamps.
+* ``demand_max`` / ``demand_total`` (L,) — exact max / sum of those demands
+  (the max survives bucketing exactly, so a drop-free capacity plan never
+  depends on bucket resolution).
+* ``sent_rows``    (L,) — rows actually shipped post-clamp (the useful wire
+  rows; ``level_sizes[l]·level_capacities[l] - sent_rows[l]`` is padding).
+* ``stage_drops``  (L,) — rows the tier-``l`` send clamp cut (§3.3).  Summed
+  with ``recv_drops`` this reproduces the exchange's drop return exactly
+  (the PR-4 count-each-drop-exactly-once accounting, per stage).
+* ``recv_total`` / ``recv_drops`` — rows arriving at the receiver pre-clamp,
+  and what the receiver-capacity compaction cut.
+
+Tier indexing matches ``ForwardConfig``: hierarchical configs record one row
+per ``level_sizes`` entry (slowest first; extent-1 tiers skip their stage and
+stay zero), flat configs record a single tier.  The bucketing reference per
+tier is :func:`tier_capacities` — ``level_capacities`` / ``peer_capacity`` /
+the receiver ``capacity`` for the backends without per-peer slots.
+
+A ``StatsRing`` keeps the last ``window`` rounds of ``RoundStats`` as a
+fixed-shape pytree so it can ride a ``jax.lax.while_loop`` carry (the
+``run_until_done`` drive loop records every round on device; the host reads
+the ring back between bursts).  Unwritten slots are all-zero and contribute
+nothing to any aggregate, so no validity mask is needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "RoundStats",
+    "StatsRing",
+    "bucket_width",
+    "bucket_upper_edges",
+    "occupancy_bucket",
+    "occupancy_histogram",
+    "make_stats",
+    "single_tier_stats",
+    "make_ring",
+    "ring_push",
+    "ring_filled",
+    "stack_ring",
+    "tier_capacities",
+    "num_tiers",
+    "summarize",
+    "demand_quantile",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RoundStats:
+    """One forwarding round's traffic snapshot (module docstring for fields).
+
+    All leaves are int32 with static shapes ``(L, B)`` / ``(L,)`` / ``()`` —
+    a ``RoundStats`` is a plain pytree and rides loop carries unchanged.
+    """
+
+    demand_hist: jax.Array   # (L, B) segments per demand bucket, per tier
+    demand_max: jax.Array    # (L,) exact max single-segment demand
+    demand_total: jax.Array  # (L,) total rows presented to the tier
+    sent_rows: jax.Array     # (L,) rows actually shipped post-clamp
+    stage_drops: jax.Array   # (L,) rows the tier's §3.3 send clamp cut
+    recv_total: jax.Array    # () rows arriving pre receiver clamp
+    recv_drops: jax.Array    # () rows the receiver compaction cut
+
+    @property
+    def tiers(self) -> int:
+        return self.demand_hist.shape[-2]
+
+    @property
+    def buckets(self) -> int:
+        return self.demand_hist.shape[-1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StatsRing:
+    """Last-``window`` rounds of :class:`RoundStats`, device-resident.
+
+    ``stats`` leaves carry a leading ``(window,)`` dim; ``pos`` is the number
+    of rounds recorded so far (the next write lands at ``pos % window``).
+    """
+
+    stats: RoundStats  # leaves (window, ...)
+    pos: jax.Array     # () int32 rounds recorded so far
+
+    @property
+    def window(self) -> int:
+        return self.stats.demand_hist.shape[-3]
+
+
+# ------------------------------------------------------------ bucketing law
+def bucket_width(capacity: int, num_buckets: int) -> int:
+    """Fixed bucket width so buckets ``0 … B-2`` tile ``[0, capacity)``.
+    Shared by the recorder, the controller's quantile inversion, and the
+    oracle property tests — there is exactly one bucketing definition in
+    the codebase (see :func:`occupancy_bucket` for the overflow rule)."""
+    return max(1, -(-int(capacity) // (int(num_buckets) - 1)))
+
+
+def bucket_upper_edges(capacity: int, num_buckets: int) -> np.ndarray:
+    """Exclusive upper demand edge of every bucket (host-side, for the
+    controller's conservative quantile → capacity inversion).  The overflow
+    bucket ``B-1`` is genuinely unbounded — its entry is clamped to
+    ``capacity`` here only as a placeholder; :func:`demand_quantile` answers
+    from the exact recorded max whenever a quantile lands there."""
+    w = bucket_width(capacity, num_buckets)
+    return np.minimum(np.arange(1, num_buckets + 1) * w, capacity)
+
+
+def occupancy_bucket(occ: jax.Array, capacity: int, num_buckets: int) -> jax.Array:
+    """Bucket index of each demand value (traced).  Bucket ``B-1`` is the
+    §3.3 overflow bucket: EVERY demand at or above ``capacity`` lands there
+    explicitly (``capacity`` is rarely divisible by ``B-1``, so the plain
+    ``occ // width`` quotient alone would file an exactly-at-clamp segment
+    into an interior bucket and host tooling reading ``demand_hist[:, -1]``
+    as 'segments that hit the clamp' would undercount)."""
+    w = bucket_width(capacity, num_buckets)
+    return jnp.where(
+        occ >= capacity,
+        num_buckets - 1,
+        jnp.minimum(occ // w, num_buckets - 2),
+    ).astype(jnp.int32)
+
+
+def occupancy_histogram(occ: jax.Array, capacity: int, num_buckets: int) -> jax.Array:
+    """(B,) int32 — segments per demand bucket.  ``occ`` is the (A,) vector
+    of per-segment demands at one tier; control-plane sized, no collective."""
+    b = occupancy_bucket(occ, capacity, num_buckets)
+    return jnp.zeros((num_buckets,), jnp.int32).at[b].add(1)
+
+
+# --------------------------------------------------------------- builders
+def make_stats(tiers: int, buckets: int) -> RoundStats:
+    """All-zero stats — the builder the exchanges fill tier by tier."""
+    z = jnp.zeros((), jnp.int32)
+    return RoundStats(
+        demand_hist=jnp.zeros((tiers, buckets), jnp.int32),
+        demand_max=jnp.zeros((tiers,), jnp.int32),
+        demand_total=jnp.zeros((tiers,), jnp.int32),
+        sent_rows=jnp.zeros((tiers,), jnp.int32),
+        stage_drops=jnp.zeros((tiers,), jnp.int32),
+        recv_total=z,
+        recv_drops=z,
+    )
+
+
+def single_tier_stats(
+    demand: jax.Array,      # (A,) per-segment demand, pre-clamp
+    capacity: int,          # the tier's configured segment capacity
+    buckets: int,
+    *,
+    sent_rows: jax.Array,   # () rows shipped post-clamp
+    stage_drops: jax.Array,  # () send-clamp drops
+    recv_total: jax.Array,  # () rows arriving pre receiver clamp
+    recv_drops: jax.Array,  # () receiver compaction drops
+) -> RoundStats:
+    """The flat-backend capture: one tier, filled in one call."""
+    return RoundStats(
+        demand_hist=occupancy_histogram(demand, capacity, buckets)[None, :],
+        demand_max=jnp.max(demand).astype(jnp.int32)[None],
+        demand_total=jnp.sum(demand).astype(jnp.int32)[None],
+        sent_rows=sent_rows.astype(jnp.int32)[None],
+        stage_drops=stage_drops.astype(jnp.int32)[None],
+        recv_total=recv_total.astype(jnp.int32),
+        recv_drops=recv_drops.astype(jnp.int32),
+    )
+
+
+# ------------------------------------------------------------- ring buffer
+def make_ring(tiers: int, *, window: int, buckets: int) -> StatsRing:
+    """Empty ring — host- or trace-constructible (pure zeros)."""
+    proto = make_stats(tiers, buckets)
+    return StatsRing(
+        stats=jax.tree.map(
+            lambda a: jnp.zeros((window,) + a.shape, a.dtype), proto
+        ),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def ring_push(ring: StatsRing, stats: RoundStats) -> StatsRing:
+    """Record one round (overwrites the oldest once the window is full)."""
+    idx = ring.pos % ring.window
+    return StatsRing(
+        stats=jax.tree.map(lambda buf, s: buf.at[idx].set(s), ring.stats, stats),
+        pos=ring.pos + 1,
+    )
+
+
+def ring_filled(ring: StatsRing) -> jax.Array:
+    """Number of valid (written) slots."""
+    return jnp.minimum(ring.pos, ring.window)
+
+
+def stack_ring(ring):
+    """Per-rank ring (or bare ``RoundStats``) → globally concatenable form:
+    every leaf (incl. ``pos``) gains a leading rank dim of 1, so a
+    ``shard_map`` out_spec over the context axis stacks the pytree as
+    ``(R, …)`` for the host-side controller (``summarize`` accepts either
+    the per-rank or the rank-stacked layout)."""
+    return jax.tree.map(lambda a: a[None], ring)
+
+
+# --------------------------------------------------------- config plumbing
+def num_tiers(cfg: Any) -> int:
+    """Recorded tiers of a ``ForwardConfig`` (duck-typed: no core import)."""
+    if cfg.exchange == "hierarchical":
+        return len(cfg.level_sizes)
+    return 1
+
+
+def tier_capacities(cfg: Any) -> Tuple[int, ...]:
+    """The bucketing reference per recorded tier: the capacity knob whose
+    demand each tier's histogram is measured against."""
+    if cfg.exchange == "hierarchical":
+        return tuple(int(c) for c in cfg.level_capacities)
+    if cfg.exchange == "padded":
+        return (int(cfg.peer_capacity),)
+    # ragged / onehot: no per-peer slots — the receiver queue is the clamp
+    return (int(cfg.capacity),)
+
+
+# ---------------------------------------------------------- host-side view
+def summarize(ring: StatsRing, *, tier_capacities: Tuple[int, ...]) -> Dict:
+    """Aggregate a ring (per-rank, or rank-stacked via :func:`stack_ring` +
+    shard_map) into the controller's host-side view.  Unwritten ring slots
+    are all-zero and vacuously contribute nothing, so no masking is needed;
+    quantiles are over the SEGMENT population (every segment of every
+    recorded round on every rank), which is exactly the population the
+    per-tier capacity clamp applies to."""
+    hist = np.asarray(ring.stats.demand_hist)
+    L, B = hist.shape[-2], hist.shape[-1]
+    hist = hist.reshape(-1, L, B)
+    demand_max = np.asarray(ring.stats.demand_max).reshape(-1, L).max(axis=0)
+    stage_drops = np.asarray(ring.stats.stage_drops).reshape(-1, L).sum(axis=0)
+    recv_drops = int(np.asarray(ring.stats.recv_drops).sum())
+    return {
+        "tier_capacities": tuple(int(c) for c in tier_capacities),
+        "buckets": B,
+        "rounds": int(np.asarray(ring.pos).max()),
+        "window_filled": int(np.asarray(ring_filled(ring)).max()),
+        "demand_hist": hist.sum(axis=0),
+        "demand_max": demand_max,
+        "demand_total": np.asarray(ring.stats.demand_total).reshape(-1, L).sum(axis=0),
+        "sent_rows": np.asarray(ring.stats.sent_rows).reshape(-1, L).sum(axis=0),
+        "stage_drops": stage_drops,
+        "recv_total_max": int(np.asarray(ring.stats.recv_total).max()),
+        "recv_drops": recv_drops,
+        "drops": int(stage_drops.sum()) + recv_drops,
+    }
+
+
+def demand_quantile(summary: Dict, tier: int, q: float) -> int:
+    """Conservative demand at quantile ``q`` of tier ``tier``'s recorded
+    segment population: the smallest demand ``d`` such that at least a
+    ``q``-fraction of segments demanded ``< d``, read off the histogram's
+    exclusive bucket upper edges.  ``q >= 1`` (and any quantile landing in
+    the overflow bucket) returns the EXACT recorded max, so a drop-free plan
+    never depends on bucket resolution."""
+    hist = np.asarray(summary["demand_hist"][tier], dtype=np.int64)
+    dmax = int(summary["demand_max"][tier])
+    total = int(hist.sum())
+    if total == 0:
+        return 0
+    if q >= 1.0:
+        return dmax
+    edges = bucket_upper_edges(
+        summary["tier_capacities"][tier], summary["buckets"]
+    )
+    cum = np.cumsum(hist)
+    b = int(np.searchsorted(cum, q * total))
+    if b >= len(hist) - 1:
+        return dmax
+    return int(min(edges[b], max(dmax, 1)))

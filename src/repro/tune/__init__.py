@@ -1,0 +1,25 @@
+"""repro.tune — the adaptive capacity controller (ISSUE 5, planning half).
+
+Reads ``repro.telemetry`` ring summaries between bursts and solves the
+per-tier segment capacities (``peer_capacity`` / ``level_capacities``) to a
+target drop-probability / padding-waste trade-off; ``autotune_forward``
+drives the re-plan → re-jit → re-measure loop to a verified drop-free fixed
+point.  See ``tune.controller`` for the law.
+"""
+from repro.tune.controller import (
+    TunePolicy,
+    TuneReport,
+    TuneStep,
+    autotune_forward,
+    plan_capacities,
+    solve_capacities,
+)
+
+__all__ = [
+    "TunePolicy",
+    "TuneReport",
+    "TuneStep",
+    "autotune_forward",
+    "plan_capacities",
+    "solve_capacities",
+]

@@ -30,6 +30,14 @@ def pytest_configure(config):
         "On the CPU container interpret is already the default; on a TPU "
         "runner the marker keeps these tests backend-independent.",
     )
+    config.addinivalue_line(
+        "markers",
+        "telemetry: exercises the ISSUE-5 traffic-telemetry / adaptive-"
+        "capacity subsystem (repro.telemetry + repro.tune).  CI can select "
+        "the subsystem with `-m telemetry`; the collective-budget guard "
+        "(telemetry adds zero payload-sized collectives) carries the marker "
+        "too so the selection is self-contained.",
+    )
 
 
 @pytest.fixture(autouse=True)

@@ -248,6 +248,67 @@ def test_flat_exchange_over_joint_axes_pays_cross_fabric_routing(mesh_nodes24):
     assert payload == [(R * cfg.peer_capacity * WORDS * 4, "cross")], payload
 
 
+def _lower_round_with_telemetry(mesh, cfg, axes):
+    """Like the other lowerings, but the kernel RETURNS the stats so the
+    telemetry computation cannot be DCE'd out of the compared program."""
+    from repro import telemetry as TM
+
+    def kernel(_x):
+        q = make_queue(ray_proto(), CAP)
+        me = jax.lax.axis_index(axes)
+        q = enqueue(
+            q, make_rays(10), ((me + jnp.arange(10)) % R).astype(jnp.int32),
+            jnp.ones(10, bool),
+        )
+        nq, total, stats = forward_work(q, cfg)
+        return nq.count[None], total, nq.items.tmin, TM.stack_ring(stats)
+
+    stats_spec = jax.tree.map(
+        lambda _: P(axes),
+        TM.make_stats(TM.num_tiers(cfg), cfg.telemetry_buckets),
+    )
+    return jax.jit(
+        compat.shard_map(
+            kernel, mesh=mesh, in_specs=P(axes),
+            out_specs=(P(axes), P(), P(axes), stats_spec),
+        )
+    ).lower(jnp.arange(8.0)).as_text()
+
+
+@pytest.mark.telemetry
+@pytest.mark.parametrize(
+    "fixture,axes,kw",
+    [
+        ("mesh8", "data", dict(exchange="padded")),
+        ("mesh8", "data", dict(exchange="padded", marshal="scatter")),
+        (
+            "mesh_pods222", ("pod", "node", "device"),
+            dict(exchange="hierarchical", level_sizes=(2, 2, 2)),
+        ),
+    ],
+    ids=["padded", "padded-scatter", "hier3"],
+)
+def test_telemetry_adds_zero_collectives(request, fixture, axes, kw):
+    """ISSUE 5 acceptance: stats capture is derived from control-plane values
+    the round already computes — the FULL collective inventory (kind, bytes,
+    replica groups) of a telemetry-on round is identical to the telemetry-off
+    round.  Not just 'no extra payload collective': no extra collective of
+    ANY size, so the per-axis budget law is untouched."""
+    mesh = request.getfixturevalue(fixture)
+    cfg_off = ForwardConfig(axes, R, CAP, **kw)
+    cfg_on = ForwardConfig(axes, R, CAP, telemetry=True, **kw)
+    lower_off = (
+        _lower_one_round(mesh, cfg_off)
+        if axes == "data"
+        else _lower_hier_round(mesh, cfg_off)
+    )
+    ops_off = collective_ops(lower_off, with_groups=True)
+    ops_on = collective_ops(
+        _lower_round_with_telemetry(mesh, cfg_on, axes), with_groups=True
+    )
+    assert ops_on == ops_off, (ops_on, ops_off)
+
+
 def test_cycle_hop_ships_one_packed_buffer(mesh8):
     """A ring hop moves items+dest as ONE packed collective_permute (plus the
     scalar count) — the cycling analogue of the forwarding budget."""

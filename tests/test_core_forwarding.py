@@ -239,6 +239,49 @@ def test_drops_not_double_counted_when_round_fn_threads_queue_drops(mesh8):
     assert int(np.asarray(drops).sum()) == 16, np.asarray(drops)
 
 
+def test_max_rounds_cap_with_work_still_in_flight(mesh8):
+    """ISSUE 5 satellite: a round_fn that never retires its items (perpetual
+    ring forwarding) must hit the ``max_rounds`` bound with the in-flight
+    work still VISIBLE — the returned queue carries a nonzero count (the
+    items are parked, not lost) and the drop counter stays zero (a round cap
+    is not a capacity overflow; inflating drops there would fake a §3.3
+    clamp that never happened)."""
+    cfg = ForwardConfig("data", R, CAP, exchange="padded")
+    n = 5
+
+    def round_fn(q_in, acc, rnd):
+        me = jax.lax.axis_index("data")
+        out = make_queue(ray_proto(), CAP)
+        lane = jnp.arange(CAP)
+        valid = lane < q_in.count
+        dest = jnp.where(valid, (me + 1) % R, DISCARD).astype(jnp.int32)
+        return enqueue(out, q_in.items, dest, valid), acc + q_in.count
+
+    def drive(_x):
+        me = jax.lax.axis_index("data")
+        q0 = make_queue(ray_proto(), CAP)
+        q0 = enqueue(q0, make_rays(n), me * jnp.ones(n, jnp.int32), jnp.ones(n, bool))
+        q, acc, rounds = run_until_done(
+            round_fn, q0, jnp.zeros((), jnp.int32), cfg, max_rounds=3
+        )
+        return q.count[None], q.drops[None], rounds[None], acc[None]
+
+    f = jax.jit(
+        compat.shard_map(
+            drive, mesh=mesh8, in_specs=P("data"),
+            out_specs=(P("data"), P("data"), P("data"), P("data")),
+        )
+    )
+    count, drops, rounds, acc = f(jnp.arange(8.0))
+    assert int(np.asarray(rounds)[0]) == 3  # the cap, not termination
+    # every rank still holds its n items — in flight, reported, not dropped
+    np.testing.assert_array_equal(np.asarray(count).reshape(-1), np.full(R, n))
+    assert int(np.asarray(count).sum()) == R * n
+    assert int(np.asarray(drops).sum()) == 0, "round cap must not inflate drops"
+    # the loop really ran: 3 processed batches per rank rode the carry
+    assert int(np.asarray(acc).sum()) == R * n * 3
+
+
 def test_rebalance_equalizes_load(mesh8):
     cfg = ForwardConfig("data", R, CAP, exchange="padded")
 

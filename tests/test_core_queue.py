@@ -79,3 +79,49 @@ def test_enqueue_is_jittable_and_donatable():
 
     q = step(make_queue(ray_proto(), 8))
     assert int(q.count) == 2
+
+
+@pytest.mark.parametrize("truthy", [1, 2], ids=["ones", "nonunit"])
+def test_enqueue_bool_and_int_masks_are_equivalent(truthy):
+    """ISSUE 5 satellite: enqueue accepts any mask dtype with nonzero-is-emit
+    semantics.  The regression: an int mask used to be combined with the
+    dest check by BITWISE and, so a truthy value of 2 (`2 & True == 0`)
+    silently lost the emit, and the raw ints leaked into the position
+    prefix-sum.  Bool and int masks must produce identical queues —
+    count, placement, AND the overflow drop counter."""
+    rays = make_rays(6)
+    dest = jnp.array([0, 1, DISCARD, 2, 3, 4], jnp.int32)
+    keep = np.array([1, 0, 1, 1, 0, 1])
+    masks = {
+        "bool": jnp.asarray(keep, bool),
+        "int32": jnp.asarray(keep * truthy, jnp.int32),
+    }
+    # capacity 3 < the 3 valid emits on lanes (0, 3, 5) plus the DISCARD
+    # lane: the drop accounting must agree across mask dtypes too
+    got = {
+        name: enqueue(make_queue(ray_proto(), 3), rays, dest, m)
+        for name, m in masks.items()
+    }
+    b, i = got["bool"], got["int32"]
+    assert int(b.count) == int(i.count) == 3
+    assert int(b.drops) == int(i.drops) == 0
+    np.testing.assert_array_equal(np.asarray(b.dest), np.asarray(i.dest))
+    np.testing.assert_array_equal(
+        np.asarray(b.items.pixel), np.asarray(i.items.pixel)
+    )
+    np.testing.assert_array_equal(np.asarray(b.items.pixel), [0, 3, 5])
+    # and with a genuine overflow: 4 emits into capacity 3 → 1 drop, both
+    full = {
+        name: enqueue(
+            make_queue(ray_proto(), 3), rays,
+            jnp.zeros(6, jnp.int32),
+            jnp.asarray(np.array([1, 1, 0, 1, 0, 1]) * (truthy if name == "int32" else 1),
+                        bool if name == "bool" else jnp.int32),
+        )
+        for name in ("bool", "int32")
+    }
+    assert int(full["bool"].drops) == int(full["int32"].drops) == 1
+    np.testing.assert_array_equal(
+        np.asarray(full["bool"].items.pixel[:3]),
+        np.asarray(full["int32"].items.pixel[:3]),
+    )
