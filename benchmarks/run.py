@@ -39,6 +39,16 @@
   fwd_walltime_telemetry_* only with ``--compare off,telemetry``: forwarding
                          walltime with the flight recorder off vs on
                          (interleaved medians, like the marshal gate).
+  fwd_walltime_overflow_* overflow drop vs retain walltime on the happy path
+                         (ample capacity, zero spill pressure) — retention
+                         must be free when nothing spills.
+  chaos_*                ISSUE 6: every deterministic fault-injection
+                         scenario (drought / hot-spot / burst / convergecast)
+                         run retain vs drop under starved send budgets, with
+                         full loss accounting per row.  The section FAILS
+                         unless retain loses NOTHING (age within the
+                         spill_drain_model bound) while drop loses >20% of
+                         the convergecast.
   sort_throughput_*      §4.2.1 key pack+sort throughput (keys/s), XLA vs
                          Pallas(interpret) paths.
   app_*                  §5 application throughputs (CPU, small scenes).
@@ -65,7 +75,11 @@ by >5% walltime at any point (BENCH_PR4.json is this gate's ``--json`` dump);
 ``--compare off,telemetry`` is the PR-5 gate: telemetry-on walltime must stay
 within a 1.05× geomean of telemetry-off across the sweep, and the
 autotune_drift section must converge — BENCH_PR5.json is this gate's dump.
-``--autotune`` runs the autotune_drift section alone.
+``--compare drop,retain`` is the PR-6 gate: retain-mode walltime must stay
+within a 1.05× geomean of drop mode on the happy path, and the
+chaos_lossless acceptance must hold — BENCH_PR6.json is this gate's dump.
+``--autotune`` runs the autotune_drift section alone; ``--chaos`` runs the
+chaos_lossless section alone.
 
 Every ``--json`` dump carries provenance: git SHA, jax version, platform,
 the command line, and the ``ForwardConfig`` fields + mesh shape of each
@@ -192,15 +206,18 @@ def _emit_kernel(cfg, n_emit, cap):
         )
         dest = ((me * 7 + lane * 131) % cfg.num_ranks).astype(jnp.int32)
         q = enqueue(q, rays, dest, jnp.ones(n_emit, bool))
+        res = forward_work(q, cfg)
+        nq = res[0]
         if cfg.telemetry:
-            nq, total, stats = forward_work(q, cfg)
             # add every stats leaf into the output VALUE (no ×0 that XLA
             # could fold away) so the telemetry-on timing pays for the full
             # capture; nothing reads the kernel's value, only its walltime
-            telem_sum = sum(jnp.sum(l) for l in jax.tree.leaves(stats))
+            telem_sum = sum(jnp.sum(l) for l in jax.tree.leaves(res[-1]))
         else:
-            nq, total = forward_work(q, cfg)
             telem_sum = jnp.int32(0)
+        if cfg.overflow == "retain":
+            # same trick: the age vector keeps the spill compaction live
+            telem_sum = telem_sum + jnp.sum(res[2])
         # depend on the payload so the exchange isn't DCE'd out of the HLO
         checksum = (
             jnp.sum(nq.items.tmin) + jnp.sum(nq.items.origin) + jnp.sum(nq.items.extra)
@@ -670,7 +687,7 @@ def _drift_run_burst(mesh, axes, num_ranks, cap, n_emit, rounds, times):
                     make_queue(_ray_proto(), cap), rays, dest,
                     jnp.ones(n_emit, bool),
                 )
-                q, _acc, _r, ring = run_until_done(
+                q, _acc, _r, _done, ring = run_until_done(
                     round_fn, q0, jnp.zeros((), jnp.int32), cfg,
                     max_rounds=rounds + 2,
                 )
@@ -816,6 +833,115 @@ def fwd_walltime_telemetry(samples=8):
                     f"rays_per_s={rays_s:.2e}",
                 )
     return times
+
+
+# --------------------------------- ISSUE 6: lossless forwarding (chaos)
+def fwd_walltime_overflow(samples=8):
+    """Retain-mode overhead sweep on the HAPPY PATH (capacity ample, zero
+    spill pressure): the same forwarding round with ``overflow`` drop vs
+    retain (flat padded + 3-level hierarchical), timed interleaved per point.
+    Returns ``{(tag, variant, n_emit): us}`` for the ``--compare drop,retain``
+    gate (retain/drop walltime geomean must stay ≤ 1.05 — retention must be
+    free when nothing spills)."""
+    from repro.core import ForwardConfig
+    from repro.launch.mesh import make_pod_mesh
+
+    mesh_flat = _mesh8()
+    mesh_pod = make_pod_mesh(2, 2, 2)
+    axes3 = ("pod", "node", "device")
+    times = {}
+    for n_emit in (256, 2048):
+        cap = max(256, n_emit * 2)
+        points = (
+            (
+                "flat", mesh_flat, "data",
+                lambda o: ForwardConfig(
+                    "data", 8, cap, exchange="padded", overflow=o
+                ),
+            ),
+            (
+                "hier3", mesh_pod, axes3,
+                lambda o: ForwardConfig(
+                    axes3, 8, cap, exchange="hierarchical",
+                    level_sizes=(2, 2, 2), overflow=o,
+                ),
+            ),
+        )
+        for tag, mesh, axes, mk_cfg in points:
+            best = _paired_times(
+                {"drop": mk_cfg("drop"), "retain": mk_cfg("retain")},
+                mesh, axes, n_emit, cap, samples,
+            )
+            record_cfg(f"overflow_{tag}_n{n_emit}", mk_cfg("retain"), mesh)
+            for variant, us in best.items():
+                times[(tag, variant, n_emit)] = us
+                rays_s = 8 * n_emit / (us / 1e6)
+                emit(
+                    f"fwd_walltime_overflow_{tag}_{variant}_n{n_emit}", us,
+                    f"rays_per_s={rays_s:.2e}",
+                )
+    return times
+
+
+def chaos_lossless():
+    """The ISSUE-6 acceptance run: every chaos scenario, retain vs drop,
+    under deliberately starved send budgets (peer slots of 2 rows where the
+    convergecast backlogs 48 per sender).  Records per-scenario loss
+    accounting and RAISES unless (a) retain mode loses NOTHING anywhere
+    (drops == lost == 0, clean drain, age within the spill_drain_model
+    bound) while (b) drop mode — the same traffic, same capacities — loses
+    >20%% of the convergecast.  That contrast is the subsystem's reason to
+    exist; a silent regression here must trip CI, not trend a row."""
+    from repro.chaos import all_scenarios, run_scenario
+    from repro.roofline.analysis import spill_drain_model
+
+    mesh = _mesh8()
+    S, C = 2, 128
+    problems = []
+    for sc in all_scenarios(8):
+        rows = {}
+        for mode in ("drop", "retain"):
+            t0 = time.perf_counter()
+            res = run_scenario(
+                mesh, sc, capacity=C, peer_capacity=S, overflow=mode,
+                max_rounds=64,
+            )
+            dt = time.perf_counter() - t0
+            rows[mode] = res
+            loss_frac = (res["drops"] + res["lost"]) / res["emitted"]
+            emit(
+                f"chaos_{sc.name}_{mode}", dt * 1e6,
+                f"emitted={res['emitted']};delivered={res['delivered_total']}"
+                f";drops={res['drops']};lost={res['lost']}"
+                f";loss_frac={loss_frac:.3f};rounds={res['rounds']}"
+                f";age_max={res.get('age_max', 0)}",
+            )
+            if res["lost"] != 0:  # conservation broken in EITHER mode
+                problems.append(f"{sc.name}/{mode}: lost={res['lost']}")
+        ret = rows["retain"]
+        if ret["drops"] != 0 or not ret["done"]:
+            problems.append(
+                f"{sc.name}/retain: drops={ret['drops']} done={ret['done']}"
+            )
+        bound = (
+            spill_drain_model(sc.rounds * sc.emits_per_round, S)["age_bound"]
+            + sc.rounds
+        )
+        if ret["age_max"] > bound:
+            problems.append(
+                f"{sc.name}/retain: age_max={ret['age_max']} > bound={bound}"
+            )
+        if sc.name == "convergecast":
+            frac = rows["drop"]["drops"] / sc.emitted
+            if frac <= 0.2:
+                problems.append(
+                    f"convergecast/drop: loses only {frac:.1%} — the starved "
+                    "budgets no longer demonstrate the retain win"
+                )
+    if problems:
+        raise RuntimeError("chaos gate failed: " + "; ".join(problems))
+    print("# chaos ok: retain lossless on all scenarios, drop >20% loss "
+          "on convergecast, ages within drain bound")
 
 
 # ------------------------------------- ISSUE 4: sort vs scatter marshal
@@ -970,6 +1096,37 @@ def compare_backends(spec: str) -> int:
             print(f"# COMPARE FAILED: {e}")
             return 1
         return 0
+    if names == ("drop", "retain"):
+        # PR-6 gate: spill-and-retry must be free when nothing spills —
+        # retain-mode walltime within a 1.05× GEOMEAN of drop mode across
+        # the happy-path sweep — and the chaos_lossless acceptance must hold
+        # (retain loses nothing where drop loses >20%; it raises otherwise).
+        times = fwd_walltime_overflow(samples=40)
+        ratios = []
+        for (tag, variant, n_emit), us in sorted(times.items()):
+            if variant != "retain":
+                continue
+            ratio = us / times[(tag, "drop", n_emit)]
+            ratios.append(ratio)
+            emit(f"compare_overflow_{tag}_n{n_emit}", us, f"ratio={ratio:.3f}")
+        geomean = float(np.exp(np.mean(np.log(ratios))))
+        emit("compare_overflow_geomean", 0.0, f"ratio={geomean:.3f}")
+        if geomean > 1.05:
+            print(
+                f"# COMPARE FAILED: retain mode regresses drop mode by "
+                f"{geomean:.2f}x > 1.05x on the happy path (geomean)"
+            )
+            return 1
+        print(
+            f"# compare ok: retain/drop walltime geomean {geomean:.3f} "
+            f"(per-point: {', '.join(f'{r:.3f}' for r in ratios)})"
+        )
+        try:
+            chaos_lossless()
+        except RuntimeError as e:
+            print(f"# COMPARE FAILED: {e}")
+            return 1
+        return 0
     if names == ("sort", "scatter"):
         # PR-4 gate: across the sweep the scatter marshal must be no more
         # than 5% slower than the sort path — a regression there means the
@@ -1037,8 +1194,8 @@ def compare_backends(spec: str) -> int:
     if names != ("flat", "hierarchical"):
         raise SystemExit(
             "error: --compare supports 'flat,hierarchical', "
-            "'flat,hierarchical2,hierarchical3', 'sort,scatter', or "
-            f"'off,telemetry', got {spec!r}"
+            "'flat,hierarchical2,hierarchical3', 'sort,scatter', "
+            f"'off,telemetry', or 'drop,retain', got {spec!r}"
         )
     n_emit, cap = 2048, 4096
     flat, hier, mesh = _hier_pair(1, 8, n_emit, cap)
@@ -1132,6 +1289,8 @@ SECTIONS = [
     ("fwd_walltime_hier3", fwd_walltime_hier3),
     ("fwd_walltime_marshal", fwd_walltime_marshal),
     ("fwd_walltime_telemetry", fwd_walltime_telemetry),
+    ("fwd_walltime_overflow", fwd_walltime_overflow),
+    ("chaos_lossless", chaos_lossless),
     ("rebalance_skew", rebalance_skew),
     ("autotune_drift", autotune_drift),
     ("sort_throughput", sort_throughput),
@@ -1180,6 +1339,10 @@ def main(argv=None) -> None:
     ap.add_argument("--autotune", action="store_true",
                     help="run only the ISSUE-5 autotune_drift section "
                          "(drifting hot-spot + adaptive capacity controller)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run only the ISSUE-6 chaos_lossless section "
+                         "(fault-injection scenarios; retain mode must lose "
+                         "nothing where drop mode loses >20%%)")
     ap.add_argument("--compare", metavar="A,B[,C]", default=None,
                     help="regression gate: 'flat,hierarchical' times both "
                          "exchanges on a single-node mesh and exits nonzero "
@@ -1190,13 +1353,18 @@ def main(argv=None) -> None:
                          "runs the marshal sweep and gates on scatter "
                          "regressing sort by >5%% walltime; 'off,telemetry' "
                          "gates the flight recorder at a 1.05x walltime "
-                         "geomean and runs the autotune_drift acceptance")
+                         "geomean and runs the autotune_drift acceptance; "
+                         "'drop,retain' gates spill-and-retry at a 1.05x "
+                         "happy-path geomean and runs the chaos_lossless "
+                         "acceptance")
     args = ap.parse_args(argv)
 
     global PROFILE
     PROFILE = args.profile
     if args.autotune:
         args.only = "autotune_drift"
+    if args.chaos:
+        args.only = "chaos_lossless"
 
     print("name,us_per_call,derived")
     if args.compare:

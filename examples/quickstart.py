@@ -72,7 +72,7 @@ def drive(_):
         me * jnp.ones(4, jnp.int32),
         jnp.ones(4, bool),
     )
-    q, acc, rounds, ring = run_until_done(round_fn, q0, jnp.zeros(()), cfg, max_rounds=16)
+    q, acc, rounds, _done, ring = run_until_done(round_fn, q0, jnp.zeros(()), cfg, max_rounds=16)
     return acc[None], rounds[None], TM.stack_ring(ring)
 
 

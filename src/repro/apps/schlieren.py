@@ -169,7 +169,7 @@ def render(
         dest = jnp.where(hits, part.owner_of_slab(slab), DISCARD).astype(jnp.int32)
         q0 = make_queue(_proto(), cap)
         q0 = enqueue(q0, rays, dest, jnp.ones(n, bool))
-        q, fb2, rounds = run_until_done(round_fn, q0, fb2, cfg, max_rounds=max_rounds)
+        q, fb2, rounds, _done = run_until_done(round_fn, q0, fb2, cfg, max_rounds=max_rounds)
         return jax.lax.psum(fb2, AXIS), rounds[None], q.drops[None]
 
     f = jax.jit(compat.shard_map(drive, mesh=mesh, in_specs=P(AXIS),

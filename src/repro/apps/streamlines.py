@@ -137,7 +137,7 @@ def run(
             jnp.where(mine, me, DISCARD).astype(jnp.int32),
             jnp.ones(n, bool),
         )
-        q, traces, rounds = run_until_done(
+        q, traces, rounds, _done = run_until_done(
             round_fn, q0, traces, fcfg, max_rounds=cfg.max_steps + 2
         )
         # traces are disjoint across ranks (NaN elsewhere) — merge via min

@@ -258,12 +258,12 @@ def render(
         if telemetry:
             from repro.telemetry import stats as TS
 
-            q, fb, rounds, ring = run_until_done(
+            q, fb, rounds, _done, ring = run_until_done(
                 round_fn, q0, fb, cfg, max_rounds=max_rounds
             )
             img = jax.lax.psum(fb, AXIS)
             return img, rounds[None], q.drops[None], TS.stack_ring(ring)
-        q, fb, rounds = run_until_done(round_fn, q0, fb, cfg, max_rounds=max_rounds)
+        q, fb, rounds, _done = run_until_done(round_fn, q0, fb, cfg, max_rounds=max_rounds)
         img = jax.lax.psum(fb, AXIS)
         return img, rounds[None], q.drops[None]
 

@@ -1,0 +1,49 @@
+"""Deterministic chaos harness for the lossless-forwarding law (ISSUE 6).
+
+Forwarding under ``overflow="retain"`` promises: NO item is ever lost to a
+sender- or tier-capacity clamp, and no retained item starves (bounded age).
+That promise is easy to state and easy to break silently — a miscounted
+spill, a wrong merge order, a termination psum that misses retained rows.
+This package manufactures the adversarial traffic that would expose each of
+those bugs, deterministically:
+
+* :mod:`scenarios` — seeded emission schedules (capacity drought, rotating
+  hot-spot, burst storm, all-to-one convergecast) as plain numpy arrays, so
+  a failure replays bit-identically from the scenario name + seed alone;
+* :mod:`oracle` — the ground truth: per-destination delivery checksums
+  derived from the schedule (what MUST arrive, independent of any routing
+  code) plus an exact numpy FIFO simulator of the flat padded retain
+  pipeline (what must arrive WHEN, with which ages);
+* :mod:`driver` — runs a schedule through the real on-device drive loop
+  (``RafiContext.run_until_done``) accumulating the same checksums on
+  arrival, so device vs oracle comparison is a pure array equality.
+
+The property gated by tests and ``benchmarks/run.py --chaos``: retain mode
+delivers EVERY emitted item (checksums match, drops stay zero) with
+``age_max`` under the :func:`repro.roofline.analysis.spill_drain_model`
+bound, on undersized capacities where drop mode loses >20% of the traffic.
+"""
+from repro.chaos.scenarios import (
+    Scenario,
+    all_scenarios,
+    burst_storm,
+    capacity_drought,
+    convergecast,
+    rotating_hotspot,
+)
+from repro.chaos.oracle import expected_by_rank, simulate_flat_retain
+from repro.chaos.driver import ChaosItem, chaos_proto, run_scenario
+
+__all__ = [
+    "Scenario",
+    "all_scenarios",
+    "burst_storm",
+    "capacity_drought",
+    "convergecast",
+    "rotating_hotspot",
+    "expected_by_rank",
+    "simulate_flat_retain",
+    "ChaosItem",
+    "chaos_proto",
+    "run_scenario",
+]

@@ -1,0 +1,187 @@
+"""Run a chaos scenario through the real on-device drive loop.
+
+The driver turns a :class:`repro.chaos.scenarios.Scenario` into a
+``RafiContext.run_until_done`` program: the seed queue carries round 0's
+emissions, ``round_fn(…, rnd)`` emits schedule row ``rnd + 1`` (the drive's
+initial forward consumes row 0, so body iteration ``rnd`` is emission round
+``rnd + 1``) and folds every arrival into per-rank ``(count, Σuid, Σuid²)``
+uint32 checksums — the same identity law the oracle computes from the
+schedule alone.  Items are never re-forwarded by the app: one emission, one
+delivery, so conservation (``emitted == delivered + resident + drops +
+lost`` with ``lost == 0``) is checkable in every overflow mode and the
+lossless law (``drops == 0`` too, in retain mode) is a pure array compare.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.chaos.scenarios import Scenario
+from repro.core import queue as Q
+from repro.core import work_item
+from repro.core.context import RafiContext
+from repro.core.forwarding import flatten_axis_names
+from repro.telemetry import stats as TS
+
+__all__ = ["ChaosItem", "chaos_proto", "run_scenario"]
+
+
+@work_item
+@dataclasses.dataclass
+class ChaosItem:
+    """A forwardable probe: identity for the checksums, a payload tail so
+    the wire format moves more than the control word."""
+
+    uid: jax.Array  # () i32 — the scenario's (round, rank, lane) identity
+    val: jax.Array  # (2,) f32 — derived ballast, never checked
+
+
+def chaos_proto() -> ChaosItem:
+    return ChaosItem(uid=jnp.zeros((), jnp.int32), val=jnp.zeros((2,)))
+
+
+def _val_of(uid):
+    """Deterministic ballast from the identity (numpy and jnp both work)."""
+    f = uid.astype(np.float32) if isinstance(uid, np.ndarray) else uid.astype(jnp.float32)
+    stack = np.stack if isinstance(uid, np.ndarray) else jnp.stack
+    return stack([f * 0.5, f % 7.0], axis=-1)
+
+
+def _seed_queue(sc: Scenario, capacity: int):
+    """Round-0 emissions as a rank-stacked global queue (numpy, clipped at
+    ``capacity`` with the clip counted — mirrors a device ``enqueue``)."""
+    R, C, E = sc.num_ranks, capacity, sc.emits_per_round
+    uid = np.zeros((R * C,), np.int32)
+    dest = np.full((R * C,), Q.DISCARD, np.int32)
+    count = np.zeros((R,), np.int32)
+    drops = np.zeros((R,), np.int32)
+    for rank in range(R):
+        lanes = np.nonzero(sc.dests[0, rank] >= 0)[0]
+        n = min(len(lanes), C)
+        for j, e in enumerate(lanes[:n]):
+            uid[rank * C + j] = sc.uid(0, rank, int(e))
+            dest[rank * C + j] = sc.dests[0, rank, e]
+        count[rank] = n
+        drops[rank] = len(lanes) - n
+    return Q.WorkQueue(
+        items=ChaosItem(uid=jnp.asarray(uid), val=jnp.asarray(_val_of(uid))),
+        dest=jnp.asarray(dest),
+        count=jnp.asarray(count),
+        drops=jnp.asarray(drops),
+    )
+
+
+def run_scenario(
+    mesh: Mesh,
+    sc: Scenario,
+    *,
+    capacity: int,
+    axis_name="data",
+    overflow: str = "retain",
+    exchange: str = "padded",
+    marshal: str = "sort",
+    sort_method: str = "pack",
+    use_pallas: bool = False,
+    peer_capacity: int = 0,
+    fast_size: int = 0,
+    level_sizes=(),
+    level_capacities=(),
+    telemetry: bool = True,
+    max_rounds: int = 64,
+) -> Dict:
+    """Drive ``sc`` through the configured forwarding stack; return the
+    accounting dict (see module docstring for the conservation identity).
+
+    Keys: ``delivered`` (R, 3) uint32 checksums, ``delivered_total``,
+    ``emitted``, ``resident``, ``drops``, ``lost``, ``rounds``, ``done`` —
+    plus ``retained_rows`` / ``age_max`` (burst totals from the telemetry
+    ring) when ``telemetry`` is on.  ``telemetry_window`` is pinned to
+    ``max_rounds + 1`` so the ring records every forward of the burst (the
+    trajectory oracles compare against the full trace)."""
+    ctx = RafiContext(
+        mesh,
+        chaos_proto(),
+        axis_name=axis_name,
+        capacity=capacity,
+        peer_capacity=peer_capacity,
+        exchange=exchange,
+        marshal=marshal,
+        sort_method=sort_method,
+        use_pallas=use_pallas,
+        fast_size=fast_size,
+        level_sizes=level_sizes,
+        level_capacities=level_capacities,
+        telemetry=telemetry,
+        telemetry_window=max_rounds + 1,
+        overflow=overflow,
+    )
+    R, C, E = sc.num_ranks, capacity, sc.emits_per_round
+    if ctx.num_ranks != R:
+        raise ValueError(
+            f"scenario is laid out for {R} ranks but the mesh axis has "
+            f"{ctx.num_ranks}"
+        )
+    dests_dev = jnp.asarray(sc.dests)  # (rounds, R, E) — closed over, static
+
+    axes = flatten_axis_names(axis_name)
+
+    def round_fn(q_in, aux, rnd):
+        me = jax.lax.axis_index(axes)
+        lane = jnp.arange(C)
+        valid = lane < q_in.count
+        u = q_in.items.uid.astype(jnp.uint32)
+        z = jnp.zeros_like(u)
+        cnt, s, s2 = aux
+        cnt = cnt + jnp.sum(valid).astype(jnp.uint32)
+        s = s + jnp.sum(jnp.where(valid, u, z))
+        s2 = s2 + jnp.sum(jnp.where(valid, u * u, z))
+        # body iteration rnd emits schedule row rnd + 1 (row 0 seeded q0)
+        er = rnd + 1
+        row = dests_dev[jnp.clip(er, 0, sc.rounds - 1), me]  # (E,)
+        mask = (er < sc.rounds) & (row >= 0)
+        uid = ((er * R + me) * E + jnp.arange(E)).astype(jnp.int32)
+        out = Q.make_queue(chaos_proto(), C)
+        out = Q.enqueue(
+            out,
+            ChaosItem(uid=uid, val=_val_of(uid)),
+            jnp.where(mask, row, Q.DISCARD).astype(jnp.int32),
+            mask,
+        )
+        return out, (cnt, s, s2)
+
+    spec = ctx._spec
+    drive = ctx.run_until_done(
+        round_fn, aux_specs=(spec, spec, spec), max_rounds=max_rounds
+    )
+    aux0 = tuple(jnp.zeros((R,), jnp.uint32) for _ in range(3))
+    out = drive(_seed_queue(sc, C), aux0)
+    q, (cnt, s, s2), rounds, done = out[:4]
+
+    delivered = np.stack(
+        [np.asarray(cnt), np.asarray(s), np.asarray(s2)], axis=-1
+    ).astype(np.uint32)
+    res = {
+        "scenario": sc.name,
+        "delivered": delivered,
+        "delivered_total": int(delivered[:, 0].sum()),
+        "emitted": sc.emitted,
+        "resident": int(np.asarray(q.count).sum()),
+        "drops": int(np.asarray(q.drops).sum()),
+        "rounds": int(np.asarray(rounds)),
+        "done": bool(np.asarray(done)),
+    }
+    res["lost"] = (
+        res["emitted"] - res["delivered_total"] - res["resident"] - res["drops"]
+    )
+    if telemetry:
+        summary = TS.summarize(
+            out[4], tier_capacities=TS.tier_capacities(ctx.cfg)
+        )
+        res["retained_rows"] = summary["retained_rows"]
+        res["age_max"] = summary["age_max"]
+    return res

@@ -67,6 +67,7 @@ class RafiContext:
         telemetry: bool = False,
         telemetry_window: int = 16,
         telemetry_buckets: int = 8,
+        overflow: str = "drop",
     ):
         self.mesh = mesh
         self.proto = proto
@@ -96,6 +97,7 @@ class RafiContext:
             telemetry=telemetry,
             telemetry_window=telemetry_window,
             telemetry_buckets=telemetry_buckets,
+            overflow=overflow,
         )
         # PartitionSpec entries cannot nest: a joint-tier axis_name like
         # (("pod", "node"), "device") shards dim 0 over the flattened axes
@@ -136,18 +138,31 @@ class RafiContext:
     def forward_rays(self) -> Callable:
         """The paper's ``forwardRays()``: a jitted global function taking a
         stacked global queue and returning ``(forwarded_queue, total)`` —
-        plus the round's rank-stacked ``RoundStats`` when the context has
+        plus, with ``overflow="retain"``, the per-lane ``age`` counter
+        (sharded ``(R·C,)``; each standalone call starts ages fresh — the
+        on-device drive loop is where ages thread across rounds), and the
+        round's rank-stacked ``RoundStats`` when the context has
         ``telemetry`` on."""
         cfg = self.cfg
+        retain = cfg.overflow == "retain"
 
         def step(q_stacked):
+            q = _unstack_queue(q_stacked)
+            if retain and cfg.telemetry:
+                new_q, total, age, stats = forward_work(q, cfg)
+                return _stack_queue(new_q), total, age, TS.stack_ring(stats)
+            if retain:
+                new_q, total, age = forward_work(q, cfg)
+                return _stack_queue(new_q), total, age
             if cfg.telemetry:
-                new_q, total, stats = forward_work(_unstack_queue(q_stacked), cfg)
+                new_q, total, stats = forward_work(q, cfg)
                 return _stack_queue(new_q), total, TS.stack_ring(stats)
-            new_q, total = forward_work(_unstack_queue(q_stacked), cfg)
+            new_q, total = forward_work(q, cfg)
             return _stack_queue(new_q), total
 
         out_specs = (self._queue_out_specs(), P())
+        if retain:
+            out_specs = out_specs + (self._spec,)
         if cfg.telemetry:
             out_specs = out_specs + (self._stats_specs(),)
         return self.shard(
@@ -163,7 +178,10 @@ class RafiContext:
         aux_specs: Any,
         max_rounds: int = 64,
     ) -> Callable:
-        """Jitted global driver: ``(q0_stacked, aux0) -> (q, aux, rounds)``.
+        """Jitted global driver: ``(q0_stacked, aux0) -> (q, aux, rounds,
+        done)``.  ``done`` is True when the drive terminated cleanly (global
+        in-flight count hit zero), False when ``max_rounds`` truncated it
+        with work still in flight.
 
         ``round_fn(in_queue, aux, round_idx) -> (out_queue, aux)`` is per-rank
         traced code using the device interface (enqueue/get_incoming).
@@ -178,16 +196,16 @@ class RafiContext:
         def drive(q0_stacked, aux0):
             q0 = _unstack_queue(q0_stacked)
             if cfg.telemetry:
-                q, aux, rounds, ring = term.run_until_done(
+                q, aux, rounds, done, ring = term.run_until_done(
                     round_fn, q0, aux0, cfg, max_rounds=max_rounds
                 )
-                return _stack_queue(q), aux, rounds, TS.stack_ring(ring)
-            q, aux, rounds = term.run_until_done(
+                return _stack_queue(q), aux, rounds, done, TS.stack_ring(ring)
+            q, aux, rounds, done = term.run_until_done(
                 round_fn, q0, aux0, cfg, max_rounds=max_rounds
             )
-            return _stack_queue(q), aux, rounds
+            return _stack_queue(q), aux, rounds, done
 
-        out_specs = (self._queue_out_specs(), aux_specs, P())
+        out_specs = (self._queue_out_specs(), aux_specs, P(), P())
         if cfg.telemetry:
             out_specs = out_specs + (self._ring_specs(),)
         return self.shard(

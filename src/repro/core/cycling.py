@@ -63,15 +63,32 @@ def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig):
     ``recv_drops`` records what the ABSORB enqueue overflowed (the ship
     itself is lossless, so ``stage_drops`` stays 0) — the stats sum to the
     absorbed queue's drop counter, same contract as the exchanges.
+
+    With ``cfg.overflow == "retain"`` the absorb enqueue is the hop's only
+    loss site, so it backpressures instead: items addressed to me that the
+    absorbed queue has no room for stay IN FLIGHT (they keep cycling and are
+    re-offered every ``num_ranks`` hops) rather than overflowing into a drop.
+    Absorption stays FIFO in lane order — exactly the rows that fit are
+    taken, front first.
     """
     me = jax.lax.axis_index(flatten_axis_names(cfg.axis_name))
     lane = jnp.arange(q.capacity)
     valid = lane < q.count
     mine = valid & (q.dest == me)
-    passing = valid & ~mine
+    if cfg.overflow == "retain":
+        # absorb only what fits — the rest keeps cycling (no drop ever)
+        free = jnp.maximum(absorbed.capacity - absorbed.count, 0)
+        m32 = mine.astype(jnp.int32)
+        mine_rank = jnp.cumsum(m32) - m32
+        absorb_ok = mine & (mine_rank < free)
+    else:
+        absorb_ok = mine
+    passing = valid & ~absorb_ok
 
     absorb_drops0 = absorbed.drops
-    absorbed = enqueue(absorbed, q.items, jnp.where(mine, me, DISCARD).astype(jnp.int32), valid)
+    absorbed = enqueue(
+        absorbed, q.items, jnp.where(absorb_ok, me, DISCARD).astype(jnp.int32), valid
+    )
 
     packed, spec = T.pack_payload({"dest": q.dest, "items": q.items})
     if cfg.marshal == "scatter":
@@ -126,7 +143,17 @@ def deliver_by_cycling(q: WorkQueue, cfg: ForwardConfig):
     ring hop (the per-hop in-flight occupancy trace).  The ring's window is
     ``num_ranks`` — one slot per hop, regardless of ``telemetry_window`` —
     so the full trace always survives (a 16-round default window on a
-    32-rank ring would silently overwrite the first half)."""
+    32-rank ring would silently overwrite the first half).
+
+    With ``cfg.overflow == "retain"`` the ring is lossless: the absorb
+    backpressure in :func:`cycle_step` keeps not-yet-absorbable items in
+    flight, and after the full circuit (every item has revisited its owner
+    once; absorbed space never grows mid-circuit, so further laps cannot
+    help) the leftovers — each back at its source rank — are PARKED in the
+    absorbed queue with their ``dest`` intact, for the caller to drain and
+    re-offer.  Parking overflows only when a rank's absorbed queue is
+    genuinely full (the same receiver-admission bound as the forwarding
+    path), and then it is counted in ``drops``, never silent."""
     from repro.core.termination import _vary
 
     absorbed = make_queue(jax.tree.map(lambda a: a[0], q.items), cfg.capacity)
@@ -150,6 +177,12 @@ def deliver_by_cycling(q: WorkQueue, cfg: ForwardConfig):
         carry = carry + (_vary(ring0, cfg.axis_name),)
     out = jax.lax.fori_loop(0, cfg.num_ranks, body, carry)
     absorbed = out[1]
+    if cfg.overflow == "retain":
+        leftover = out[0]
+        lane = jnp.arange(leftover.capacity)
+        absorbed = enqueue(
+            absorbed, leftover.items, leftover.dest, lane < leftover.count
+        )
     total = jax.lax.psum(absorbed.count, flatten_axis_names(cfg.axis_name))
     if cfg.telemetry:
         return absorbed, total, out[2]

@@ -105,6 +105,29 @@ collectives' results, the clamp arithmetic): stats capture issues ZERO
 additional collectives and never touches the payload, so the collective
 budget above is bit-for-bit unchanged with telemetry on (guarded in
 ``tests/test_collective_budget.py``).
+
+Spill-and-retry (ISSUE 6): every backend also accepts ``overflow="retain"``
+(plus the per-lane ``age`` counter) and then returns, right before the
+stats, a tuple of pending spill blocks ``(rows, dest, age, n_spill)`` — the
+rows each sender- or tier-clamp would have cut, already compacted, with
+their global destination and aged waiting counter.  The key cost trick: a
+clamp's cut rows are exactly the per-segment TAILS of the marshalled order,
+so each block is extracted with the same composed positional arithmetic the
+send gather uses (one extra gather per clamp site — no conditional, no
+per-lane masks, no scatter), and the receive-side compaction lands arrivals
+BEHIND a reserved queue front (a shifted offset in the scatter it already
+runs).  ``forward_work`` then just selects the blocks into that front
+(stable block-then-row order = FIFO oldest-first) and retries them next
+round: the lossless law.  Retention is pure local compaction: what ships is
+the exact clamped traffic the drop path ships (the wire bytes and the
+collective inventory are bit-identical; only the drop counters move to the
+spill blocks).  On the hierarchical route a row clamped at stage ``l`` is
+parked at the intermediate rank it reached — the stage-l sub-segment →
+destination map (``seg_dest``) needed to re-address it is derived
+rank-consistently from digits every later-stage peer shares, so no extra
+collective is spent on it either.  The onehot oracle has no sender clamp,
+so its plan is empty by construction (its receiver clamp stays a counted
+drop).
 """
 from __future__ import annotations
 
@@ -179,6 +202,65 @@ def _scatter(
     return jnp.take(buf, inv, axis=0)
 
 
+def _spill_positions(n_slots, cut, seg_start):
+    """Source positions of a clamp site's cut rows, compacted segment-major.
+
+    ``cut[k]`` rows were clamped off segment ``k``; they sit contiguously
+    from ``seg_start[k]`` (the first position past the segment's allowance).
+    Spill slot ``j`` maps to segment ``k = #{inclusive-cumulative cut <= j}``
+    and position ``seg_start[k] + j - spill_off[k]`` — the same composed
+    positional arithmetic as the send gather, so extracting the spill is
+    just a second index vector into the marshal's source space.  In-segment
+    order is preserved (stable rank order = FIFO).  Returns ``(k, pos)``;
+    slots at/past the total cut hold clamped garbage the caller bounds by
+    the spill count.
+    """
+    incl = jnp.cumsum(cut)
+    j = jnp.arange(n_slots, dtype=jnp.int32)
+    k = jnp.sum((j[:, None] >= incl[None, :]).astype(jnp.int32), axis=1)
+    k = jnp.clip(k, 0, cut.shape[0] - 1)
+    pos = jnp.take(seg_start, k) + j - jnp.take(incl - cut, k)
+    return k, pos
+
+
+def _lanes_spill(
+    packed, perm, age, allow_tbl, cut, seg_start, n_spill, *,
+    num_ranks, marshal, dest_clean, dest_rank,
+):
+    """Pending-spill block for a sender-side clamp over the INPUT lanes.
+
+    ``allow_tbl[d]``/``cut[d]``: per-destination allowance and cut count;
+    ``seg_start[d]``: first cut position of destination ``d`` in the
+    MARSHALLED (sorted) order.  Sort mode reads the cut rows straight
+    through ``perm``; scatter mode inverts the (dest, in-bucket rank) plan
+    with one 1-word scatter.  Returns ``(rows, dest, age, n_spill)`` —
+    rows/dest/age are valid on the ``[0, n_spill)`` prefix only (the caller
+    bounds every read), ages carried forward +1.
+    """
+    C = packed.shape[0]
+    k, pos = _spill_positions(C, cut, seg_start)
+    if marshal == "scatter":
+        lanes = jnp.arange(C, dtype=jnp.int32)
+        d = jnp.clip(dest_clean, 0, num_ranks - 1)
+        al = jnp.take(allow_tbl, d)
+        tgt = jnp.where(
+            (dest_clean < num_ranks) & (dest_rank >= al),
+            jnp.take(jnp.cumsum(cut) - cut, d) + dest_rank - al,
+            C,
+        )
+        src = jnp.zeros((C,), jnp.int32).at[tgt].set(lanes, mode="drop")
+    else:
+        src = jnp.take(perm, jnp.clip(pos, 0, C - 1))
+    # segment index in marshalled order IS the global destination (flat and
+    # first hierarchical stage alike: lexicographic rank order)
+    return (
+        jnp.take(packed, src, axis=0),
+        k.astype(jnp.int32),
+        jnp.take(age, src).astype(jnp.int32) + 1,
+        n_spill,
+    )
+
+
 def _clamp_subsegments(cnt: jax.Array, slot: int) -> Tuple[jax.Array, jax.Array]:
     """Truncate stacked sub-segments (rows of ``cnt``, concatenated in row
     order) to a ``slot``-row budget per column.
@@ -221,13 +303,20 @@ def _compact_blocks(
     capacity: int,
     *,
     use_pallas: bool,
+    front=None,  # retain mode: rows [0, front) are reserved for the spill
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Receive-side compaction shared by the padded-slot exchanges:
     ``out[roff[g] + s] = recv_buf[g, s]`` for ``s < recv_counts[g]``, rows
     past ``capacity`` dropped (§3.3).  Returns ``(out, new_count, drops)``.
+
+    With ``front`` the arrivals land shifted by that many rows — the same
+    scatter places them BEHIND the retained spill at zero extra cost, and
+    ``new_count``/``drops`` account against the reduced room.
     """
     G, S, W = recv_buf.shape
     roff = jnp.cumsum(recv_counts) - recv_counts
+    if front is not None:
+        roff = roff + front
     if use_pallas:
         from repro.kernels.marshal import ops as marshal_ops
 
@@ -241,7 +330,8 @@ def _compact_blocks(
         out = jnp.zeros((capacity, W), recv_buf.dtype)
         out = out.at[slot].set(recv_buf.reshape(G * S, W), mode="drop")
     total_recv = jnp.sum(recv_counts)
-    new_count = jnp.minimum(total_recv, capacity)
+    room = capacity if front is None else jnp.clip(capacity - front, 0)
+    new_count = jnp.minimum(total_recv, room)
     return out, new_count, total_recv - new_count
 
 
@@ -300,6 +390,8 @@ def exchange_padded(
     dest_rank: jax.Array = None,  # (C,) scatter mode: stable in-bucket rank
     telemetry: bool = False,
     telemetry_buckets: int = 8,
+    overflow: str = "drop",
+    age: jax.Array = None,  # (C,) retain mode: rounds each lane has waited
 ):
     """Padded-slot exchange of the packed payload.
 
@@ -311,11 +403,34 @@ def exchange_padded(
     read once and written once on the send side.  Returns ``(recv_packed,
     recv_counts, total, drops)``, plus a trailing ``RoundStats`` when
     ``telemetry`` (segment demand here = the per-peer send counts, measured
-    against ``peer_capacity``).
+    against ``peer_capacity``).  With ``overflow="retain"`` the sender
+    clamp's cut rows come back as a pending spill block ``(rows, dest, age,
+    n_spill)`` inserted before the stats — extracted as the marshalled
+    order's segment tails in the same pass style as the send gather — and
+    the receive compaction lands arrivals BEHIND the reserved spill front,
+    so ``drops`` reduces to the receiver-side admission count.
     """
     R, S = num_ranks, peer_capacity
+    retain = overflow == "retain"
     clamped = jnp.minimum(send_counts, S)
     send_drops = jnp.sum(send_counts - clamped)
+    front = None
+    if retain:
+        # The clamp's cut rows are the per-destination segment TAILS of the
+        # marshalled order — extract them with the same positional
+        # arithmetic the send gather uses (one extra (C, W) gather, no
+        # conditional, no mask machinery) and reserve the queue front for
+        # them.
+        if age is None:
+            age = jnp.zeros((packed.shape[0],), jnp.int32)
+        off = jnp.cumsum(send_counts) - send_counts
+        pending = (_lanes_spill(
+            packed, perm, age, clamped, send_counts - clamped, off + clamped,
+            send_drops, num_ranks=R, marshal=marshal,
+            dest_clean=dest_clean, dest_rank=dest_rank,
+        ),)
+        front = jnp.minimum(send_drops, capacity)
+        send_drops = jnp.zeros_like(send_drops)
     send_buf = padded_send_buffer(
         packed, perm, send_counts, num_ranks=R, peer_capacity=S,
         use_pallas=use_pallas, marshal=marshal,
@@ -325,16 +440,21 @@ def exchange_padded(
     recv_buf = _a2a(send_buf, axis_name)  # the ONE payload collective
 
     out, new_count, recv_drops = _compact_blocks(
-        recv_buf, recv_counts, capacity, use_pallas=use_pallas
+        recv_buf, recv_counts, capacity, use_pallas=use_pallas, front=front
     )
+    drops = send_drops + recv_drops
     if telemetry:
         stats = TS.single_tier_stats(
             send_counts, S, telemetry_buckets,
             sent_rows=jnp.sum(clamped), stage_drops=send_drops,
             recv_total=jnp.sum(recv_counts), recv_drops=recv_drops,
         )
-        return out, recv_counts, new_count, send_drops + recv_drops, stats
-    return out, recv_counts, new_count, send_drops + recv_drops
+        if retain:
+            return out, recv_counts, new_count, drops, pending, stats
+        return out, recv_counts, new_count, drops, stats
+    if retain:
+        return out, recv_counts, new_count, drops, pending
+    return out, recv_counts, new_count, drops
 
 
 def _subsegment_gather(
@@ -377,6 +497,8 @@ def exchange_hierarchical(
     dest_rank: jax.Array = None,  # (C,) scatter mode: stable in-bucket rank
     telemetry: bool = False,
     telemetry_buckets: int = 8,
+    overflow: str = "drop",
+    age: jax.Array = None,  # (C,) retain mode: rounds each lane has waited
 ):
     """N-stage packed exchange over an N-D ``(slowest, …, fastest)`` mesh.
 
@@ -411,11 +533,36 @@ def exchange_hierarchical(
     and stay zero.  Demand at tier ``l`` is post-clamp of the faster tiers —
     exactly the traffic the stage observes (and the reason the capacity
     controller converges over a few bursts rather than in one).
+
+    With ``overflow="retain"`` every stage clamp parks its cut rows at the
+    rank they currently sit on instead of dropping them: the first stage
+    spills input LANES (sender clamp — the per-destination segment tails of
+    the sorted order, ages carried forward); later stages spill mid-route
+    BUFFER rows (sub-segment tails read straight out of the stage buffer)
+    re-addressed through ``seg_dest`` — the sub-segment → global-destination
+    map, maintained locally because after stage ``l`` every peer of the
+    remaining stages shares the already-routed digits (mid-route rows
+    restart at age 1: age cannot ride the wire without changing the payload
+    bytes).  One pending ``(rows, dest, age, n)`` spill block per non-trivial
+    stage rides back before the stats, the final compaction lands arrivals
+    behind the reserved spill front, and stage drops move into the blocks —
+    ``drops`` reduces to the receiver-side admission count.
     """
     level_sizes = tuple(int(a) for a in level_sizes)
     R = num_ranks
     C, W = packed.shape
     rec = TS.make_stats(len(level_sizes), telemetry_buckets) if telemetry else None
+    retain = overflow == "retain"
+    seg_dest = None
+    pending = []  # pending spill blocks: one (rows, dest, age, n) per stage
+    spill_run = jnp.zeros((), send_counts.dtype)  # total rows parked so far
+    if retain:
+        if age is None:
+            age = jnp.zeros((C,), jnp.int32)
+        # Which global destination does sub-segment k of the current buffer
+        # hold?  Identity at the start (sorted destination order); updated
+        # after each non-final stage from digits all later-stage peers share.
+        seg_dest = jnp.arange(R, dtype=jnp.int32)
 
     def gather(buf, rows, n_slots, slot):
         if use_pallas:
@@ -457,7 +604,11 @@ def exchange_hierarchical(
                 recv_total=jnp.sum(cnt).astype(jnp.int32),
                 recv_drops=local_drops.astype(jnp.int32),
             )
+            if retain:  # no stage clamp ran either: nothing to spill
+                return out, allowed, allowed[0], local_drops, (), rec
             return out, allowed, allowed[0], local_drops, rec
+        if retain:
+            return out, allowed, allowed[0], local_drops, ()
         return out, allowed, allowed[0], local_drops
 
     for i, l in enumerate(stages):
@@ -465,6 +616,38 @@ def exchange_hierarchical(
         cnt2d = cnt.reshape(R // A, A)  # rows: buffer order, cols: peer digit
         allowed, starts = _clamp_subsegments(cnt2d, S)
         stage_drops = jnp.sum(cnt2d - allowed)
+        if retain:
+            alf = allowed.reshape(-1)  # flat, current buffer/destination order
+            if via_perm:
+                # Sender-clamp spill from the INPUT lanes: the cut rows are
+                # the per-destination segment tails of the sorted order
+                # (allowed is indexed [d // A, d % A], so its row-major
+                # flatten is the per-destination allowance; at the first
+                # stage buffer order == destination order, and the stable
+                # in-bucket rank against the full destination IS the
+                # in-sub-segment rank — the scatter marshal's equivalence).
+                pending.append(_lanes_spill(
+                    packed, perm, age, alf, cnt - alf, base + alf,
+                    stage_drops, num_ranks=R, marshal=marshal,
+                    dest_clean=dest_clean, dest_rank=dest_rank,
+                ))
+            else:
+                # Mid-route park: buffer rows whose sub-segment tail this
+                # stage cut stay HERE; destination routing resumes them next
+                # round.  Tails are read straight out of the stage buffer
+                # (marshal-mode-agnostic: positions, not lanes) and
+                # re-addressed through ``seg_dest``; ages restart at 1 (age
+                # cannot ride the wire without changing the payload bytes).
+                k, pos = _spill_positions(capacity, cnt - alf, base + alf)
+                src = jnp.clip(pos, 0, n_rows - 1)
+                pending.append((
+                    jnp.take(buf, src, axis=0),
+                    jnp.take(seg_dest, k),
+                    jnp.ones((capacity,), jnp.int32),
+                    stage_drops,
+                ))
+            spill_run = spill_run + stage_drops
+            stage_drops = jnp.zeros_like(stage_drops)
         drops = drops + stage_drops
         if telemetry:
             # segment demand at tier l = pre-clamp rows per peer slot column
@@ -511,7 +694,8 @@ def exchange_hierarchical(
             recv_counts = recv_counts.reshape(-1)
             recv = _a2a(send, axis_name[l])
             out, new_count, recv_drops = _compact_blocks(
-                recv, recv_counts, capacity, use_pallas=use_pallas
+                recv, recv_counts, capacity, use_pallas=use_pallas,
+                front=jnp.minimum(spill_run, capacity) if retain else None,
             )
             if telemetry:
                 rec = dataclasses.replace(
@@ -519,7 +703,13 @@ def exchange_hierarchical(
                     recv_total=jnp.sum(recv_counts).astype(jnp.int32),
                     recv_drops=recv_drops.astype(jnp.int32),
                 )
+                if retain:
+                    return (out, recv_counts, new_count,
+                            drops + recv_drops, tuple(pending), rec)
                 return out, recv_counts, new_count, drops + recv_drops, rec
+            if retain:
+                return (out, recv_counts, new_count,
+                        drops + recv_drops, tuple(pending))
             return out, recv_counts, new_count, drops + recv_drops
 
         # count collective for axis l: per-sub-segment survivor counts, so
@@ -532,6 +722,13 @@ def exchange_hierarchical(
             + jnp.arange(A, dtype=jnp.int32)[:, None] * S
         ).reshape(-1)
         buf, n_rows, via_perm = recv.reshape(A * S, W), A * S, False
+        if retain:
+            # Sub-segment k of the NEW buffer order (s_l, rest) holds the
+            # destination whose digit l equals MINE — shared with every peer
+            # of the remaining (slower) stages, so the map stays
+            # rank-consistent with zero extra communication.
+            me_l = jax.lax.axis_index(axis_name[l])
+            seg_dest = jnp.tile(seg_dest.reshape(R // A, A)[:, me_l], A)
 
 
 def exchange_ragged(
@@ -549,6 +746,8 @@ def exchange_ragged(
     dest_rank: jax.Array = None,  # (C,) scatter mode: stable in-bucket rank
     telemetry: bool = False,
     telemetry_buckets: int = 8,
+    overflow: str = "drop",
+    age: jax.Array = None,  # (C,) retain mode: rounds each lane has waited
 ):
     """ragged_all_to_all exchange — the MPI_Alltoallv / GPU-RDMA analogue.
 
@@ -558,15 +757,32 @@ def exchange_ragged(
     collective; the receive side is written compacted directly (no unpack
     pass), which is the paper's "large contiguous blocks at very high
     bandwidth" property.  The control plane is one all-gather of the
-    send-count vector (see :func:`exchange_count_matrix`).
+    send-count vector (see :func:`exchange_count_matrix`).  With
+    ``overflow="retain"`` the rows past each segment's control-plane
+    allowance (``send_sizes``) come back as a pending spill block instead
+    of being dropped — the shipped segments are unchanged.
     """
     del peer_capacity  # segments are contiguous: no slot gather
+    retain = overflow == "retain"
     me = jax.lax.axis_index(axis_name)
     off = jnp.cumsum(send_counts) - send_counts
 
     cnt = exchange_count_matrix(send_counts, axis_name)  # the ONE count collective
     send_sizes, output_offsets, recv_sizes = _ragged_control_plane(cnt, me, capacity)
     send_drops = jnp.sum(send_counts - send_sizes)
+    front = None
+    if retain:
+        # Segment-tail spill extraction, exactly as exchange_padded — the
+        # allowance here is the control plane's ``send_sizes``.
+        if age is None:
+            age = jnp.zeros((packed.shape[0],), jnp.int32)
+        pending = (_lanes_spill(
+            packed, perm, age, send_sizes, send_counts - send_sizes,
+            off + send_sizes, send_drops, num_ranks=num_ranks,
+            marshal=marshal, dest_clean=dest_clean, dest_rank=dest_rank,
+        ),)
+        front = jnp.minimum(send_drops, capacity)
+        send_drops = jnp.zeros_like(send_drops)
 
     if marshal == "scatter":  # the ONE payload pass, sort-free
         keep = dest_clean < num_ranks
@@ -588,6 +804,18 @@ def exchange_ragged(
         axis_name=axis_name,
     )
     new_count = jnp.sum(recv_sizes)
+    recv_cut = jnp.zeros((), send_counts.dtype)
+    if retain:
+        # The collective's landing offsets are fixed by the replicated
+        # control plane, so the spill front is opened AFTER the exchange by
+        # one local gather (this backend is lower-only on CPU, so the extra
+        # pass is off the walltime gate); arrivals pushed past capacity are
+        # the receiver-admission loss.
+        lane = jnp.arange(capacity, dtype=jnp.int32)
+        out = jnp.take(out, jnp.clip(lane - front, 0, capacity - 1), axis=0)
+        admitted = jnp.minimum(new_count, capacity - front)
+        recv_cut = new_count - admitted
+        new_count = admitted
     if telemetry:
         # No per-peer slots here — the §3.3 clamp is the receiver queue, so
         # segment demand = the count matrix's per-destination column totals
@@ -600,9 +828,13 @@ def exchange_ragged(
         stats = TS.single_tier_stats(
             col_demand, capacity, telemetry_buckets,
             sent_rows=jnp.sum(send_sizes), stage_drops=send_drops,
-            recv_total=col_demand[me], recv_drops=jnp.zeros((), jnp.int32),
+            recv_total=col_demand[me], recv_drops=recv_cut.astype(jnp.int32),
         )
+        if retain:
+            return out, recv_sizes, new_count, send_drops + recv_cut, pending, stats
         return out, recv_sizes, new_count, send_drops, stats
+    if retain:
+        return out, recv_sizes, new_count, send_drops + recv_cut, pending
     return out, recv_sizes, new_count, send_drops
 
 
@@ -621,13 +853,20 @@ def exchange_onehot(
     dest_rank: jax.Array = None,
     telemetry: bool = False,
     telemetry_buckets: int = 8,
+    overflow: str = "drop",
+    age: jax.Array = None,  # unused: the oracle has no sender clamp
 ):
     """All-gather reference oracle (tests only): every rank sees everything,
     selects what is addressed to it, and compacts stably by (source, lane).
     Deliberately a different code path from the production backends (in
     scatter mode only the initial into-destination-order placement differs).
+    With ``overflow="retain"`` the pending spill plan is empty by
+    construction — there is no sender clamp to spill from; the receiver
+    clamp stays a counted drop (there is no bounded place left to keep those
+    rows).
     """
-    del peer_capacity
+    del peer_capacity, age
+    retain = overflow == "retain"
     R = num_ranks
     me = jax.lax.axis_index(axis_name)
     off = jnp.cumsum(send_counts) - send_counts
@@ -663,5 +902,9 @@ def exchange_onehot(
             sent_rows=jnp.sum(send_counts), stage_drops=jnp.zeros((), jnp.int32),
             recv_total=total, recv_drops=total - new_count,
         )
+        if retain:
+            return gathered, recv_counts, new_count, total - new_count, (), stats
         return gathered, recv_counts, new_count, total - new_count, stats
+    if retain:
+        return gathered, recv_counts, new_count, total - new_count, ()
     return gathered, recv_counts, new_count, total - new_count

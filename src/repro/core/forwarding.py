@@ -122,6 +122,23 @@ class ForwardConfig:
       telemetry_window: rounds the on-device ring keeps (oldest overwritten).
       telemetry_buckets: demand-histogram buckets per tier; bucket B-1 is the
         at-or-above-capacity overflow bucket (see ``telemetry.bucket_width``).
+      overflow: what a §3.3 capacity clamp does to the rows it cuts.
+        ``"drop"`` (default) discards and counts them — the paper's literal
+        contract and the bit-exact oracle.  ``"retain"`` keeps every row a
+        sender- or tier-clamp would cut in the LOCAL queue with its ``dest``
+        intact, to be retried next round (on hierarchical routes a row
+        clamped at stage ``l`` stays resident at the intermediate rank it
+        reached, where destination routing resumes it).  Retained lanes are
+        compacted to the FRONT of the queue, so the marshal's stable
+        source-order rank gives them FIFO oldest-first send-slot priority —
+        a bounded-delay anti-starvation guarantee (the lossless law; see
+        ROADMAP).  Retention is pure local compaction: the lowered
+        collective inventory is bit-identical to ``"drop"`` (guarded in
+        ``tests/test_collective_budget.py``).  The only remaining loss sites
+        are receiver-side (arrivals beyond what the queue can admit next to
+        the retained rows, and the onehot oracle's receiver clamp) — both
+        still counted in ``drops``; size ``capacity`` at the §6.3 worst case
+        to make them unreachable.
     """
 
     axis_name: Any
@@ -139,10 +156,16 @@ class ForwardConfig:
     telemetry: bool = False
     telemetry_window: int = 16
     telemetry_buckets: int = 8
+    overflow: str = "drop"
 
     def __post_init__(self):
         if self.exchange not in _EXCHANGES:
             raise ValueError(f"unknown exchange {self.exchange!r}")
+        if self.overflow not in ("drop", "retain"):
+            raise ValueError(
+                f"unknown overflow {self.overflow!r} (expected 'drop' — the "
+                "§3.3 oracle — or 'retain': spill-and-retry, the lossless law)"
+            )
         if self.marshal not in ("sort", "scatter"):
             raise ValueError(f"unknown marshal {self.marshal!r}")
         if self.sort_method not in ("pack", "argsort"):
@@ -275,7 +298,7 @@ class ForwardConfig:
         object.__setattr__(self, "node_capacity", caps[0])
 
 
-def forward_work(q: WorkQueue, cfg: ForwardConfig):
+def forward_work(q: WorkQueue, cfg: ForwardConfig, *, age=None):
     """One collective forwarding round. Must run inside ``shard_map``.
 
     Returns ``(new_queue, total_in_flight)`` where ``total_in_flight`` is the
@@ -284,8 +307,19 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig):
     With ``cfg.telemetry`` the round's ``RoundStats`` snapshot rides along as
     a third output (``(new_queue, total, stats)``) — the arity is static in
     the config, so traced callers thread it without cost.
+
+    With ``cfg.overflow == "retain"`` the returns become
+    ``(new_queue, total, age_out[, stats])``: clamp-cut rows come back
+    compacted to the FRONT of ``new_queue`` with their ``dest`` intact
+    (arrivals fill in behind, dest reset to DISCARD as usual), ``total``
+    counts retained rows so termination can't fire with spilled work, and
+    ``age_out`` is the per-lane rounds-waiting counter (feed it back via
+    ``age=`` on the next call; ``None`` means all lanes are fresh).  Arrivals
+    that don't fit next to the retained rows are the one remaining loss site
+    — counted into ``drops``.
     """
     R = cfg.num_ranks
+    retain = cfg.overflow == "retain"
     perm = dest_clean = dest_rank = None
     if cfg.marshal == "scatter":
         # Sort-free bucket plan: ONE counting-sort pass over the (cheap,
@@ -354,17 +388,104 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig):
         )
     else:
         kwargs.update(peer_capacity=cfg.peer_capacity)
+    if retain:
+        if age is None:
+            age = jnp.zeros((cfg.capacity,), jnp.int32)
+        kwargs.update(overflow="retain", age=age)
     fn = _EXCHANGES[cfg.exchange]
-    stats = None
-    if cfg.telemetry:
-        recv_packed, recv_counts, new_count, drops, stats = fn(
-            packed, perm, send_counts, **kwargs
-        )
+    stats = pending = None
+    res = fn(packed, perm, send_counts, **kwargs)
+    if retain and cfg.telemetry:
+        recv_packed, recv_counts, new_count, drops, pending, stats = res
+    elif retain:
+        recv_packed, recv_counts, new_count, drops, pending = res
+    elif cfg.telemetry:
+        recv_packed, recv_counts, new_count, drops, stats = res
     else:
-        recv_packed, recv_counts, new_count, drops = fn(
-            packed, perm, send_counts, **kwargs
-        )
+        recv_packed, recv_counts, new_count, drops = res
     del recv_counts
+
+    if retain:
+        # Merge: retained lanes FIRST (their dest survives), arrivals behind
+        # (dest reset to DISCARD).  Pure local compaction — zero collectives.
+        # The exchange did the heavy lifting in-pass: each clamp site hands
+        # back its cut rows as an already-compacted spill block (rows, dest,
+        # age, n) — segment tails read with the send gather's own positional
+        # arithmetic — and the receive compaction has already landed the
+        # arrivals BEHIND the reserved spill front.  All that's left here is
+        # selecting each block into its slice of the front (stable
+        # block-then-row order = FIFO oldest-first).  Measured on the 8-way
+        # shard_map CPU benchmark the round is dispatch-bound (op count, not
+        # bytes), so the few selects below — and no lax.cond, whose fixed
+        # thunk cost alone breaks the happy-path budget — are what keeps
+        # retention free when nothing spills.  Arrivals that didn't fit next
+        # to the spill were counted by the exchange; a spill past C
+        # (unreachable when capacity bounds the resident population) is
+        # counted here as spill_over.
+        C = cfg.capacity
+        lane = jnp.arange(C, dtype=jnp.int32)
+        run = jnp.zeros((), jnp.int32)
+        for entry in pending:
+            run = run + entry[-1].astype(jnp.int32)
+        ret_count = jnp.minimum(run, C)
+        spill_over = run - ret_count
+
+        if len(pending) == 1:
+            # Flat exchanges: one block at offset 0 — a single select, no
+            # index arithmetic at all.
+            rows_e, dest_e, age_e, n_e = pending[0]
+            sel = lane < n_e
+            merged = jnp.where(sel[:, None], rows_e, recv_packed)
+            dest_out = jnp.where(sel, dest_e, DISCARD)
+            age_out = jnp.where(sel, age_e, 0)
+        else:
+            # Multi-stage routes: index into the VIRTUAL concatenation
+            # [block_0 | block_1 | … | arrivals] with one payload gather
+            # instead of a per-block gather+select chain — the lane→source
+            # map is all (C,) integer math, so the payload-scale op count
+            # stays flat in the number of stages.
+            sizes = [r.shape[0] for r, _, _, _ in pending]
+            src = lane + sum(sizes)  # default: the arrivals region
+            start = jnp.zeros((), jnp.int32)
+            off = 0
+            for (rows_e, _, _, n_e), sz in zip(pending, sizes):
+                sel = (lane >= start) & (lane < start + n_e)
+                src = jnp.where(sel, off + lane - start, src)
+                start = start + n_e.astype(jnp.int32)
+                off += sz
+            merged = jnp.take(
+                jnp.concatenate([r for r, _, _, _ in pending] + [recv_packed]),
+                src,
+                axis=0,
+            )
+            dest_out = jnp.take(
+                jnp.concatenate(
+                    [d for _, d, _, _ in pending]
+                    + [jnp.full((C,), DISCARD, jnp.int32)]
+                ),
+                src,
+            )
+            age_out = jnp.take(
+                jnp.concatenate(
+                    [a for _, _, a, _ in pending] + [jnp.zeros((C,), jnp.int32)]
+                ),
+                src,
+            )
+        new_q = WorkQueue(
+            items=T.unpack_payload(merged, spec),
+            dest=dest_out,
+            count=(ret_count + new_count).astype(jnp.int32),
+            drops=q.drops + drops.astype(jnp.int32) + spill_over,
+        )
+        total = jax.lax.psum(new_q.count, flatten_axis_names(cfg.axis_name))
+        if cfg.telemetry:
+            stats = dataclasses.replace(
+                stats,
+                retained_rows=ret_count,
+                age_max=jnp.max(age_out).astype(jnp.int32),
+            )
+            return new_q, total, age_out, stats
+        return new_q, total, age_out
 
     new_q = WorkQueue(
         items=T.unpack_payload(recv_packed, spec),

@@ -56,7 +56,19 @@ class WorkQueue:
 
 
 def make_queue(proto, capacity: int) -> WorkQueue:
-    """An empty queue for items shaped like ``proto`` (a single-item pytree)."""
+    """An empty queue for items shaped like ``proto`` (a single-item pytree).
+
+    ``capacity`` must be a positive Python int — it is the queue's static
+    shape, so a traced or non-positive value is a config bug worth a clear
+    error here rather than an opaque reshape failure downstream.
+    """
+    if not isinstance(capacity, (int, jnp.integer)) or isinstance(capacity, bool):
+        raise ValueError(
+            f"capacity must be a static Python int (got {type(capacity).__name__}): "
+            "it fixes the queue's buffer shapes"
+        )
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
     return WorkQueue(
         items=T.batched_zeros(proto, capacity),
         dest=jnp.full((capacity,), DISCARD, dtype=jnp.int32),
@@ -75,7 +87,7 @@ def get_incoming(q: WorkQueue, i) -> Any:
     return jax.tree.map(lambda a: a[i], q.items)
 
 
-def enqueue(q: WorkQueue, items, dest, mask) -> WorkQueue:
+def enqueue(q: WorkQueue, items, dest, mask, *, num_ranks: int = None) -> WorkQueue:
     """Paper's ``DeviceInterface::emitOutgoing(ray, dest)``, vectorised.
 
     Appends the masked lanes of ``items``/``dest`` to the queue in lane order
@@ -84,7 +96,9 @@ def enqueue(q: WorkQueue, items, dest, mask) -> WorkQueue:
 
     Args:
       items: pytree with leaves ``(n, ...)``.
-      dest:  ``(n,)`` int32.
+      dest:  ``(n,)`` integer dtype.  A float dest raises at trace time — it
+        would silently truncate-cast and misroute (a real emit-kernel bug
+        class); the marshal's deep sanitize is a backstop, not an API.
       mask:  ``(n,)`` bool — which lanes actually emit.  Integer masks are
         accepted with nonzero-is-emit semantics: the mask is normalised to
         bool BEFORE combining with the dest check, because ``int_mask &
@@ -92,8 +106,29 @@ def enqueue(q: WorkQueue, items, dest, mask) -> WorkQueue:
         a silently lost emit) and an un-normalised int mask would also make
         the prefix-sum count each lane ``mask`` times.  Bool and {0, 1}
         int32 masks are regression-tested equivalent, drops included.
+      num_ranks: optional mesh size for an eager out-of-range check: when
+        ``dest`` is a CONCRETE array (not traced), any masked lane with
+        ``dest >= num_ranks`` raises here instead of being sanitized to a
+        silent drop deep in the marshal.  Traced dests skip the value check
+        (values don't exist at trace time) — the marshal sanitize still
+        guards execution.
     """
     cap = q.capacity
+    dest = jnp.asarray(dest)
+    if not jnp.issubdtype(dest.dtype, jnp.integer):
+        raise ValueError(
+            f"dest must have an integer dtype, got {dest.dtype}: a float "
+            "dest would truncate-cast and misroute emits silently"
+        )
+    if num_ranks is not None and not isinstance(dest, jax.core.Tracer):
+        m = (jnp.asarray(mask) != 0) & (dest >= 0)
+        bad = jnp.where(m, dest, 0) >= num_ranks
+        if bool(jnp.any(bad)):
+            raise ValueError(
+                f"enqueue got dest >= num_ranks ({num_ranks}): max offending "
+                f"value {int(jnp.max(jnp.where(bad, dest, 0)))} — emits must "
+                "target a rank on the mesh (or DISCARD)"
+            )
     mask = (jnp.asarray(mask) != 0) & (dest >= 0)
     m32 = mask.astype(jnp.int32)
     pos = q.count + jnp.cumsum(m32) - m32  # exclusive prefix sum → append slots

@@ -174,6 +174,7 @@ def _intra_config(cfg: ForwardConfig) -> ForwardConfig:
         telemetry=cfg.telemetry,
         telemetry_window=cfg.telemetry_window,
         telemetry_buckets=cfg.telemetry_buckets,
+        overflow=cfg.overflow,
     )
 
 
@@ -187,7 +188,12 @@ def rebalance(
     Returns ``(balanced_queue, total)`` with ``total`` the global in-flight
     count (plus the round's ``RoundStats`` when ``cfg.telemetry`` — an
     intra-scope round records against the fast-axis sub-config's single
-    tier).  After this call every rank holds either ``floor`` or ``ceil`` of
+    tier).  A ``scope="global"`` call with ``cfg.overflow == "retain"``
+    passes ``forward_work``'s retain arity straight through (the per-lane
+    ``age`` rides between total and stats); an intra-scope retain round keeps
+    its clamp-cut rows local with their GLOBAL destination restored, ages
+    restarting (rebalance is an out-of-band round, not part of the aged FIFO
+    drive).  After this call every rank holds either ``floor`` or ``ceil`` of
     the mean resident population (subject to the usual capacity clamps) plus
     whatever pending work was addressed to it.
 
@@ -229,10 +235,22 @@ def rebalance(
             resident, plan_dest, jnp.where(in_group, q.dest % F, DISCARD)
         )
         q_round = dataclasses.replace(q, dest=new_dest.astype(jnp.int32))
-        if cfg.telemetry:
-            balanced, _total, stats = forward_work(q_round, sub)
-        else:
-            balanced, _total = forward_work(q_round, sub)
+        res = forward_work(q_round, sub)
+        balanced, stats = res[0], (res[-1] if cfg.telemetry else None)
+        if sub.overflow == "retain":
+            # The sub-round's retained front carries FAST-LANE destinations
+            # (its rank space is the F in-group lanes): translate back to
+            # global ranks so they coexist with the held-back pending items.
+            # Ages are not threaded across rebalance calls — a retained
+            # rebalance row re-enters the next round as fresh (age restarts).
+            lane = jnp.arange(q.capacity, dtype=jnp.int32)
+            ret = (lane < balanced.count) & (balanced.dest >= 0)
+            balanced = dataclasses.replace(
+                balanced,
+                dest=jnp.where(
+                    ret, (me // F) * F + balanced.dest, balanced.dest
+                ).astype(jnp.int32),
+            )
         balanced = enqueue(balanced, q.items, q.dest, held_back)
         total = jax.lax.psum(
             balanced.count, flatten_axis_names(cfg.axis_name)

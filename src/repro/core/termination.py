@@ -7,6 +7,17 @@ iterating (possibly with an empty local queue) until the *global* in-flight
 count hits zero, which is exactly the paper's observation that "even if a
 rank does not receive any work during the current iteration, it may still be
 assigned more work from other ranks later on".
+
+Spill-and-retry (``cfg.overflow == "retain"``, ISSUE 6): ``forward_work``
+hands back clamp-cut rows compacted at the FRONT of the queue with their
+``dest`` intact.  The drive loop keeps them out of ``round_fn``'s way — the
+app sees an arrivals-only view — and re-merges them (retained first, so the
+marshal's stable source order gives FIFO oldest-first send priority) before
+the next forward, threading the per-lane ``age`` counter alongside.  The
+termination ``psum`` counts retained rows by construction (they sit in the
+queue ``count``), so the loop cannot exit with work still spilled; and since
+every nonempty destination ships at least one row per round (every clamp
+budget is ≥ 1), the backlog drains in bounded rounds — no livelock.
 """
 from __future__ import annotations
 
@@ -17,7 +28,7 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.core.forwarding import ForwardConfig, flatten_axis_names, forward_work
-from repro.core.queue import WorkQueue
+from repro.core.queue import DISCARD, WorkQueue
 from repro.telemetry import stats as TS
 
 __all__ = ["run_until_done"]
@@ -34,6 +45,77 @@ def _vary(tree: Any, axis_name) -> Any:
     return jax.tree.map(cast, tree)
 
 
+def _split_retained(q: WorkQueue) -> Tuple[jax.Array, WorkQueue]:
+    """``(n_ret, arrivals_view)``: retained rows sit at the queue FRONT with
+    ``dest >= 0``; the view shifts them out so ``round_fn`` consumes only the
+    round's arrivals (dest all DISCARD, zero drops — the drops contract)."""
+    C = q.capacity
+    lane = jnp.arange(C, dtype=jnp.int32)
+    n_ret = jnp.sum(((lane < q.count) & (q.dest >= 0)).astype(jnp.int32))
+    src = jnp.clip(lane + n_ret, 0, C - 1)
+    # happy path (nothing retained): the shift is the identity — skip the
+    # per-leaf gather behind a one-predicate cond
+    items = jax.lax.cond(
+        n_ret > 0,
+        lambda its: jax.tree.map(lambda a: jnp.take(a, src, axis=0), its),
+        lambda its: its,
+        q.items,
+    )
+    view = WorkQueue(
+        items=items,
+        dest=jnp.full((C,), DISCARD, jnp.int32),
+        count=q.count - n_ret,
+        drops=jnp.zeros_like(q.drops),
+    )
+    return n_ret, view
+
+
+def _merge_retained(
+    q: WorkQueue, n_ret: jax.Array, out_q: WorkQueue, age: jax.Array
+) -> Tuple[WorkQueue, jax.Array]:
+    """Recombine the retained front of ``q`` with ``round_fn``'s output queue
+    (retained FIRST — FIFO priority through the stable marshal).  Emissions
+    that don't fit behind the backlog are cut and counted (unreachable when
+    the app sizes ``capacity`` for its emission burst plus worst-case spill).
+    Returns ``(merged_queue, age_in)`` ready for ``forward_work``."""
+    C = q.capacity
+    lane = jnp.arange(C, dtype=jnp.int32)
+    tail = jnp.clip(lane - n_ret, 0, C - 1)
+    n_tot = n_ret + out_q.count
+    count = jnp.minimum(n_tot, C)
+    front = lane < n_ret
+
+    def merge(_):
+        def merge_leaf(a, b):
+            keep = front.reshape((C,) + (1,) * (a.ndim - 1))
+            return jnp.where(keep, a, jnp.take(b, tail, axis=0))
+
+        items = jax.tree.map(merge_leaf, q.items, out_q.items)
+        valid_tail = (~front) & (tail < out_q.count)
+        dest = jnp.where(
+            front,
+            q.dest,
+            jnp.where(valid_tail, jnp.take(out_q.dest, tail), DISCARD),
+        ).astype(jnp.int32)
+        age_in = jnp.where(front, age, 0).astype(jnp.int32)
+        return items, dest, age_in
+
+    def passthrough(_):
+        # nothing retained: the merge is out_q verbatim (lanes past count
+        # masked to DISCARD, matching the shifted-merge output bit for bit)
+        dest = jnp.where(lane < out_q.count, out_q.dest, DISCARD)
+        return out_q.items, dest.astype(jnp.int32), jnp.zeros((C,), jnp.int32)
+
+    items, dest, age_in = jax.lax.cond(n_ret > 0, merge, passthrough, None)
+    merged = WorkQueue(
+        items=items,
+        dest=dest,
+        count=count.astype(jnp.int32),
+        drops=out_q.drops + (n_tot - count).astype(jnp.int32),
+    )
+    return merged, age_in
+
+
 def run_until_done(
     round_fn: Callable[[WorkQueue, Any, jax.Array], Tuple[WorkQueue, Any]],
     q0: WorkQueue,
@@ -41,7 +123,7 @@ def run_until_done(
     cfg: ForwardConfig,
     *,
     max_rounds: int = 64,
-) -> Tuple[WorkQueue, Any, jax.Array]:
+) -> Tuple[WorkQueue, Any, jax.Array, jax.Array]:
     """Iterate ``round_fn`` + ``forward_work`` until global termination.
 
     Args:
@@ -64,14 +146,38 @@ def run_until_done(
       max_rounds: hard bound (XLA while loops need no bound, but runaway
         protection mirrors the paper's capacity pragmatism).
 
-    Returns ``(final_queue, final_aux, rounds_executed)``.  With
-    ``cfg.telemetry`` a ``telemetry.StatsRing`` of the last
-    ``cfg.telemetry_window`` rounds rides the while-loop carry and is
-    returned as a fourth output — EVERY forwarding round is recorded,
-    including the initial ray-gen routing round (so a drive that runs
-    ``rounds`` body iterations returns ``ring.pos == rounds + 1``).
+    Returns ``(final_queue, final_aux, rounds_executed, done)``.  ``done`` is
+    the termination verdict: True when the loop exited because the global
+    in-flight count hit zero, False when ``max_rounds`` ran out with work
+    still in flight (a truncated run — under ``overflow="retain"`` that
+    includes retained rows, whose ages are not returned; resume with fresh
+    ages if you continue such a run).  With ``cfg.telemetry`` a
+    ``telemetry.StatsRing`` of the last ``cfg.telemetry_window`` rounds rides
+    the while-loop carry and is returned as a fifth output — EVERY forwarding
+    round is recorded, including the initial ray-gen routing round (so a
+    drive that runs ``rounds`` body iterations returns ``ring.pos ==
+    rounds + 1``).
     """
     telem = cfg.telemetry
+    retain = cfg.overflow == "retain"
+
+    def fwd(q, age):
+        """Uniform forward_work unpack: ``(new_q, total, age_out, stats)``
+        with Nones where the config doesn't produce the value."""
+        if retain and telem:
+            new_q, total, age_out, stats = forward_work(q, cfg, age=age)
+        elif retain:
+            new_q, total, age_out = forward_work(q, cfg, age=age)
+            stats = None
+        elif telem:
+            new_q, total, stats = forward_work(q, cfg)
+            age_out = None
+        else:
+            new_q, total = forward_work(q, cfg)
+            age_out = stats = None
+        return new_q, total, age_out, stats
+
+    n_extra = (1 if retain else 0) + (1 if telem else 0)
 
     def cond(carry):
         total, rnd = carry[2], carry[3]
@@ -79,17 +185,25 @@ def run_until_done(
 
     def body(carry):
         q, aux, _total, rnd, drops = carry[:5]
+        i = 5
+        age = None
+        if retain:
+            age = carry[i]
+            i += 1
         # The input queue's cumulative drops already ride the loop carry;
         # hand round_fn a zero-drop view so a round_fn that threads the input
         # queue's drops into its output cannot double-count them (see the
         # drops contract in the docstring).
         q = WorkQueue(items=q.items, dest=q.dest, count=q.count,
                       drops=jnp.zeros_like(q.drops))
-        out_q, aux = round_fn(q, aux, rnd)
-        if telem:
-            new_q, total, stats = forward_work(out_q, cfg)
+        if retain:
+            n_ret, view = _split_retained(q)
+            out_q, aux = round_fn(view, aux, rnd)
+            fwd_q, age_in = _merge_retained(q, n_ret, out_q, age)
         else:
-            new_q, total = forward_work(out_q, cfg)
+            fwd_q, aux = round_fn(q, aux, rnd)
+            age_in = None
+        new_q, total, age_out, stats = fwd(fwd_q, age_in)
         # Per-round queues are fresh, so cumulative overflow drops must ride
         # the loop carry (observability: silent loss is a capacity bug).
         drops = drops + new_q.drops
@@ -100,15 +214,26 @@ def run_until_done(
             rnd + 1,
             _vary(drops, cfg.axis_name),
         )
+        if retain:
+            out = out + (_vary(age_out, cfg.axis_name),)
         if telem:
-            ring = TS.ring_push(carry[5], stats)
+            ring = TS.ring_push(carry[i], stats)
             out = out + (_vary(ring, cfg.axis_name),)
         return out
 
     # Initial forward: route the ray-gen output to its owners (the paper's
     # VoPaT does exactly this — primary rays are "forwarded to itself").
+    q1, total0, age1, stats0 = fwd(q0, None)
+    carry0 = (
+        _vary(q1, cfg.axis_name),
+        _vary(aux0, cfg.axis_name),
+        total0,
+        jnp.zeros((), jnp.int32),
+        _vary(q1.drops, cfg.axis_name),
+    )
+    if retain:
+        carry0 = carry0 + (_vary(age1, cfg.axis_name),)
     if telem:
-        q1, total0, stats0 = forward_work(q0, cfg)
         ring0 = TS.ring_push(
             TS.make_ring(
                 TS.num_tiers(cfg),
@@ -117,20 +242,11 @@ def run_until_done(
             ),
             stats0,
         )
-    else:
-        q1, total0 = forward_work(q0, cfg)
-    carry0 = (
-        _vary(q1, cfg.axis_name),
-        _vary(aux0, cfg.axis_name),
-        total0,
-        jnp.zeros((), jnp.int32),
-        _vary(q1.drops, cfg.axis_name),
-    )
-    if telem:
         carry0 = carry0 + (_vary(ring0, cfg.axis_name),)
     out = jax.lax.while_loop(cond, body, carry0)
-    q, aux, _, rounds, drops = out[:5]
+    q, aux, total, rounds, drops = out[:5]
+    done = total == 0
     q = WorkQueue(items=q.items, dest=q.dest, count=q.count, drops=drops)
     if telem:
-        return q, aux, rounds, out[5]
-    return q, aux, rounds
+        return q, aux, rounds, done, out[4 + n_extra]
+    return q, aux, rounds, done

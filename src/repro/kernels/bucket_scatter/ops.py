@@ -52,3 +52,27 @@ def scatter_rows(
     if interpret is None:
         interpret = default_interpret()
     return K.scatter_rows(src, dstpos, num_slots=num_slots, interpret=interpret)
+
+
+def compact_rows(
+    src: jax.Array,
+    mask: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Stable front-compaction of the masked rows — the spill-and-retry
+    primitive (``overflow="retain"``): the marked rows move to the front of
+    an ``(N, W)`` buffer in their original relative order, unmarked slots
+    stay zero.  The position plan is the 1-bucket counting sort (the mask's
+    exclusive prefix sum); the payload moves in ONE ``scatter_rows`` pass.
+
+    Returns ``(out, slot, n_kept)`` — ``slot`` is each source row's compacted
+    position (``N`` for unmarked rows, the kernel's discard sentinel), handed
+    back so callers can scatter side-band vectors (dest, age) to the same
+    layout without a second plan."""
+    n = src.shape[0]
+    m32 = mask.astype(jnp.int32)
+    pos = jnp.cumsum(m32) - m32
+    slot = jnp.where(mask, pos, n)
+    out = scatter_rows(src, slot, num_slots=n, interpret=interpret)
+    return out, slot, jnp.sum(m32)

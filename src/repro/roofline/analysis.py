@@ -335,6 +335,32 @@ def occupancy_waste_model(
     return out
 
 
+def spill_drain_model(backlog_rows: int, allowance_rows_per_round: int) -> Dict:
+    """Model: bounded-delay drain of a spill-and-retry backlog (the lossless
+    law's analytical half, gated by the chaos benchmark).
+
+    Under ``overflow="retain"`` a clamp never loses a row — it re-queues it
+    at the FRONT of the carry (FIFO oldest-first), so a backlog of
+    ``backlog_rows`` rows contending for one destination drains at
+    ``allowance_rows_per_round`` rows per round (the per-destination clamp
+    budget — ``peer_capacity`` flat, the stage's segment capacity per tier
+    hierarchically).  Every budget is ≥ 1 row, so the oldest row always
+    ships within ``ceil(backlog / allowance)`` rounds:
+
+        rounds = age_bound = ceil(backlog_rows / allowance_rows_per_round)
+
+    The chaos harness asserts the measured ``age_max`` never exceeds this
+    bound (+ the emission span, since the backlog builds over the scenario's
+    emitting rounds rather than all at once)."""
+    if allowance_rows_per_round < 1:
+        raise ValueError(
+            "allowance must be >= 1 row/round — every clamp budget admits at "
+            f"least one row (got {allowance_rows_per_round})"
+        )
+    rounds = -(-int(backlog_rows) // int(allowance_rows_per_round))
+    return {"rounds": rounds, "age_bound": rounds}
+
+
 def marshal_cost_model(
     marshal: str,
     *,

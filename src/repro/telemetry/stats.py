@@ -28,6 +28,11 @@ The recorded quantities, per round, per rank:
   (the PR-4 count-each-drop-exactly-once accounting, per stage).
 * ``recv_total`` / ``recv_drops`` — rows arriving at the receiver pre-clamp,
   and what the receiver-capacity compaction cut.
+* ``retained_rows`` / ``age_max`` — spill-and-retry observability (ISSUE 6,
+  ``ForwardConfig(overflow="retain")``): rows the round RETAINED locally
+  instead of dropping, and the oldest retained lane's rounds-waiting counter
+  (the anti-starvation bound the chaos gate asserts on).  Zero under
+  ``overflow="drop"``.
 
 Tier indexing matches ``ForwardConfig``: hierarchical configs record one row
 per ``level_sizes`` entry (slowest first; extent-1 tiers skip their stage and
@@ -86,6 +91,8 @@ class RoundStats:
     stage_drops: jax.Array   # (L,) rows the tier's §3.3 send clamp cut
     recv_total: jax.Array    # () rows arriving pre receiver clamp
     recv_drops: jax.Array    # () rows the receiver compaction cut
+    retained_rows: jax.Array  # () rows retained locally (overflow="retain")
+    age_max: jax.Array       # () oldest retained lane's rounds waiting
 
     @property
     def tiers(self) -> int:
@@ -166,6 +173,8 @@ def make_stats(tiers: int, buckets: int) -> RoundStats:
         stage_drops=jnp.zeros((tiers,), jnp.int32),
         recv_total=z,
         recv_drops=z,
+        retained_rows=z,
+        age_max=z,
     )
 
 
@@ -179,7 +188,10 @@ def single_tier_stats(
     recv_total: jax.Array,  # () rows arriving pre receiver clamp
     recv_drops: jax.Array,  # () receiver compaction drops
 ) -> RoundStats:
-    """The flat-backend capture: one tier, filled in one call."""
+    """The flat-backend capture: one tier, filled in one call.  The retain
+    fields start zero — ``forward_work`` stamps them after the merge (the
+    exchange doesn't see the receiver-side admission)."""
+    z = jnp.zeros((), jnp.int32)
     return RoundStats(
         demand_hist=occupancy_histogram(demand, capacity, buckets)[None, :],
         demand_max=jnp.max(demand).astype(jnp.int32)[None],
@@ -188,6 +200,8 @@ def single_tier_stats(
         stage_drops=stage_drops.astype(jnp.int32)[None],
         recv_total=recv_total.astype(jnp.int32),
         recv_drops=recv_drops.astype(jnp.int32),
+        retained_rows=z,
+        age_max=z,
     )
 
 
@@ -272,6 +286,11 @@ def summarize(ring: StatsRing, *, tier_capacities: Tuple[int, ...]) -> Dict:
         "recv_total_max": int(np.asarray(ring.stats.recv_total).max()),
         "recv_drops": recv_drops,
         "drops": int(stage_drops.sum()) + recv_drops,
+        # spill-and-retry pressure (zero under overflow="drop"): total
+        # retained row-rounds in the window, and the oldest wait observed —
+        # the controller treats retained != 0 like drops != 0 (not converged)
+        "retained_rows": int(np.asarray(ring.stats.retained_rows).sum()),
+        "age_max": int(np.asarray(ring.stats.age_max).max()),
     }
 
 

@@ -92,6 +92,7 @@ class TuneStep:
     drops: int                    # total clamp drops observed in the burst
     demand_max: Tuple[int, ...]   # exact per-tier max segment demand
     rounds: int                   # forwarding rounds the burst recorded
+    retained: int = 0             # spill-and-retry row-rounds (overflow="retain")
 
 
 @dataclasses.dataclass
@@ -182,6 +183,7 @@ def plan_capacities(
         telemetry=cfg.telemetry,
         telemetry_window=cfg.telemetry_window,
         telemetry_buckets=cfg.telemetry_buckets,
+        overflow=cfg.overflow,
     )
     if cfg.exchange == "hierarchical":
         kw.update(level_sizes=cfg.level_sizes, level_capacities=solved)
@@ -215,6 +217,12 @@ def autotune_forward(
     drop-free AND the plan is a fixed point (re-planning from the new burst
     asks for the capacities it already ran with) — so the final config is
     *verified* drop-free on the measured workload, not just predicted.
+    Under ``overflow="retain"`` clamped rows spill back into the queue
+    instead of dropping, so a burst can be "drop-free" while still starved
+    for capacity; the verdict therefore also requires the burst's summed
+    ``retained_rows`` (spill pressure, recorded per round in telemetry) to
+    be zero — retained demand keeps driving capacity growth exactly like
+    drops do in drop mode.
     Returns ``(final_cfg, report)``; ``report.converged`` is False when
     ``max_bursts`` ran out first (e.g. a workload whose drift outruns the
     headroom).
@@ -230,6 +238,7 @@ def autotune_forward(
         burst_drops, ring = run_burst(cfg)
         summary = TS.summarize(ring, tier_capacities=TS.tier_capacities(cfg))
         drops = int(summary["drops"] if burst_drops is None else burst_drops)
+        retained = int(summary.get("retained_rows", 0))
         planned = plan_capacities(summary, cfg, policy=policy, bounds=bounds)
         cur_caps = TS.tier_capacities(cfg)
         new_caps = TS.tier_capacities(planned)
@@ -241,9 +250,10 @@ def autotune_forward(
                 drops=drops,
                 demand_max=tuple(int(d) for d in summary["demand_max"]),
                 rounds=int(summary["rounds"]),
+                retained=retained,
             )
         )
-        if drops == 0 and new_caps == cur_caps:
+        if drops == 0 and retained == 0 and new_caps == cur_caps:
             converged = True
             break
         cfg = planned

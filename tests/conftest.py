@@ -38,6 +38,14 @@ def pytest_configure(config):
         "(telemetry adds zero payload-sized collectives) carries the marker "
         "too so the selection is self-contained.",
     )
+    config.addinivalue_line(
+        "markers",
+        "chaos: drives the ISSUE-6 deterministic fault-injection harness "
+        "(repro.chaos) through the real on-device loop — multi-round, "
+        "multi-scenario property tests of the lossless law (retain mode "
+        "loses nothing) and the conservation identity (drop mode counts "
+        "every loss).  Part of tier-1; CI can select with `-m chaos`.",
+    )
 
 
 @pytest.fixture(autouse=True)

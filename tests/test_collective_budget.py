@@ -309,6 +309,62 @@ def test_telemetry_adds_zero_collectives(request, fixture, axes, kw):
     assert ops_on == ops_off, (ops_on, ops_off)
 
 
+def _lower_round_any_overflow(mesh, cfg, axes):
+    """Overflow-mode-agnostic lowering: a retain round returns the extra
+    ``age_out`` (kept live so its computation can't be DCE'd); a drop round
+    returns a zero placeholder so both programs have identical output
+    signatures and only the round's internals differ."""
+    def kernel(_x):
+        q = make_queue(ray_proto(), CAP)
+        me = jax.lax.axis_index(axes)
+        q = enqueue(
+            q, make_rays(10), ((me + jnp.arange(10)) % R).astype(jnp.int32),
+            jnp.ones(10, bool),
+        )
+        res = forward_work(q, cfg)
+        nq, total = res[0], res[1]
+        age = res[2] if cfg.overflow == "retain" else jnp.zeros(CAP, jnp.int32)
+        return nq.count[None], total, nq.items.tmin, age
+
+    return jax.jit(
+        compat.shard_map(
+            kernel, mesh=mesh, in_specs=P(axes),
+            out_specs=(P(axes), P(), P(axes), P(axes)),
+        )
+    ).lower(jnp.arange(8.0)).as_text()
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize(
+    "fixture,axes,kw",
+    [
+        ("mesh8", "data", dict(exchange="padded")),
+        ("mesh8", "data", dict(exchange="padded", marshal="scatter")),
+        (
+            "mesh_pods222", ("pod", "node", "device"),
+            dict(exchange="hierarchical", level_sizes=(2, 2, 2)),
+        ),
+    ],
+    ids=["padded", "padded-scatter", "hier3"],
+)
+def test_retain_adds_zero_collectives(request, fixture, axes, kw):
+    """ISSUE 6 acceptance: retention is pure LOCAL compaction — the rows a
+    clamp cuts never leave the rank, so the full collective inventory (kind,
+    bytes, replica groups) of an ``overflow="retain"`` round is identical to
+    the drop-mode round.  The budget, per-axis, and wire-format laws carry
+    over to retain mode by construction, not by re-proof."""
+    mesh = request.getfixturevalue(fixture)
+    cfg_drop = ForwardConfig(axes, R, CAP, **kw)
+    cfg_retain = ForwardConfig(axes, R, CAP, overflow="retain", **kw)
+    ops_drop = collective_ops(
+        _lower_round_any_overflow(mesh, cfg_drop, axes), with_groups=True
+    )
+    ops_retain = collective_ops(
+        _lower_round_any_overflow(mesh, cfg_retain, axes), with_groups=True
+    )
+    assert ops_retain == ops_drop, (ops_retain, ops_drop)
+
+
 def test_cycle_hop_ships_one_packed_buffer(mesh8):
     """A ring hop moves items+dest as ONE packed collective_permute (plus the
     scalar count) — the cycling analogue of the forwarding budget."""

@@ -182,15 +182,18 @@ def test_multi_round_termination(mesh8):
         me = jax.lax.axis_index("data")
         q0 = make_queue(ray_proto(), CAP)
         q0 = enqueue(q0, make_rays(2), me * jnp.ones(2, jnp.int32), jnp.ones(2, bool))
-        q, acc, rounds = run_until_done(round_fn, q0, jnp.zeros(()), cfg, max_rounds=32)
-        return acc[None], rounds[None]
+        q, acc, rounds, done = run_until_done(round_fn, q0, jnp.zeros(()), cfg, max_rounds=32)
+        return acc[None], rounds[None], done[None]
 
     f = jax.jit(
-        compat.shard_map(drive, mesh=mesh8, in_specs=P("data"), out_specs=(P("data"), P("data")))
+        compat.shard_map(drive, mesh=mesh8, in_specs=P("data"),
+                         out_specs=(P("data"), P("data"), P("data")))
     )
-    acc, rounds = f(jnp.arange(8.0))
+    acc, rounds, done = f(jnp.arange(8.0))
     assert float(np.asarray(acc).sum()) == 8 * 2 * 5.0
     assert int(np.asarray(rounds)[0]) == 5
+    # the clean exit: the global count hit zero, so the verdict is True
+    assert bool(np.asarray(done).all())
 
 
 def test_drops_not_double_counted_when_round_fn_threads_queue_drops(mesh8):
@@ -224,7 +227,7 @@ def test_drops_not_double_counted_when_round_fn_threads_queue_drops(mesh8):
     def drive(_x):
         me = jax.lax.axis_index("data")
         q0 = emit_burst(make_queue(ray_proto(), CAP), me, me == 0)
-        q, acc, rounds = run_until_done(
+        q, acc, rounds, _done = run_until_done(
             round_fn, q0, jnp.zeros(()), cfg, max_rounds=8
         )
         return q.drops[None], rounds[None]
@@ -261,19 +264,21 @@ def test_max_rounds_cap_with_work_still_in_flight(mesh8):
         me = jax.lax.axis_index("data")
         q0 = make_queue(ray_proto(), CAP)
         q0 = enqueue(q0, make_rays(n), me * jnp.ones(n, jnp.int32), jnp.ones(n, bool))
-        q, acc, rounds = run_until_done(
+        q, acc, rounds, done = run_until_done(
             round_fn, q0, jnp.zeros((), jnp.int32), cfg, max_rounds=3
         )
-        return q.count[None], q.drops[None], rounds[None], acc[None]
+        return q.count[None], q.drops[None], rounds[None], acc[None], done[None]
 
     f = jax.jit(
         compat.shard_map(
             drive, mesh=mesh8, in_specs=P("data"),
-            out_specs=(P("data"), P("data"), P("data"), P("data")),
+            out_specs=(P("data"), P("data"), P("data"), P("data"), P("data")),
         )
     )
-    count, drops, rounds, acc = f(jnp.arange(8.0))
+    count, drops, rounds, acc, done = f(jnp.arange(8.0))
     assert int(np.asarray(rounds)[0]) == 3  # the cap, not termination
+    # the truncated exit: work still in flight, so the verdict is False
+    assert not bool(np.asarray(done).any())
     # every rank still holds its n items — in flight, reported, not dropped
     np.testing.assert_array_equal(np.asarray(count).reshape(-1), np.full(R, n))
     assert int(np.asarray(count).sum()) == R * n

@@ -125,3 +125,47 @@ def test_enqueue_bool_and_int_masks_are_equivalent(truthy):
         np.asarray(full["bool"].items.pixel[:3]),
         np.asarray(full["int32"].items.pixel[:3]),
     )
+
+
+# -------------------------------------------------- emit-time validation
+def test_make_queue_rejects_non_int_capacity():
+    for bad in (16.0, "16", None, jnp.zeros(())):
+        with pytest.raises(ValueError, match="static Python int"):
+            make_queue(ray_proto(), bad)
+    with pytest.raises(ValueError, match=">= 1"):
+        make_queue(ray_proto(), 0)
+
+
+def test_enqueue_rejects_float_dest():
+    """A float dest would truncate-cast and misroute silently — the classic
+    emit-kernel bug this check exists to catch at trace time."""
+    q = make_queue(ray_proto(), 16)
+    with pytest.raises(ValueError, match="integer dtype"):
+        enqueue(q, make_rays(4), jnp.array([0.0, 1.0, 2.0, 3.0]), jnp.ones(4, bool))
+
+
+def test_enqueue_rejects_out_of_range_concrete_dest():
+    q = make_queue(ray_proto(), 16)
+    dest = jnp.array([0, 9, 2, 12], jnp.int32)
+    with pytest.raises(ValueError, match=r"num_ranks \(8\).*offending value 12"):
+        enqueue(q, make_rays(4), dest, jnp.ones(4, bool), num_ranks=8)
+    # unmasked and DISCARD lanes are exempt — only real emits are checked
+    ok = enqueue(
+        q, make_rays(4), jnp.array([0, 9, DISCARD, 12], jnp.int32),
+        jnp.array([1, 0, 1, 0], bool), num_ranks=8,
+    )
+    assert int(ok.count) == 1
+
+
+def test_enqueue_traced_dest_skips_value_check():
+    """Values don't exist at trace time; the marshal sanitize still guards
+    execution, so a traced out-of-range dest becomes a counted sanitize-drop
+    rather than a trace error."""
+    def emit(dest):
+        return enqueue(
+            make_queue(ray_proto(), 16), make_rays(4), dest,
+            jnp.ones(4, bool), num_ranks=8,
+        ).count
+
+    n = jax.jit(emit)(jnp.array([0, 9, 2, 12], jnp.int32))
+    assert int(n) == 4  # enqueued; forward_work's sanitize would cut 9 and 12

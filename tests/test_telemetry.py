@@ -315,7 +315,7 @@ def test_run_until_done_carries_ring_and_overwrites_window(mesh8):
         me = jax.lax.axis_index("data")
         q0 = make_queue(ray_proto(), CAP)
         q0 = enqueue(q0, make_rays(3), me * jnp.ones(3, jnp.int32), jnp.ones(3, bool))
-        q, acc, rounds, ring = run_until_done(
+        q, acc, rounds, _done, ring = run_until_done(
             round_fn, q0, jnp.zeros(()), cfg, max_rounds=16
         )
         return rounds[None], TM.stack_ring(ring)

@@ -174,7 +174,7 @@ def _make_run_burst(mesh, axes):
             me = jax.lax.axis_index(axes)
             items, dest = _drift_emits(me, 0, R)
             q0 = enqueue(make_queue(PROTO, CAP), items, dest, jnp.ones(N_EMIT, bool))
-            q, _acc, _rounds, ring = run_until_done(
+            q, _acc, _rounds, _done, ring = run_until_done(
                 round_fn, q0, jnp.zeros((), jnp.int32), cfg,
                 max_rounds=ROUNDS + 2,
             )
