@@ -49,6 +49,17 @@
                          unless retain loses NOTHING (age within the
                          spill_drain_model bound) while drop loses >20% of
                          the convergecast.
+  fwd_walltime_ckpt_*    ISSUE 7: segmented-drive walltime with the
+                         checkpoint writer off vs on (checkpoint_every=8)
+                         on ballasted convergecast bursts — the recovery
+                         law's amortized-overhead measurement.
+  chaos_recovery_*       ISSUE 7: the recovery acceptance — preempt at
+                         round 5 / resume must be bit-exact with the
+                         uninterrupted run at every common checkpoint
+                         boundary (SHA-256 of every carry leaf), and a
+                         mid-burst two-rank brownout must drain lossless,
+                         matching the numpy twin's trajectory.  FAILS on
+                         any violation.
   sort_throughput_*      §4.2.1 key pack+sort throughput (keys/s), XLA vs
                          Pallas(interpret) paths.
   app_*                  §5 application throughputs (CPU, small scenes).
@@ -78,8 +89,13 @@ autotune_drift section must converge — BENCH_PR5.json is this gate's dump.
 ``--compare drop,retain`` is the PR-6 gate: retain-mode walltime must stay
 within a 1.05× geomean of drop mode on the happy path, and the
 chaos_lossless acceptance must hold — BENCH_PR6.json is this gate's dump.
+``--compare nockpt,ckpt`` is the PR-7 gate: the checkpointed drive
+(checkpoint_every=8) must stay within a 1.05× walltime geomean of the
+save-free segmented drive on ballasted bursts, and the chaos_recovery
+acceptance must hold (preempt-resume bit-exact, brownout lossless) —
+BENCH_PR7.json is this gate's dump.
 ``--autotune`` runs the autotune_drift section alone; ``--chaos`` runs the
-chaos_lossless section alone.
+chaos_lossless + chaos_recovery acceptance sections alone.
 
 Every ``--json`` dump carries provenance: git SHA, jax version, platform,
 the command line, and the ``ForwardConfig`` fields + mesh shape of each
@@ -944,6 +960,227 @@ def chaos_lossless():
           "on convergecast, ages within drain bound")
 
 
+# --------------------------------- ISSUE 7: recovery law (ckpt / brownout)
+def _ballast_round_fn(base, width=48, iters=512):
+    """Wrap a chaos ``round_fn`` with app-realistic per-round compute (a
+    ray-march-shaped ``fori_loop`` over a per-lane scratch).  The overhead
+    gate must amortize the checkpoint writer against rounds that DO WORK —
+    the bare chaos probe rounds are ~1 ms microbenchmarks, an order of
+    magnitude under any real per-round app kernel (trace, integrate, shade),
+    and would overstate the writer's relative cost by that same factor.  The
+    ballast folds into the aux through a branch XLA cannot constant-fold
+    (``isnan`` of a finite sum is 0 only at runtime) without perturbing any
+    checksum."""
+
+    def round_fn(q_in, aux, rnd):
+        x = q_in.items.val[:, :1] * jnp.ones((1, width)) + 1.0
+        x = jax.lax.fori_loop(
+            0, iters, lambda i, v: v * 0.999 + jnp.sin(v) * 1e-3, x
+        )
+        out, (cnt, s, s2) = base(q_in, aux, rnd)
+        cnt = cnt + jnp.where(
+            jnp.isnan(jnp.sum(x)), jnp.uint32(1), jnp.uint32(0)
+        )
+        return out, (cnt, s, s2)
+
+    return round_fn
+
+
+def fwd_walltime_ckpt(samples=3):
+    """Segmented-drive walltime with the checkpoint writer OFF vs ON
+    (``ckpt_dir=None`` vs a real directory) at the ISSUE-7 amortization
+    point ``checkpoint_every=8``, on two convergecast burst lengths with
+    ballasted rounds (:func:`_ballast_round_fn`).  Both variants run the
+    SAME compiled start/segment programs and the same host boundary loop —
+    the delta is exactly what the writer adds per boundary (serialize +
+    fsync + retention sweep), amortized over the W rounds between saves.
+    Timed interleaved with per-variant medians (the runs are seconds long;
+    interleaving cancels the host's slow load drift).  Returns
+    ``{(tag, variant): us}`` for the ``--compare nockpt,ckpt`` gate."""
+    import tempfile
+
+    from repro.chaos import convergecast
+    from repro.chaos.driver import _aux0, _make_ctx, _make_round_fn, _seed_queue
+    from repro.core import recovery
+
+    mesh = _mesh8()
+    S, C, W, max_rounds = 2, 128, 8, 64
+    times = {}
+    for tag, sc in (
+        ("short", convergecast(8)),
+        ("long", convergecast(8, rounds=8)),
+    ):
+        ctx = _make_ctx(
+            mesh, capacity=C, peer_capacity=S, overflow="retain",
+            max_rounds=max_rounds,
+        )
+        spec = ctx._spec
+        start_p, segment_p = ctx.checkpoint_drive_programs(
+            _ballast_round_fn(_make_round_fn(ctx, sc)),
+            aux_specs=(spec, spec, spec), accounting=True,
+        )
+        carry0 = start_p(_seed_queue(sc, C), _aux0(8), np.ones((8,), bool))
+        jax.block_until_ready(jax.tree.leaves(carry0))
+        ckpt_root = tempfile.mkdtemp(prefix=f"rafi_bench_ckpt_{tag}_")
+        record_cfg(f"ckpt_{tag}", ctx.cfg, mesh)
+
+        def run(ckpt_dir):
+            # reuse the REAL boundary loop (not a replica) against the one
+            # pair of compiled programs, so the variants differ only in the
+            # writer work — recompiling per call would drown the delta
+            res = recovery._drive_loop(
+                ctx, segment_p, carry0, ckpt_dir=ckpt_dir,
+                checkpoint_every=W, max_rounds=max_rounds,
+                health=None, keep=3, halt_after_round=None,
+            )
+            assert res["done"]
+            return res
+
+        res = run(None)
+        run(ckpt_root)  # publish once: later samples measure the overwrite
+        rounds = res["rounds"]  # steady state (replace + retention sweep)
+        saves = rounds // W + 1 + (1 if rounds % W else 0)
+        ts = {"nockpt": [], "ckpt": []}
+        for _ in range(samples):
+            for variant, d in (("nockpt", None), ("ckpt", ckpt_root)):
+                t0 = time.perf_counter()
+                run(d)
+                ts[variant].append((time.perf_counter() - t0) * 1e6)
+        for variant, v in ts.items():
+            us = float(np.median(v))
+            times[(tag, variant)] = us
+            emit(
+                f"fwd_walltime_ckpt_{tag}_{variant}", us,
+                f"rounds={rounds};boundaries={saves};W={W}"
+                f";rounds_per_s={rounds / (us / 1e6):.1f}",
+            )
+    return times
+
+
+def chaos_recovery():
+    """The ISSUE-7 acceptance run: the recovery law, end to end, RAISING on
+    any violation (like :func:`chaos_lossless`, this must trip CI, not trend
+    a row).
+
+    * **Preempt/resume bit-exactness** — the capacity-drought burst driven
+      through the checkpointed drive uninterrupted vs killed at round 5 and
+      resumed from disk: both runs must publish the SAME boundary rounds
+      with IDENTICAL per-leaf SHA-256 digests at every common boundary
+      (``boundary_digests`` — byte equality of the full forwarding state,
+      no tolerance), and both must drain lossless to the schedule's
+      checksums.
+    * **Brownout losslessness** — the rank-brownout burst with two ranks
+      going dark at round 3 (health re-read each segment boundary): zero
+      drops, zero lost, clean drain, and the whole trajectory — deliveries
+      AND round count — equal to the numpy twin evaluated under the
+      device's segment-boundary health timing."""
+    import tempfile
+
+    from repro.chaos import (
+        boundary_digests,
+        brownout_mask,
+        capacity_drought,
+        expected_by_rank,
+        rank_brownout,
+        run_scenario_checkpointed,
+        simulate_flat_retain,
+    )
+
+    mesh = _mesh8()
+    S, C, W = 2, 128, 3
+    problems = []
+
+    # --- preempt at round 5, resume, compare boundary digests
+    sc = capacity_drought(8)
+    kw = dict(
+        capacity=C, peer_capacity=S, overflow="retain", max_rounds=64,
+        checkpoint_every=W, keep=99,
+    )
+    with tempfile.TemporaryDirectory() as da, tempfile.TemporaryDirectory() as db:
+        t0 = time.perf_counter()
+        a = run_scenario_checkpointed(mesh, sc, ckpt_dir=da, **kw)
+        b = run_scenario_checkpointed(
+            mesh, sc, ckpt_dir=db, preempt_at=5, **kw
+        )
+        dt = time.perf_counter() - t0
+        dga, dgb = boundary_digests(da), boundary_digests(db)
+        common = sorted(set(dga) & set(dgb))
+        emit(
+            f"chaos_recovery_preempt_{sc.name}", dt * 1e6,
+            f"rounds={a['rounds']};boundaries={len(dga)}"
+            f";common={len(common)};preempted={b['preempted']}",
+        )
+        if not b["preempted"]:
+            problems.append("preempt: halt_after_round=5 did not preempt")
+        if a["steps"] != b["steps"]:
+            problems.append(
+                f"preempt: boundary rounds diverge {a['steps']} vs {b['steps']}"
+            )
+        if len(common) < 3:
+            problems.append(f"preempt: only {len(common)} common boundaries")
+        for s in common:
+            if dga[s] != dgb[s]:
+                problems.append(f"preempt: digest mismatch at boundary {s}")
+        for tag, r in (("uninterrupted", a), ("resumed", b)):
+            if r["drops"] or r["lost"] or not r["done"]:
+                problems.append(
+                    f"preempt/{tag}: drops={r['drops']} lost={r['lost']} "
+                    f"done={r['done']}"
+                )
+        if not np.array_equal(a["delivered"], expected_by_rank(sc)):
+            problems.append("preempt: delivered checksums != schedule oracle")
+
+    # --- brownout: ranks 2 and 5 go dark at round 3, nothing is lost
+    sc = rank_brownout(8)
+    health = brownout_mask(8, down=(2, 5), down_from=3)
+
+    def twin_health(f):
+        # the device re-reads health at segment boundaries: forward 0 routes
+        # under health(0); forward f >= 1 (body round f-1) under the mask of
+        # the boundary that launched its segment
+        return health(0) if f == 0 else health(W * ((f - 1) // W))
+
+    sim = simulate_flat_retain(
+        sc, peer_capacity=S, capacity=C, health=twin_health
+    )
+    with tempfile.TemporaryDirectory() as dc:
+        t0 = time.perf_counter()
+        res = run_scenario_checkpointed(
+            mesh, sc, ckpt_dir=dc, capacity=C, peer_capacity=S,
+            overflow="retain", max_rounds=64, checkpoint_every=W,
+            keep=99, health=health,
+        )
+        dt = time.perf_counter() - t0
+        emit(
+            f"chaos_recovery_brownout_{sc.name}", dt * 1e6,
+            f"emitted={res['emitted']};delivered={res['delivered_total']}"
+            f";drops={res['drops']};lost={res['lost']}"
+            f";rounds={res['rounds']}",
+        )
+        if res["drops"] or res["lost"] or not res["done"]:
+            problems.append(
+                f"brownout: drops={res['drops']} lost={res['lost']} "
+                f"done={res['done']}"
+            )
+        if res["delivered_total"] != sc.emitted:
+            problems.append(
+                f"brownout: delivered {res['delivered_total']} != emitted "
+                f"{sc.emitted}"
+            )
+        if not np.array_equal(res["delivered"], sim["delivered"]):
+            problems.append("brownout: device checksums != numpy twin")
+        if res["rounds"] != sim["rounds"]:
+            problems.append(
+                f"brownout: rounds {res['rounds']} != twin {sim['rounds']}"
+            )
+    if problems:
+        raise RuntimeError("recovery gate failed: " + "; ".join(problems))
+    print(
+        "# recovery ok: preempt-resume bit-exact at every common boundary, "
+        "brownout lossless and twin-exact"
+    )
+
+
 # ------------------------------------- ISSUE 4: sort vs scatter marshal
 def _paired_times(cfgs, mesh, axes, n_emit, cap, samples):
     """Time several configs of one mesh point INTERLEAVED (a, b, a, b, …)
@@ -1127,6 +1364,38 @@ def compare_backends(spec: str) -> int:
             print(f"# COMPARE FAILED: {e}")
             return 1
         return 0
+    if names == ("nockpt", "ckpt"):
+        # PR-7 gate: recovery must be amortized — the segmented drive WITH
+        # the checkpoint writer (W=8 rounds between saves) within a 1.05×
+        # walltime GEOMEAN of the save-free segmented drive on ballasted
+        # bursts — and the chaos_recovery acceptance must hold
+        # (preempt-resume bit-exact, brownout lossless; it raises otherwise).
+        times = fwd_walltime_ckpt(samples=5)
+        ratios = []
+        for (tag, variant), us in sorted(times.items()):
+            if variant != "ckpt":
+                continue
+            ratio = us / times[(tag, "nockpt")]
+            ratios.append(ratio)
+            emit(f"compare_ckpt_{tag}", us, f"ratio={ratio:.3f}")
+        geomean = float(np.exp(np.mean(np.log(ratios))))
+        emit("compare_ckpt_geomean", 0.0, f"ratio={geomean:.3f}")
+        if geomean > 1.05:
+            print(
+                f"# COMPARE FAILED: checkpointing every 8 rounds regresses "
+                f"the save-free drive by {geomean:.2f}x > 1.05x (geomean)"
+            )
+            return 1
+        print(
+            f"# compare ok: ckpt/nockpt walltime geomean {geomean:.3f} "
+            f"(per-point: {', '.join(f'{r:.3f}' for r in ratios)})"
+        )
+        try:
+            chaos_recovery()
+        except RuntimeError as e:
+            print(f"# COMPARE FAILED: {e}")
+            return 1
+        return 0
     if names == ("sort", "scatter"):
         # PR-4 gate: across the sweep the scatter marshal must be no more
         # than 5% slower than the sort path — a regression there means the
@@ -1195,7 +1464,7 @@ def compare_backends(spec: str) -> int:
         raise SystemExit(
             "error: --compare supports 'flat,hierarchical', "
             "'flat,hierarchical2,hierarchical3', 'sort,scatter', "
-            f"'off,telemetry', or 'drop,retain', got {spec!r}"
+            f"'off,telemetry', 'drop,retain', or 'nockpt,ckpt', got {spec!r}"
         )
     n_emit, cap = 2048, 4096
     flat, hier, mesh = _hier_pair(1, 8, n_emit, cap)
@@ -1290,7 +1559,9 @@ SECTIONS = [
     ("fwd_walltime_marshal", fwd_walltime_marshal),
     ("fwd_walltime_telemetry", fwd_walltime_telemetry),
     ("fwd_walltime_overflow", fwd_walltime_overflow),
+    ("fwd_walltime_ckpt", fwd_walltime_ckpt),
     ("chaos_lossless", chaos_lossless),
+    ("chaos_recovery", chaos_recovery),
     ("rebalance_skew", rebalance_skew),
     ("autotune_drift", autotune_drift),
     ("sort_throughput", sort_throughput),
@@ -1340,9 +1611,11 @@ def main(argv=None) -> None:
                     help="run only the ISSUE-5 autotune_drift section "
                          "(drifting hot-spot + adaptive capacity controller)")
     ap.add_argument("--chaos", action="store_true",
-                    help="run only the ISSUE-6 chaos_lossless section "
-                         "(fault-injection scenarios; retain mode must lose "
-                         "nothing where drop mode loses >20%%)")
+                    help="run only the chaos acceptance sections: the ISSUE-6 "
+                         "chaos_lossless gauntlet (retain mode must lose "
+                         "nothing where drop mode loses >20%%) plus the "
+                         "ISSUE-7 chaos_recovery run (preempt-resume "
+                         "bit-exact, rank brownout lossless)")
     ap.add_argument("--compare", metavar="A,B[,C]", default=None,
                     help="regression gate: 'flat,hierarchical' times both "
                          "exchanges on a single-node mesh and exits nonzero "
@@ -1356,7 +1629,10 @@ def main(argv=None) -> None:
                          "geomean and runs the autotune_drift acceptance; "
                          "'drop,retain' gates spill-and-retry at a 1.05x "
                          "happy-path geomean and runs the chaos_lossless "
-                         "acceptance")
+                         "acceptance; 'nockpt,ckpt' gates the checkpointed "
+                         "drive (W=8) at a 1.05x walltime geomean over the "
+                         "save-free segmented drive and runs the "
+                         "chaos_recovery acceptance")
     args = ap.parse_args(argv)
 
     global PROFILE
@@ -1364,7 +1640,7 @@ def main(argv=None) -> None:
     if args.autotune:
         args.only = "autotune_drift"
     if args.chaos:
-        args.only = "chaos_lossless"
+        args.only = "chaos"  # chaos_lossless + chaos_recovery
 
     print("name,us_per_call,derived")
     if args.compare:

@@ -22,28 +22,46 @@ The property gated by tests and ``benchmarks/run.py --chaos``: retain mode
 delivers EVERY emitted item (checksums match, drops stay zero) with
 ``age_max`` under the :func:`repro.roofline.analysis.spill_drain_model`
 bound, on undersized capacities where drop mode loses >20% of the traffic.
+
+ISSUE 7 widens the gauntlet to the recovery law: :func:`rank_brownout` /
+:func:`brownout_mask` (mid-burst draining), and the driver's
+:func:`run_scenario_checkpointed` (checkpoint every W rounds, simulated
+preemption, resume — optionally on a different mesh) with
+:func:`boundary_digests` as the bit-exactness witness.
 """
 from repro.chaos.scenarios import (
     Scenario,
     all_scenarios,
+    brownout_mask,
     burst_storm,
     capacity_drought,
     convergecast,
+    rank_brownout,
     rotating_hotspot,
 )
 from repro.chaos.oracle import expected_by_rank, simulate_flat_retain
-from repro.chaos.driver import ChaosItem, chaos_proto, run_scenario
+from repro.chaos.driver import (
+    ChaosItem,
+    boundary_digests,
+    chaos_proto,
+    run_scenario,
+    run_scenario_checkpointed,
+)
 
 __all__ = [
     "Scenario",
     "all_scenarios",
+    "brownout_mask",
     "burst_storm",
     "capacity_drought",
     "convergecast",
+    "rank_brownout",
     "rotating_hotspot",
     "expected_by_rank",
     "simulate_flat_retain",
     "ChaosItem",
+    "boundary_digests",
     "chaos_proto",
     "run_scenario",
+    "run_scenario_checkpointed",
 ]

@@ -10,25 +10,41 @@ schedule alone.  Items are never re-forwarded by the app: one emission, one
 delivery, so conservation (``emitted == delivered + resident + drops +
 lost`` with ``lost == 0``) is checkable in every overflow mode and the
 lossless law (``drops == 0`` too, in retain mode) is a pure array compare.
+
+ISSUE 7 adds :func:`run_scenario_checkpointed` — the same scenario driven
+through the segmented ``repro.core.recovery`` drive, with an optional
+simulated preemption (``preempt_at``), resume on the same or a DIFFERENT
+mesh (elastic restore), and a per-segment ``health`` mask (rank draining /
+brownout).  Because every checkpoint's manifest carries a SHA-256 per carry
+leaf, two runs of the same scenario can be proven bit-identical at every
+common boundary by comparing manifests alone — no tolerance, no sampling.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import ckpt
 from repro.chaos.scenarios import Scenario
 from repro.core import queue as Q
+from repro.core import recovery
 from repro.core import work_item
 from repro.core.context import RafiContext
 from repro.core.forwarding import flatten_axis_names
 from repro.telemetry import stats as TS
 
-__all__ = ["ChaosItem", "chaos_proto", "run_scenario"]
+__all__ = [
+    "ChaosItem",
+    "boundary_digests",
+    "chaos_proto",
+    "run_scenario",
+    "run_scenario_checkpointed",
+]
 
 
 @work_item
@@ -76,9 +92,8 @@ def _seed_queue(sc: Scenario, capacity: int):
     )
 
 
-def run_scenario(
+def _make_ctx(
     mesh: Mesh,
-    sc: Scenario,
     *,
     capacity: int,
     axis_name="data",
@@ -93,17 +108,11 @@ def run_scenario(
     level_capacities=(),
     telemetry: bool = True,
     max_rounds: int = 64,
-) -> Dict:
-    """Drive ``sc`` through the configured forwarding stack; return the
-    accounting dict (see module docstring for the conservation identity).
-
-    Keys: ``delivered`` (R, 3) uint32 checksums, ``delivered_total``,
-    ``emitted``, ``resident``, ``drops``, ``lost``, ``rounds``, ``done`` —
-    plus ``retained_rows`` / ``age_max`` (burst totals from the telemetry
-    ring) when ``telemetry`` is on.  ``telemetry_window`` is pinned to
-    ``max_rounds + 1`` so the ring records every forward of the burst (the
-    trajectory oracles compare against the full trace)."""
-    ctx = RafiContext(
+) -> RafiContext:
+    """The scenario context: ``telemetry_window`` pinned to ``max_rounds+1``
+    so the ring records EVERY forward of the burst (the trajectory oracles
+    compare against the full trace)."""
+    return RafiContext(
         mesh,
         chaos_proto(),
         axis_name=axis_name,
@@ -120,15 +129,18 @@ def run_scenario(
         telemetry_window=max_rounds + 1,
         overflow=overflow,
     )
-    R, C, E = sc.num_ranks, capacity, sc.emits_per_round
-    if ctx.num_ranks != R:
-        raise ValueError(
-            f"scenario is laid out for {R} ranks but the mesh axis has "
-            f"{ctx.num_ranks}"
-        )
-    dests_dev = jnp.asarray(sc.dests)  # (rounds, R, E) — closed over, static
 
-    axes = flatten_axis_names(axis_name)
+
+def _make_round_fn(ctx: RafiContext, sc: Scenario):
+    """Consume arrivals into the (cnt, Σuid, Σuid²) checksums; emit schedule
+    row ``rnd + 1``.  The emission law is pinned to the SCENARIO's rank
+    count, so a drain-phase resume on a smaller mesh (elastic restore) keeps
+    the same uid identities — past the schedule the mask kills emission and
+    the round_fn is a pure consumer on any mesh."""
+    R, E = sc.num_ranks, sc.emits_per_round
+    C = ctx.cfg.capacity
+    dests_dev = jnp.asarray(sc.dests)  # (rounds, R, E) — closed over, static
+    axes = flatten_axis_names(ctx.cfg.axis_name)
 
     def round_fn(q_in, aux, rnd):
         me = jax.lax.axis_index(axes)
@@ -140,11 +152,13 @@ def run_scenario(
         cnt = cnt + jnp.sum(valid).astype(jnp.uint32)
         s = s + jnp.sum(jnp.where(valid, u, z))
         s2 = s2 + jnp.sum(jnp.where(valid, u * u, z))
-        # body iteration rnd emits schedule row rnd + 1 (row 0 seeded q0)
+        # body iteration rnd emits schedule row rnd + 1 (row 0 seeded q0);
+        # ranks beyond the schedule (elastic resume) emit nothing
         er = rnd + 1
-        row = dests_dev[jnp.clip(er, 0, sc.rounds - 1), me]  # (E,)
-        mask = (er < sc.rounds) & (row >= 0)
-        uid = ((er * R + me) * E + jnp.arange(E)).astype(jnp.int32)
+        src = jnp.minimum(me, R - 1)
+        row = dests_dev[jnp.clip(er, 0, sc.rounds - 1), src]  # (E,)
+        mask = (er < sc.rounds) & (row >= 0) & (me < R)
+        uid = ((er * R + src) * E + jnp.arange(E)).astype(jnp.int32)
         out = Q.make_queue(chaos_proto(), C)
         out = Q.enqueue(
             out,
@@ -154,14 +168,15 @@ def run_scenario(
         )
         return out, (cnt, s, s2)
 
-    spec = ctx._spec
-    drive = ctx.run_until_done(
-        round_fn, aux_specs=(spec, spec, spec), max_rounds=max_rounds
-    )
-    aux0 = tuple(jnp.zeros((R,), jnp.uint32) for _ in range(3))
-    out = drive(_seed_queue(sc, C), aux0)
-    q, (cnt, s, s2), rounds, done = out[:4]
+    return round_fn
 
+
+def _aux0(num_ranks: int):
+    return tuple(jnp.zeros((num_ranks,), jnp.uint32) for _ in range(3))
+
+
+def _result_dict(sc: Scenario, q, aux, rounds, done, *, cfg=None, ring=None) -> Dict:
+    cnt, s, s2 = aux
     delivered = np.stack(
         [np.asarray(cnt), np.asarray(s), np.asarray(s2)], axis=-1
     ).astype(np.uint32)
@@ -178,10 +193,166 @@ def run_scenario(
     res["lost"] = (
         res["emitted"] - res["delivered_total"] - res["resident"] - res["drops"]
     )
-    if telemetry:
-        summary = TS.summarize(
-            out[4], tier_capacities=TS.tier_capacities(ctx.cfg)
-        )
+    if ring is not None:
+        summary = TS.summarize(ring, tier_capacities=TS.tier_capacities(cfg))
         res["retained_rows"] = summary["retained_rows"]
         res["age_max"] = summary["age_max"]
+        trace = TS.ring_trace(ring)
+        res["retained_trace"] = trace["retained_rows"]
+        res["age_trace"] = trace["age_max"]
+        res["recv_trace"] = trace["recv_total"]
     return res
+
+
+def run_scenario(
+    mesh: Mesh,
+    sc: Scenario,
+    *,
+    capacity: int,
+    health=None,
+    max_rounds: int = 64,
+    **cfg_kwargs,
+) -> Dict:
+    """Drive ``sc`` through the configured forwarding stack; return the
+    accounting dict (see module docstring for the conservation identity).
+
+    Keys: ``delivered`` (R, 3) uint32 checksums, ``delivered_total``,
+    ``emitted``, ``resident``, ``drops``, ``lost``, ``rounds``, ``done`` —
+    plus, with telemetry, burst totals ``retained_rows`` / ``age_max`` and
+    the per-round ``retained_trace`` / ``age_trace`` / ``recv_trace``
+    chronologies from the full-window ring.  ``health`` (optional ``(R,)``
+    bool mask, constant for the burst) re-addresses traffic away from
+    unhealthy ranks."""
+    ctx = _make_ctx(mesh, capacity=capacity, max_rounds=max_rounds, **cfg_kwargs)
+    R = sc.num_ranks
+    if ctx.num_ranks != R:
+        raise ValueError(
+            f"scenario is laid out for {R} ranks but the mesh axis has "
+            f"{ctx.num_ranks}"
+        )
+    cfg = ctx.cfg
+    retain = cfg.overflow == "retain"
+    spec = ctx._spec
+    drive = ctx.run_until_done(
+        _make_round_fn(ctx, sc),
+        aux_specs=(spec, spec, spec),
+        max_rounds=max_rounds,
+        with_health=health is not None,
+    )
+    args = (_seed_queue(sc, cfg.capacity), _aux0(R))
+    if health is not None:
+        args = args + (jnp.asarray(np.asarray(health).astype(bool)),)
+    out = drive(*args)
+    q, aux, rounds, done = out[:4]
+    rest = out[4:]
+    if retain:
+        rest = rest[1:]  # final per-lane ages — accounted via the ring here
+    ring = rest[0] if cfg.telemetry else None
+    return _result_dict(sc, q, aux, rounds, done, cfg=cfg, ring=ring)
+
+
+def run_scenario_checkpointed(
+    mesh: Mesh,
+    sc: Scenario,
+    *,
+    capacity: int,
+    ckpt_dir,
+    checkpoint_every: int = 4,
+    preempt_at: Optional[int] = None,
+    resume_mesh: Optional[Mesh] = None,
+    resume_capacity: Optional[int] = None,
+    health=None,
+    keep: int = 64,
+    max_rounds: int = 64,
+    **cfg_kwargs,
+) -> Dict:
+    """Drive ``sc`` through the checkpointed recovery drive.
+
+    * ``preempt_at=None`` — uninterrupted checkpointed run (the reference
+      trajectory; boundaries land on disk every ``checkpoint_every``
+      rounds).
+    * ``preempt_at=k`` — the drive halts at the last boundary not past
+      round ``k`` (simulated preemption), then ``resume_run`` continues it
+      from disk — on ``resume_mesh`` / ``resume_capacity`` if given (the
+      elastic R → R′ path; the scenario must be in its drain phase by the
+      preempt boundary, i.e. all emission rounds complete, since retired
+      ranks cannot replay their scheduled emissions).
+    * ``health`` — mask or host callable ``rnd → mask``, re-read each
+      segment boundary (rank brownout mid-burst).
+
+    Returns the :func:`run_scenario` accounting dict plus ``steps`` (the
+    published boundary rounds), ``preempted`` and ``ckpt_dir``.
+    """
+    ctx = _make_ctx(mesh, capacity=capacity, max_rounds=max_rounds, **cfg_kwargs)
+    if ctx.num_ranks != sc.num_ranks:
+        raise ValueError(
+            f"scenario is laid out for {sc.num_ranks} ranks but the mesh "
+            f"axis has {ctx.num_ranks}"
+        )
+    spec = ctx._spec
+    res = recovery.run_checkpointed(
+        ctx,
+        _make_round_fn(ctx, sc),
+        _seed_queue(sc, ctx.cfg.capacity),
+        _aux0(ctx.num_ranks),
+        aux_specs=(spec, spec, spec),
+        ckpt_dir=ckpt_dir,
+        checkpoint_every=checkpoint_every,
+        max_rounds=max_rounds,
+        health=health,
+        keep=keep,
+        halt_after_round=preempt_at,
+    )
+    preempted = res is None
+    if preempted:
+        rmesh = resume_mesh if resume_mesh is not None else mesh
+        rcap = resume_capacity if resume_capacity is not None else capacity
+        ctx = _make_ctx(rmesh, capacity=rcap, max_rounds=max_rounds, **cfg_kwargs)
+        spec = ctx._spec
+        res = recovery.resume_run(
+            ctx,
+            _make_round_fn(ctx, sc),
+            ckpt_dir,
+            aux_specs=(spec, spec, spec),
+            aux_like=tuple(np.zeros((ctx.num_ranks,), np.uint32) for _ in range(3)),
+            checkpoint_every=checkpoint_every,
+            max_rounds=max_rounds,
+            health=health,
+            keep=keep,
+        )
+        assert res is not None  # resume passes no halt_after_round
+    out = _result_dict(
+        sc, res["q"], res["aux"], res["rounds"], res["done"],
+        cfg=ctx.cfg, ring=res.get("ring"),
+    )
+    steps = []
+    if ckpt_dir is not None and ckpt.latest_step(ckpt_dir) is not None:
+        from pathlib import Path
+
+        steps = sorted(
+            int(p.name.split("_")[1])
+            for p in Path(ckpt_dir).iterdir()
+            if p.name.startswith("step_") and not p.name.endswith(".tmp")
+        )
+    out["steps"] = steps
+    out["preempted"] = preempted
+    out["ckpt_dir"] = ckpt_dir
+    return out
+
+
+def boundary_digests(ckpt_dir) -> Dict[int, tuple]:
+    """``{boundary round: (sha256, …) of every carry leaf}`` for each
+    published checkpoint — the bit-exactness witness: two drives whose
+    digests agree at a boundary held IDENTICAL forwarding state there
+    (queue payloads, dests, ages, checksums, ring, counters — everything the
+    trajectory depends on)."""
+    from pathlib import Path
+
+    out = {}
+    for p in sorted(Path(ckpt_dir).iterdir()):
+        if not p.name.startswith("step_") or p.name.endswith(".tmp"):
+            continue
+        step = int(p.name.split("_")[1])
+        man = ckpt.load_manifest(ckpt_dir, step)
+        out[step] = tuple(e["sha256"] for e in man["leaves"])
+    return out

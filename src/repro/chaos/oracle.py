@@ -59,8 +59,29 @@ def _emit_rows(sc: Scenario, rnd: int) -> List[List[List[int]]]:
     return rows
 
 
+def _health_table_np(h: np.ndarray) -> np.ndarray:
+    """Numpy mirror of ``repro.core.health.health_table`` — ONE remap law,
+    verified twice (any divergence here fails the brownout trajectory
+    tests, not just an end-state checksum)."""
+    h = np.asarray(h, bool)
+    R = h.shape[0]
+    table = np.arange(R)
+    healthy = np.nonzero(h)[0]
+    if healthy.size == 0:
+        return table
+    for d in range(R):
+        if not h[d]:
+            table[d] = healthy[d % healthy.size]
+    return table
+
+
 def simulate_flat_retain(
-    sc: Scenario, *, peer_capacity: int, capacity: int, max_rounds: int = 64
+    sc: Scenario,
+    *,
+    peer_capacity: int,
+    capacity: int,
+    max_rounds: int = 64,
+    health=None,
 ) -> Dict:
     """Exact numpy twin of ``run_until_done`` over a flat padded exchange
     with ``overflow="retain"`` — same event order the device executes:
@@ -76,6 +97,14 @@ def simulate_flat_retain(
     admits them behind the retained front up to ``capacity`` (excess is a
     counted receiver drop — sized away in the lossless gate).
 
+    ``health`` mirrors the device's rank-draining remap: ``None``, a
+    constant ``(R,) bool`` mask, or a callable ``forward_idx -> mask``
+    (forward 0 is the seed routing; forward ``f >= 1`` is body round
+    ``f - 1``'s).  At every forward the CURRENT mask's
+    :func:`_health_table_np` rewrite is applied to each row's destination
+    and sticks (retained rows carry the remapped dest onward — exactly what
+    ``forward_work`` does to the queue's dest vector).
+
     Returns the final delivered checksums plus the per-forward
     ``retained_rows`` / ``age_max`` trajectories the device telemetry must
     reproduce."""
@@ -84,12 +113,25 @@ def simulate_flat_retain(
     drops = 0
     retained_trace: List[int] = []
     age_trace: List[int] = []
+    fwd_idx = [0]
+
+    def _mask_at(f: int):
+        if health is None:
+            return None
+        return np.asarray(health(f) if callable(health) else health, bool)
 
     def forward(state):
         """state: per-rank [uid, dest, age] rows (retained front + fresh).
         Returns per-rank (retained_rows, arrival_uids) and the global
         in-flight total after the exchange."""
         nonlocal drops
+        h = _mask_at(fwd_idx[0])
+        fwd_idx[0] += 1
+        if h is not None:
+            table = _health_table_np(h)
+            for rows in state:
+                for row in rows:
+                    row[1] = int(table[row[1]])
         shipped = [[[] for _ in range(R)] for _ in range(R)]  # [src][dst]
         retained = []
         for src in range(R):

@@ -39,6 +39,8 @@ __all__ = [
     "rotating_hotspot",
     "burst_storm",
     "convergecast",
+    "rank_brownout",
+    "brownout_mask",
     "all_scenarios",
 ]
 
@@ -160,6 +162,48 @@ def convergecast(
     del seed  # fully deterministic; kept for a uniform generator signature
     d = np.zeros((rounds, num_ranks, emits_per_round), np.int32)
     return Scenario("convergecast", num_ranks, rounds, emits_per_round, d)
+
+
+def rank_brownout(
+    num_ranks: int = 8,
+    rounds: int = 8,
+    emits_per_round: int = 8,
+    seed: int = 4,
+) -> Scenario:
+    """Uniform ~80% duty-cycle traffic that keeps addressing EVERY rank for
+    the whole schedule — run it with a ``health`` mask that browns out ranks
+    mid-burst (see :func:`brownout_mask`) and the pressure is entirely on
+    the ISSUE 7 draining remap: emissions and retained backlog aimed at the
+    dark ranks must be re-addressed without losing a row."""
+    rng = np.random.default_rng(seed)
+    shape = (rounds, num_ranks, emits_per_round)
+    d = rng.integers(0, num_ranks, size=shape)
+    mask = rng.random(shape) < 0.8
+    d = np.where(mask, d, -1).astype(np.int32)
+    return Scenario(
+        "rank_brownout", num_ranks, rounds, emits_per_round, _heartbeat(d)
+    )
+
+
+def brownout_mask(num_ranks: int, down=(2, 5), down_from: int = 3):
+    """Host health schedule for a brownout: every rank healthy until round
+    ``down_from``, then the ``down`` ranks go dark for good.  Returns a
+    callable ``rnd -> (R,) bool`` in the form ``run_checkpointed`` /
+    ``resume_run`` re-evaluate at every segment boundary."""
+    down = tuple(int(r) for r in down)
+    for r in down:
+        if not 0 <= r < num_ranks:
+            raise ValueError(f"brownout rank {r} outside [0, {num_ranks})")
+    if len(down) >= num_ranks:
+        raise ValueError("a brownout must leave at least one healthy rank")
+
+    def health(rnd: int) -> np.ndarray:
+        h = np.ones((num_ranks,), bool)
+        if rnd >= down_from:
+            h[list(down)] = False
+        return h
+
+    return health
 
 
 def all_scenarios(num_ranks: int = 8, seed: int = 0):

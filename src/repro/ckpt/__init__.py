@@ -1,5 +1,6 @@
 from repro.ckpt.checkpoint import (  # noqa: F401
     latest_step,
+    load_manifest,
     restore_checkpoint,
     save_checkpoint,
 )

@@ -5,22 +5,30 @@
   crash mid-write can never leave a half checkpoint that restore would read.
 * **Integrity**: the manifest stores a SHA-256 per tensor file; restore
   verifies before deserializing (detects bit-rot / truncation — at 1000+
-  nodes storage corruption is a when, not an if).
+  nodes storage corruption is a when, not an if).  Structure / shape / dtype
+  mismatches between the checkpoint and the restore target raise
+  ``ValueError`` (never ``assert`` — asserts vanish under ``python -O`` and
+  would turn a checkpoint/model mismatch into silent corruption).
 * **Elastic**: tensors are saved in their *logical* (unsharded) layout, so
   restore can land them on ANY mesh — restart with a different pod count or
   (data, model) factorization just passes different shardings.  (At real
   scale this becomes per-shard files + resharding on read; the logical-layout
-  contract is what matters and is what the elastic test exercises.)
-* **Retention**: keep the latest k checkpoints, delete older ones.
+  contract is what matters and is what the elastic tests exercise — see
+  ``repro.core.recovery`` for the forwarding drive's R → R′ restore.)
+* **Retention**: keep the latest k checkpoints, delete older ones — and
+  sweep any orphaned ``step_*.tmp`` dirs a crash mid-write left behind
+  (they are dead by construction: a tmp dir either renamed at publish or
+  its writer died; without the sweep they accumulate forever).
 """
 from __future__ import annotations
 
 import hashlib
+import io
 import json
 import os
 import shutil
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
@@ -35,7 +43,16 @@ def _hash(b: bytes) -> str:
     return hashlib.sha256(b).hexdigest()
 
 
-def save_checkpoint(ckpt_dir, step: int, tree: Any, *, keep: int = 3) -> Path:
+def save_checkpoint(
+    ckpt_dir, step: int, tree: Any, *, keep: int = 3, meta: Optional[Dict] = None
+) -> Path:
+    """Atomically publish ``tree`` as ``step_<step>/`` under ``ckpt_dir``.
+
+    ``meta`` (optional, JSON-serializable) is embedded in the manifest and
+    readable WITHOUT knowing the tree structure via :func:`load_manifest` —
+    the hook resume tooling uses to learn the saved run's shape (rank count,
+    round counter, …) before it can build a restore target.
+    """
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     tmp = ckpt_dir / f"step_{step:08d}.tmp"
@@ -46,11 +63,19 @@ def save_checkpoint(ckpt_dir, step: int, tree: Any, *, keep: int = 3) -> Path:
 
     leaves, treedef = _flatten(tree)
     manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+    if meta is not None:
+        manifest["meta"] = meta
     for i, leaf in enumerate(leaves):
         arr = np.asarray(leaf)
         path = tmp / f"leaf_{i:05d}.npy"
+        # serialize once and hash the exact bytes written — the save sits on
+        # the drive loop's boundary path now, and a read-back per leaf just
+        # to digest it doubles the file traffic for the same manifest entry
+        buf = io.BytesIO()
+        np.save(buf, arr)
+        raw = buf.getvalue()
         with open(path, "wb") as f:
-            np.save(f, arr)
+            f.write(raw)
             f.flush()
             os.fsync(f.fileno())
         manifest["leaves"].append(
@@ -58,7 +83,7 @@ def save_checkpoint(ckpt_dir, step: int, tree: Any, *, keep: int = 3) -> Path:
                 "file": path.name,
                 "shape": list(arr.shape),
                 "dtype": str(arr.dtype),
-                "sha256": _hash(path.read_bytes()),
+                "sha256": _hash(raw),
             }
         )
     mpath = tmp / "manifest.json"
@@ -70,10 +95,18 @@ def save_checkpoint(ckpt_dir, step: int, tree: Any, *, keep: int = 3) -> Path:
         shutil.rmtree(final)
     tmp.rename(final)  # atomic publish
 
-    # retention
-    ckpts = sorted(p for p in ckpt_dir.iterdir() if p.name.startswith("step_") and not p.name.endswith(".tmp"))
+    # retention: published checkpoints beyond the newest `keep` go, and so
+    # does every orphaned step_*.tmp left by a crash mid-write (ours was just
+    # renamed away, so any tmp dir still present has no live writer)
+    ckpts = sorted(
+        p
+        for p in ckpt_dir.iterdir()
+        if p.name.startswith("step_") and not p.name.endswith(".tmp")
+    )
     for old in ckpts[:-keep]:
         shutil.rmtree(old)
+    for orphan in ckpt_dir.glob("step_*.tmp"):
+        shutil.rmtree(orphan)
     return final
 
 
@@ -89,22 +122,50 @@ def latest_step(ckpt_dir) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def load_manifest(ckpt_dir, step: int) -> Dict:
+    """The manifest of a published checkpoint (structure-free: shapes,
+    dtypes, hashes, and the saver's ``meta`` — everything resume tooling
+    needs before it can construct a ``like`` tree)."""
+    final = Path(ckpt_dir) / f"step_{step:08d}"
+    mpath = final / "manifest.json"
+    if not mpath.exists():
+        raise FileNotFoundError(f"no published checkpoint at {final}")
+    return json.loads(mpath.read_text())
+
+
 def restore_checkpoint(ckpt_dir, step: int, like: Any, *, shardings: Any = None) -> Any:
     """Restore into the structure of ``like``; optionally device_put with
-    ``shardings`` (a pytree of NamedShardings — the elastic-rescale path)."""
+    ``shardings`` (a pytree of NamedShardings — the elastic-rescale path).
+
+    Raises ``ValueError`` on checkpoint/target structure, shape, or dtype
+    mismatch and ``IOError`` on integrity (SHA-256) failure.
+    """
     final = Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((final / "manifest.json").read_text())
     leaves_like, treedef = _flatten(like)
-    assert len(manifest["leaves"]) == len(leaves_like), "checkpoint/model mismatch"
+    if len(manifest["leaves"]) != len(leaves_like):
+        raise ValueError(
+            f"checkpoint/model mismatch: checkpoint has "
+            f"{len(manifest['leaves'])} leaves, restore target has "
+            f"{len(leaves_like)}"
+        )
     out = []
     for i, (entry, ref) in enumerate(zip(manifest["leaves"], leaves_like)):
         raw = (final / entry["file"]).read_bytes()
         if _hash(raw) != entry["sha256"]:
             raise IOError(f"checkpoint corruption in {entry['file']}")
         arr = np.load(final / entry["file"])
-        assert list(arr.shape) == list(ref.shape), (
-            f"leaf {i}: shape {arr.shape} != expected {ref.shape}"
-        )
+        ref_shape = list(np.shape(ref))
+        if list(arr.shape) != ref_shape:
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {list(arr.shape)} != expected "
+                f"{ref_shape}"
+            )
+        ref_dtype = np.asarray(ref).dtype if not hasattr(ref, "dtype") else ref.dtype
+        if np.dtype(arr.dtype) != np.dtype(ref_dtype):
+            raise ValueError(
+                f"leaf {i}: checkpoint dtype {arr.dtype} != expected {ref_dtype}"
+            )
         out.append(arr)
     tree = jax.tree.unflatten(treedef, out)
     if shardings is not None:

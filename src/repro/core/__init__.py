@@ -9,12 +9,17 @@ Host context:
   RafiContext (mesh plumbing), ForwardConfig, forward_work (inside shard_map),
   run_until_done (on-device drive loop), rebalance (beyond-paper).
 
+Recovery (ISSUE 7): run_checkpointed / resume_run (segmented drive with
+  atomic checkpoints, elastic restore, conservation watchdog),
+  health_table / remap_dest (rank-draining destination remap).
+
 Item typing:
   work_item (dataclass registry), item_nbytes.
 """
 from repro.core.context import RafiContext
 from repro.core.cycling import cycle_step, deliver_by_cycling
 from repro.core.forwarding import ForwardConfig, forward_work
+from repro.core.health import health_table, remap_dest
 from repro.core.queue import (
     DISCARD,
     WorkQueue,
@@ -25,6 +30,7 @@ from repro.core.queue import (
     num_incoming,
 )
 from repro.core.rebalance import rebalance
+from repro.core.recovery import conservation_check, resume_run, run_checkpointed
 from repro.core.termination import run_until_done
 from repro.core.types import (
     PackSpec,
@@ -45,9 +51,11 @@ __all__ = [
     "WorkQueue",
     "batched_zeros",
     "clear",
+    "conservation_check",
     "enqueue",
     "forward_work",
     "get_incoming",
+    "health_table",
     "item_nbytes",
     "item_spec",
     "make_queue",
@@ -55,6 +63,9 @@ __all__ = [
     "pack_payload",
     "pack_spec",
     "rebalance",
+    "remap_dest",
+    "resume_run",
+    "run_checkpointed",
     "run_until_done",
     "unpack_payload",
     "work_item",

@@ -177,42 +177,129 @@ class RafiContext:
         *,
         aux_specs: Any,
         max_rounds: int = 64,
+        with_health: bool = False,
     ) -> Callable:
         """Jitted global driver: ``(q0_stacked, aux0) -> (q, aux, rounds,
-        done)``.  ``done`` is True when the drive terminated cleanly (global
-        in-flight count hit zero), False when ``max_rounds`` truncated it
-        with work still in flight.
+        done, …)``.  ``done`` is True when the drive terminated cleanly
+        (global in-flight count hit zero), False when ``max_rounds``
+        truncated it with work still in flight.
 
         ``round_fn(in_queue, aux, round_idx) -> (out_queue, aux)`` is per-rank
         traced code using the device interface (enqueue/get_incoming).
 
-        With ``telemetry`` on the context, the driver also returns the
-        rank-stacked ``telemetry.StatsRing`` of the burst's last
-        ``telemetry_window`` rounds (leaves ``(R, window, …)`` on the host) —
-        feed it to ``telemetry.summarize`` / ``tune.plan_capacities``.
+        With ``overflow="retain"`` on the context, the final per-lane ``age``
+        vector (sharded ``(R·C,)``) follows ``done`` — on a truncated run
+        these are the live rounds-waiting counters of the still-queued rows,
+        so a continuation preserves the FIFO anti-starvation clock.  With
+        ``telemetry`` on the context, the rank-stacked ``telemetry.StatsRing``
+        of the burst's last ``telemetry_window`` rounds is the last output
+        (leaves ``(R, window, …)`` on the host) — feed it to
+        ``telemetry.summarize`` / ``tune.plan_capacities``.
+
+        ``with_health=True`` makes the returned callable accept a third
+        argument: a replicated ``(R,) bool`` rank-health mask re-addressing
+        traffic away from unhealthy ranks (see ``repro.core.health``).
+        """
+        cfg = self.cfg
+        retain = cfg.overflow == "retain"
+
+        def drive(q0_stacked, aux0, health=None):
+            q0 = _unstack_queue(q0_stacked)
+            out = term.run_until_done(
+                round_fn, q0, aux0, cfg, max_rounds=max_rounds, health=health
+            )
+            q, aux, rounds, done = out[:4]
+            rest = out[4:]
+            packed = (_stack_queue(q), aux, rounds, done)
+            if retain:
+                packed = packed + (rest[0],)
+                rest = rest[1:]
+            if cfg.telemetry:
+                packed = packed + (TS.stack_ring(rest[0]),)
+            return packed
+
+        out_specs = (self._queue_out_specs(), aux_specs, P(), P())
+        if retain:
+            out_specs = out_specs + (self._spec,)
+        if cfg.telemetry:
+            out_specs = out_specs + (self._ring_specs(),)
+        in_specs = (self._queue_out_specs(), aux_specs)
+        if with_health:
+            in_specs = in_specs + (P(),)
+            return self.shard(drive, in_specs=in_specs, out_specs=out_specs)
+        return self.shard(
+            lambda q0s, aux0: drive(q0s, aux0),
+            in_specs=in_specs,
+            out_specs=out_specs,
+        )
+
+    # -- segmented (checkpointable) drive ------------------------------------
+    def carry_specs(self, aux_specs: Any, *, accounting: bool = True):
+        """PartitionSpecs of the *stacked* drive-loop carry dict (see
+        ``termination.drive_start``): per-rank leaves sharded over the
+        context axis, ``total``/``rnd`` replicated."""
+        cfg = self.cfg
+        specs = {
+            "q": self._queue_out_specs(),
+            "aux": aux_specs,
+            "total": P(),
+            "rnd": P(),
+            "drops": self._spec,
+        }
+        if cfg.overflow == "retain":
+            specs["age"] = self._spec
+        if cfg.telemetry:
+            specs["ring"] = self._ring_specs()
+        if accounting:
+            specs["emitted"] = self._spec
+            specs["delivered"] = self._spec
+        return specs
+
+    def checkpoint_drive_programs(
+        self, round_fn: Callable, *, aux_specs: Any, accounting: bool = True
+    ) -> Tuple[Callable, Callable]:
+        """The segmented drive as TWO jitted programs (the recovery law's
+        device side — ``repro.core.recovery`` owns the host loop):
+
+          ``start(q0_stacked, aux0, health) -> carry``   (initial forward)
+          ``segment(carry, seg_end, health) -> carry``   (rounds until
+                                                          ``rnd == seg_end``
+                                                          or termination)
+
+        The carry is the stacked ``termination`` dict carry — a plain pytree
+        the host can snapshot with ``repro.ckpt`` between segments.
+        ``seg_end`` and ``health`` are *traced* (replicated) arguments, so
+        every segment of every length reuses one compiled program and the
+        segmented trajectory is bit-identical to ``run_until_done``'s.  With
+        ``accounting`` the carry grows the ``emitted``/``delivered`` counters
+        the recovery watchdog closes at each boundary.
         """
         cfg = self.cfg
 
-        def drive(q0_stacked, aux0):
-            q0 = _unstack_queue(q0_stacked)
-            if cfg.telemetry:
-                q, aux, rounds, done, ring = term.run_until_done(
-                    round_fn, q0, aux0, cfg, max_rounds=max_rounds
-                )
-                return _stack_queue(q), aux, rounds, done, TS.stack_ring(ring)
-            q, aux, rounds, done = term.run_until_done(
-                round_fn, q0, aux0, cfg, max_rounds=max_rounds
+        def start(q0_stacked, aux0, health):
+            carry = term.drive_start(
+                _unstack_queue(q0_stacked), aux0, cfg,
+                health=health, accounting=accounting,
             )
-            return _stack_queue(q), aux, rounds, done
+            return _stack_carry(carry)
 
-        out_specs = (self._queue_out_specs(), aux_specs, P(), P())
-        if cfg.telemetry:
-            out_specs = out_specs + (self._ring_specs(),)
-        return self.shard(
-            drive,
-            in_specs=(self._queue_out_specs(), aux_specs),
-            out_specs=out_specs,
+        def segment(carry_stacked, seg_end, health):
+            carry = term.drive_segment(
+                round_fn, _unstack_carry(carry_stacked), cfg,
+                seg_end=seg_end, health=health,
+            )
+            return _stack_carry(carry)
+
+        cspecs = self.carry_specs(aux_specs, accounting=accounting)
+        start_p = self.shard(
+            start,
+            in_specs=(self._queue_out_specs(), aux_specs, P()),
+            out_specs=cspecs,
         )
+        segment_p = self.shard(
+            segment, in_specs=(cspecs, P(), P()), out_specs=cspecs
+        )
+        return start_p, segment_p
 
     def _queue_out_specs(self):
         return Q.WorkQueue(
@@ -249,3 +336,31 @@ def _unstack_queue(q: Q.WorkQueue) -> Q.WorkQueue:
     return Q.WorkQueue(
         items=q.items, dest=q.dest, count=q.count[0], drops=q.drops[0]
     )
+
+
+def _stack_carry(carry: dict) -> dict:
+    """Per-rank drive carry -> globally concatenable form: per-rank scalars
+    become (1,) (so the stacked leaf is (R,)), the ring gains a leading rank
+    dim; ``total``/``rnd`` stay replicated scalars; ``age`` is already a
+    per-lane vector."""
+    out = dict(carry)
+    out["q"] = _stack_queue(carry["q"])
+    out["drops"] = carry["drops"][None]
+    if "ring" in carry:
+        out["ring"] = TS.stack_ring(carry["ring"])
+    if "emitted" in carry:
+        out["emitted"] = carry["emitted"][None]
+        out["delivered"] = carry["delivered"][None]
+    return out
+
+
+def _unstack_carry(carry: dict) -> dict:
+    out = dict(carry)
+    out["q"] = _unstack_queue(carry["q"])
+    out["drops"] = carry["drops"][0]
+    if "ring" in carry:
+        out["ring"] = jax.tree.map(lambda a: a[0], carry["ring"])
+    if "emitted" in carry:
+        out["emitted"] = carry["emitted"][0]
+        out["delivered"] = carry["delivered"][0]
+    return out

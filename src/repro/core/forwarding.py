@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from repro.core import exchange as X
 from repro.core import sorting as S
 from repro.core import types as T
+from repro.core.health import remap_dest
 from repro.core.queue import DISCARD, WorkQueue
 
 __all__ = ["ForwardConfig", "flatten_axis_names", "forward_work"]
@@ -298,7 +299,7 @@ class ForwardConfig:
         object.__setattr__(self, "node_capacity", caps[0])
 
 
-def forward_work(q: WorkQueue, cfg: ForwardConfig, *, age=None):
+def forward_work(q: WorkQueue, cfg: ForwardConfig, *, age=None, health=None):
     """One collective forwarding round. Must run inside ``shard_map``.
 
     Returns ``(new_queue, total_in_flight)`` where ``total_in_flight`` is the
@@ -317,9 +318,19 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig, *, age=None):
     ``age=`` on the next call; ``None`` means all lanes are fresh).  Arrivals
     that don't fit next to the retained rows are the one remaining loss site
     — counted into ``drops``.
+
+    ``health`` (optional ``(R,) bool``, replicated) drains sick ranks: every
+    destination on an unhealthy rank is re-addressed pre-marshal through the
+    pure local ``core.health.remap_dest`` law, so unhealthy ranks receive
+    nothing while the collective inventory stays bit-identical to the plain
+    round (retained rows keep the REMAPPED destination — once re-addressed,
+    a row stays re-addressed).  ``None`` and an all-healthy mask are
+    bit-identical.
     """
     R = cfg.num_ranks
     retain = cfg.overflow == "retain"
+    if health is not None:
+        q = dataclasses.replace(q, dest=remap_dest(q.dest, health))
     perm = dest_clean = dest_rank = None
     if cfg.marshal == "scatter":
         # Sort-free bucket plan: ONE counting-sort pass over the (cheap,

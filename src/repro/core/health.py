@@ -1,0 +1,73 @@
+"""Rank-health remap law — the draining half of the recovery law (ISSUE 7).
+
+A ``health: (R,) bool`` mask marks ranks that should stop RECEIVING work
+(draining before a maintenance window, browned-out, about to be preempted).
+The contract is a **pure local destination remap** applied pre-marshal:
+
+  * a destination on a healthy rank is untouched;
+  * a destination on an unhealthy rank ``d`` is rewritten to the fixed
+    fallback ``healthy[d % n_healthy]`` where ``healthy`` is the ascending
+    list of healthy ranks — deterministic, replicated arithmetic on the
+    (R,) mask, so every rank computes the identical table and the routed
+    traffic stays consistent without ANY coordination;
+  * ``DISCARD`` lanes (and anything negative) pass through untouched.
+
+Because the remap is (C,)-vector integer math on values the marshal already
+reads, it adds ZERO collectives and ZERO payload passes: the lowered
+collective inventory of a health-masked round is bit-identical to the plain
+round (guarded in ``tests/test_collective_budget.py``).  With every rank
+healthy the table is the identity, so ``health=None`` and an all-True mask
+produce bit-identical results.
+
+Degenerate case: an all-unhealthy mask has no fallback to route to — the
+table falls back to the identity (traffic flows as addressed).  Draining the
+whole mesh is a shutdown, not a remap; callers that mean "stop everything"
+should stop driving rounds instead.
+
+The same law is applied host-side by the chaos oracle's numpy twin
+(``repro.chaos.oracle``) — one definition, verified twice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["health_table", "remap_dest"]
+
+
+def health_table(health: jax.Array) -> jax.Array:
+    """``(R,) int32`` destination-rewrite table for a ``(R,) bool`` mask.
+
+    ``table[d] == d`` for healthy ``d``; ``table[d] == healthy[d % n_h]``
+    for unhealthy ``d`` (identity when no rank is healthy).  Pure replicated
+    arithmetic — no collectives, no data-dependent shapes.
+    """
+    h = health.astype(bool)
+    R = h.shape[0]
+    rank = jnp.arange(R, dtype=jnp.int32)
+    n_h = jnp.sum(h.astype(jnp.int32))
+    # ascending healthy ranks, scatter-built (traced nonzero has no static
+    # shape): healthy rank r lands at its slot cumsum(h)[r]-1, unhealthy
+    # ranks aim past the end and are dropped
+    slot = jnp.where(h, jnp.cumsum(h.astype(jnp.int32)) - 1, R)
+    healthy = (
+        jnp.zeros((R,), jnp.int32).at[slot].set(rank, mode="drop")
+    )
+    fallback = healthy[rank % jnp.maximum(n_h, 1)]
+    table = jnp.where(h, rank, fallback)
+    return jnp.where(n_h > 0, table, rank).astype(jnp.int32)
+
+
+def remap_dest(dest: jax.Array, health: jax.Array) -> jax.Array:
+    """Re-address a destination vector through :func:`health_table`.
+
+    ``dest`` entries in ``[0, R)`` are rewritten; negative entries
+    (``DISCARD`` lanes) pass through.  Entries beyond the queue's valid
+    ``count`` may hold junk — they are clamped for the table lookup and the
+    marshal's own count-based sanitization ignores them, exactly as it does
+    without the remap.
+    """
+    table = health_table(health)
+    R = table.shape[0]
+    looked = table[jnp.clip(dest, 0, R - 1)]
+    return jnp.where(dest >= 0, looked, dest).astype(jnp.int32)

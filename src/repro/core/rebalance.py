@@ -179,7 +179,7 @@ def _intra_config(cfg: ForwardConfig) -> ForwardConfig:
 
 
 def rebalance(
-    q: WorkQueue, cfg: ForwardConfig, *, scope: str = "global"
+    q: WorkQueue, cfg: ForwardConfig, *, scope: str = "global", health=None
 ):
     """One balanced redistribution round.  Must run inside ``shard_map``.
 
@@ -207,8 +207,24 @@ def rebalance(
         round ships zero payload bytes over any slower fabric.  In-group
         pending items are delivered; cross-group pending items sit the round
         out and keep their destination (see the module docstring).
+
+    ``health`` (global scope only): a replicated ``(R,) bool`` rank mask —
+    the plan's destinations AND the ride-along pending destinations are
+    re-addressed away from unhealthy ranks via the ``core.health`` remap,
+    which is how resident work EVACUATES a draining rank: mark it unhealthy,
+    run one health-aware global rebalance, and its queue empties onto the
+    survivors while nothing new is routed to it (the ISSUE 7 drain recipe).
+    Note the unhealthy rank still participates in the collective (the mesh
+    is intact — it is draining, not dead), so the lowered inventory is
+    unchanged.
     """
     resident, idx, n_res = _resident_positions(q)
+    if health is not None and scope != "global":
+        raise ValueError(
+            "health-aware rebalance is global-scope only: an intra round's "
+            "rank space is the fast-axis group, where a global health mask "
+            "has no meaning"
+        )
 
     if scope == "intra":
         if cfg.exchange != "hierarchical":
@@ -269,4 +285,4 @@ def rebalance(
         new_dest = jnp.minimum((start + idx) // target, cfg.num_ranks - 1)
     new_dest = jnp.where(resident, new_dest, q.dest).astype(jnp.int32)
     q = dataclasses.replace(q, dest=new_dest)
-    return forward_work(q, cfg)
+    return forward_work(q, cfg, health=health)

@@ -18,10 +18,19 @@ termination ``psum`` counts retained rows by construction (they sit in the
 queue ``count``), so the loop cannot exit with work still spilled; and since
 every nonempty destination ships at least one row per round (every clamp
 budget is ≥ 1), the backlog drains in bounded rounds — no livelock.
+
+Segmentation (ISSUE 7, the recovery law): the loop is factored into
+``drive_start`` (the initial routing forward → carry) + ``drive_segment``
+(run body rounds while ``rnd < seg_end``) + ``drive_finalize`` (carry →
+results), with the carry an explicit dict pytree.  ``run_until_done`` is
+exactly start + one full-length segment + finalize; the checkpoint/resume
+host drive (``repro.core.recovery``) runs W-round segments instead,
+snapshotting the carry between them — same traced body, so an uninterrupted
+run and a segmented run execute bit-identical programs round for round.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +40,7 @@ from repro.core.forwarding import ForwardConfig, flatten_axis_names, forward_wor
 from repro.core.queue import DISCARD, WorkQueue
 from repro.telemetry import stats as TS
 
-__all__ = ["run_until_done"]
+__all__ = ["drive_finalize", "drive_segment", "drive_start", "run_until_done"]
 
 
 def _vary(tree: Any, axis_name) -> Any:
@@ -116,6 +125,155 @@ def _merge_retained(
     return merged, age_in
 
 
+def _fwd(q, age, cfg, health):
+    """Uniform forward_work unpack: ``(new_q, total, age_out, stats)`` with
+    Nones where the config doesn't produce the value."""
+    retain = cfg.overflow == "retain"
+    if retain and cfg.telemetry:
+        new_q, total, age_out, stats = forward_work(q, cfg, age=age, health=health)
+    elif retain:
+        new_q, total, age_out = forward_work(q, cfg, age=age, health=health)
+        stats = None
+    elif cfg.telemetry:
+        new_q, total, stats = forward_work(q, cfg, health=health)
+        age_out = None
+    else:
+        new_q, total = forward_work(q, cfg, health=health)
+        age_out = stats = None
+    return new_q, total, age_out, stats
+
+
+def drive_start(
+    q0: WorkQueue,
+    aux0: Any,
+    cfg: ForwardConfig,
+    *,
+    health: Optional[jax.Array] = None,
+    accounting: bool = False,
+) -> Dict[str, Any]:
+    """The drive's initial forward: route the ray-gen output to its owners
+    (the paper's VoPaT does exactly this — primary rays are "forwarded to
+    itself") and build the loop carry.
+
+    Carry keys: ``q`` (the forwarded queue, per-round drops), ``aux``,
+    ``total`` (replicated global in-flight count), ``rnd`` (body iterations
+    executed), ``drops`` (cumulative per-rank) — plus ``age`` (retain),
+    ``ring`` (telemetry), and, with ``accounting=True``, the per-rank
+    ``emitted`` / ``delivered`` conservation counters the recovery watchdog
+    closes at every checkpoint boundary (``emitted`` counts ATTEMPTED
+    emissions — accepted rows plus their enqueue clips — so the identity
+    ``emitted == delivered + in-flight + drops`` holds exactly; both are
+    values the loop computes anyway, so the cost is two scalar adds).
+    """
+    q1, total0, age1, stats0 = _fwd(q0, None, cfg, health)
+    carry: Dict[str, Any] = {
+        "q": _vary(q1, cfg.axis_name),
+        "aux": _vary(aux0, cfg.axis_name),
+        "total": total0,
+        "rnd": jnp.zeros((), jnp.int32),
+        "drops": _vary(q1.drops, cfg.axis_name),
+    }
+    if cfg.overflow == "retain":
+        carry["age"] = _vary(age1, cfg.axis_name)
+    if cfg.telemetry:
+        ring0 = TS.ring_push(
+            TS.make_ring(
+                TS.num_tiers(cfg),
+                window=cfg.telemetry_window,
+                buckets=cfg.telemetry_buckets,
+            ),
+            stats0,
+        )
+        carry["ring"] = _vary(ring0, cfg.axis_name)
+    if accounting:
+        emitted0 = (q0.count + q0.drops).astype(jnp.int32)
+        carry["emitted"] = _vary(emitted0, cfg.axis_name)
+        carry["delivered"] = _vary(jnp.zeros((), jnp.int32), cfg.axis_name)
+    return carry
+
+
+def drive_segment(
+    round_fn: Callable[[WorkQueue, Any, jax.Array], Tuple[WorkQueue, Any]],
+    carry: Dict[str, Any],
+    cfg: ForwardConfig,
+    *,
+    seg_end,
+    health: Optional[jax.Array] = None,
+) -> Dict[str, Any]:
+    """Run body rounds while ``total > 0`` and ``rnd < seg_end``.
+
+    ``seg_end`` may be a static int (``run_until_done`` passes
+    ``max_rounds``) or a traced scalar (the checkpoint drive passes each
+    segment's boundary into ONE compiled program).  The body is identical
+    either way, so a segmented run replays the uninterrupted run's rounds
+    bit for bit.  Accounting counters ride along iff present in ``carry``.
+    """
+    telem = cfg.telemetry
+    retain = cfg.overflow == "retain"
+    track = "emitted" in carry
+
+    def cond(c):
+        return (c["total"] > 0) & (c["rnd"] < seg_end)
+
+    def body(c):
+        q, aux, rnd, drops = c["q"], c["aux"], c["rnd"], c["drops"]
+        # The input queue's cumulative drops already ride the loop carry;
+        # hand round_fn a zero-drop view so a round_fn that threads the input
+        # queue's drops into its output cannot double-count them (see the
+        # drops contract in the run_until_done docstring).
+        q = WorkQueue(items=q.items, dest=q.dest, count=q.count,
+                      drops=jnp.zeros_like(q.drops))
+        if retain:
+            n_ret, view = _split_retained(q)
+            consumed = view.count
+            out_q, aux = round_fn(view, aux, rnd)
+            fwd_q, age_in = _merge_retained(q, n_ret, out_q, c["age"])
+            attempted = out_q.count + out_q.drops
+        else:
+            consumed = q.count
+            fwd_q, aux = round_fn(q, aux, rnd)
+            age_in = None
+            attempted = fwd_q.count + fwd_q.drops
+        new_q, total, age_out, stats = _fwd(fwd_q, age_in, cfg, health)
+        # Per-round queues are fresh, so cumulative overflow drops must ride
+        # the loop carry (observability: silent loss is a capacity bug).
+        drops = drops + new_q.drops
+        out = {
+            "q": _vary(new_q, cfg.axis_name),
+            "aux": _vary(aux, cfg.axis_name),
+            "total": total,
+            "rnd": rnd + 1,
+            "drops": _vary(drops, cfg.axis_name),
+        }
+        if retain:
+            out["age"] = _vary(age_out, cfg.axis_name)
+        if telem:
+            out["ring"] = _vary(TS.ring_push(c["ring"], stats), cfg.axis_name)
+        if track:
+            out["emitted"] = _vary(
+                c["emitted"] + attempted.astype(jnp.int32), cfg.axis_name
+            )
+            out["delivered"] = _vary(
+                c["delivered"] + consumed.astype(jnp.int32), cfg.axis_name
+            )
+        return out
+
+    return jax.lax.while_loop(cond, body, carry)
+
+
+def drive_finalize(carry: Dict[str, Any], cfg: ForwardConfig):
+    """Carry → results: fold the cumulative drops into the final queue and
+    emit the ``run_until_done`` return tuple (see its docstring)."""
+    q = carry["q"]
+    q = WorkQueue(items=q.items, dest=q.dest, count=q.count, drops=carry["drops"])
+    out = (q, carry["aux"], carry["rnd"], carry["total"] == 0)
+    if cfg.overflow == "retain":
+        out = out + (carry["age"],)
+    if cfg.telemetry:
+        out = out + (carry["ring"],)
+    return out
+
+
 def run_until_done(
     round_fn: Callable[[WorkQueue, Any, jax.Array], Tuple[WorkQueue, Any]],
     q0: WorkQueue,
@@ -123,7 +281,8 @@ def run_until_done(
     cfg: ForwardConfig,
     *,
     max_rounds: int = 64,
-) -> Tuple[WorkQueue, Any, jax.Array, jax.Array]:
+    health: Optional[jax.Array] = None,
+) -> Tuple:
     """Iterate ``round_fn`` + ``forward_work`` until global termination.
 
     Args:
@@ -145,108 +304,28 @@ def run_until_done(
       cfg: forwarding configuration.
       max_rounds: hard bound (XLA while loops need no bound, but runaway
         protection mirrors the paper's capacity pragmatism).
+      health: optional replicated ``(R,) bool`` rank-health mask, constant
+        for the burst — every forward re-addresses traffic away from
+        unhealthy ranks via the pure local ``core.health`` remap (zero
+        collective-inventory change).  For a mask that CHANGES mid-run, use
+        the segmented checkpoint drive (``repro.core.recovery``), which
+        re-reads it at every segment boundary.
 
     Returns ``(final_queue, final_aux, rounds_executed, done)``.  ``done`` is
     the termination verdict: True when the loop exited because the global
     in-flight count hit zero, False when ``max_rounds`` ran out with work
-    still in flight (a truncated run — under ``overflow="retain"`` that
-    includes retained rows, whose ages are not returned; resume with fresh
-    ages if you continue such a run).  With ``cfg.telemetry`` a
-    ``telemetry.StatsRing`` of the last ``cfg.telemetry_window`` rounds rides
-    the while-loop carry and is returned as a fifth output — EVERY forwarding
-    round is recorded, including the initial ray-gen routing round (so a
-    drive that runs ``rounds`` body iterations returns ``ring.pos ==
-    rounds + 1``).
+    still in flight (a truncated run).  Under ``overflow="retain"`` the
+    final per-lane ``age`` vector is returned as a fifth output — on a
+    truncated run these are the REAL rounds-waiting counters of the rows
+    still in the queue, so a continuation (``repro.core.recovery`` resume,
+    or a manual re-drive threading ``age`` back in) preserves the FIFO
+    anti-starvation clock instead of silently resetting it.  With
+    ``cfg.telemetry`` a ``telemetry.StatsRing`` of the last
+    ``cfg.telemetry_window`` rounds rides the while-loop carry and is
+    returned as the last output — EVERY forwarding round is recorded,
+    including the initial ray-gen routing round (so a drive that runs
+    ``rounds`` body iterations returns ``ring.pos == rounds + 1``).
     """
-    telem = cfg.telemetry
-    retain = cfg.overflow == "retain"
-
-    def fwd(q, age):
-        """Uniform forward_work unpack: ``(new_q, total, age_out, stats)``
-        with Nones where the config doesn't produce the value."""
-        if retain and telem:
-            new_q, total, age_out, stats = forward_work(q, cfg, age=age)
-        elif retain:
-            new_q, total, age_out = forward_work(q, cfg, age=age)
-            stats = None
-        elif telem:
-            new_q, total, stats = forward_work(q, cfg)
-            age_out = None
-        else:
-            new_q, total = forward_work(q, cfg)
-            age_out = stats = None
-        return new_q, total, age_out, stats
-
-    n_extra = (1 if retain else 0) + (1 if telem else 0)
-
-    def cond(carry):
-        total, rnd = carry[2], carry[3]
-        return (total > 0) & (rnd < max_rounds)
-
-    def body(carry):
-        q, aux, _total, rnd, drops = carry[:5]
-        i = 5
-        age = None
-        if retain:
-            age = carry[i]
-            i += 1
-        # The input queue's cumulative drops already ride the loop carry;
-        # hand round_fn a zero-drop view so a round_fn that threads the input
-        # queue's drops into its output cannot double-count them (see the
-        # drops contract in the docstring).
-        q = WorkQueue(items=q.items, dest=q.dest, count=q.count,
-                      drops=jnp.zeros_like(q.drops))
-        if retain:
-            n_ret, view = _split_retained(q)
-            out_q, aux = round_fn(view, aux, rnd)
-            fwd_q, age_in = _merge_retained(q, n_ret, out_q, age)
-        else:
-            fwd_q, aux = round_fn(q, aux, rnd)
-            age_in = None
-        new_q, total, age_out, stats = fwd(fwd_q, age_in)
-        # Per-round queues are fresh, so cumulative overflow drops must ride
-        # the loop carry (observability: silent loss is a capacity bug).
-        drops = drops + new_q.drops
-        out = (
-            _vary(new_q, cfg.axis_name),
-            _vary(aux, cfg.axis_name),
-            total,
-            rnd + 1,
-            _vary(drops, cfg.axis_name),
-        )
-        if retain:
-            out = out + (_vary(age_out, cfg.axis_name),)
-        if telem:
-            ring = TS.ring_push(carry[i], stats)
-            out = out + (_vary(ring, cfg.axis_name),)
-        return out
-
-    # Initial forward: route the ray-gen output to its owners (the paper's
-    # VoPaT does exactly this — primary rays are "forwarded to itself").
-    q1, total0, age1, stats0 = fwd(q0, None)
-    carry0 = (
-        _vary(q1, cfg.axis_name),
-        _vary(aux0, cfg.axis_name),
-        total0,
-        jnp.zeros((), jnp.int32),
-        _vary(q1.drops, cfg.axis_name),
-    )
-    if retain:
-        carry0 = carry0 + (_vary(age1, cfg.axis_name),)
-    if telem:
-        ring0 = TS.ring_push(
-            TS.make_ring(
-                TS.num_tiers(cfg),
-                window=cfg.telemetry_window,
-                buckets=cfg.telemetry_buckets,
-            ),
-            stats0,
-        )
-        carry0 = carry0 + (_vary(ring0, cfg.axis_name),)
-    out = jax.lax.while_loop(cond, body, carry0)
-    q, aux, total, rounds, drops = out[:5]
-    done = total == 0
-    q = WorkQueue(items=q.items, dest=q.dest, count=q.count, drops=drops)
-    if telem:
-        return q, aux, rounds, done, out[4 + n_extra]
-    return q, aux, rounds, done
+    carry = drive_start(q0, aux0, cfg, health=health)
+    carry = drive_segment(round_fn, carry, cfg, seg_end=max_rounds, health=health)
+    return drive_finalize(carry, cfg)

@@ -24,6 +24,7 @@ from repro.telemetry.stats import (
     occupancy_histogram,
     ring_filled,
     ring_push,
+    ring_trace,
     single_tier_stats,
     stack_ring,
     summarize,
@@ -43,6 +44,7 @@ __all__ = [
     "occupancy_histogram",
     "ring_filled",
     "ring_push",
+    "ring_trace",
     "single_tier_stats",
     "stack_ring",
     "summarize",

@@ -294,6 +294,46 @@ def summarize(ring: StatsRing, *, tier_capacities: Tuple[int, ...]) -> Dict:
     }
 
 
+def ring_trace(ring: StatsRing) -> Dict:
+    """Chronological per-round trace of a ring's scalar counters (host-side
+    numpy; accepts the per-rank or rank-stacked layout).
+
+    Returns arrays of length ``window_filled`` — one entry per recorded
+    forwarding round, oldest first, aggregated across ranks the way each
+    counter composes: ``retained_rows`` / ``recv_total`` / ``recv_drops``
+    summed, ``age_max`` maxed.  This is the trajectory view the chaos tests
+    diff against the numpy twin's round-for-round ``retained_trace`` /
+    ``age_trace`` — and what the recovery tests use to prove a
+    preempt-resumed run replayed the SAME rounds, not merely reached the
+    same totals."""
+    pos_all = np.asarray(ring.pos).reshape(-1)
+    if pos_all.size == 0 or not (pos_all == pos_all[0]).all():
+        raise ValueError(
+            f"ring positions diverge across ranks: {pos_all} — ranks push in "
+            f"lockstep inside the drive loop, so this ring was not produced "
+            f"by one drive"
+        )
+    pos = int(pos_all[0])
+
+    def per_round(leaf, reduce):
+        a = np.asarray(leaf)
+        if a.ndim == 1:  # per-rank layout: (window,) → (1, window)
+            a = a[None]
+        W = a.shape[1]
+        if pos > W:  # wrapped: oldest surviving push sits at slot pos % W
+            idx = (np.arange(W) + pos % W) % W
+        else:
+            idx = np.arange(pos)
+        return reduce(a[:, idx], axis=0)
+
+    return {
+        "retained_rows": per_round(ring.stats.retained_rows, np.sum),
+        "age_max": per_round(ring.stats.age_max, np.max),
+        "recv_total": per_round(ring.stats.recv_total, np.sum),
+        "recv_drops": per_round(ring.stats.recv_drops, np.sum),
+    }
+
+
 def demand_quantile(summary: Dict, tier: int, q: float) -> int:
     """Conservative demand at quantile ``q`` of tier ``tier``'s recorded
     segment population: the smallest demand ``d`` such that at least a

@@ -46,6 +46,14 @@ def pytest_configure(config):
         "loses nothing) and the conservation identity (drop mode counts "
         "every loss).  Part of tier-1; CI can select with `-m chaos`.",
     )
+    config.addinivalue_line(
+        "markers",
+        "recovery: exercises the ISSUE-7 recovery law — checkpoint/resume of "
+        "the segmented drive loop (repro.core.recovery + repro.ckpt), "
+        "elastic R→R′ restore, health-aware rank draining, and the "
+        "conservation watchdog.  Part of tier-1; CI can select with "
+        "`-m recovery`.",
+    )
 
 
 @pytest.fixture(autouse=True)

@@ -1,0 +1,145 @@
+"""Checkpoint writer/reader unit tests (ISSUE 7 satellite).
+
+``repro.ckpt`` existed since the seed but was only ever exercised through
+integration paths; the recovery law now leans on every one of its promises —
+atomic publish, SHA-256 integrity, crash-orphan cleanup, retention, and
+typed errors (``ValueError``, never ``assert``) — so each gets a direct
+test against a real filesystem."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import ckpt
+
+
+def _tree(step=0):
+    return {
+        "a": np.arange(6, dtype=np.int32).reshape(2, 3) + step,
+        "b": (np.float32(1.5) * np.ones((4,), np.float32), np.int32(step)),
+    }
+
+
+def _like():
+    return {
+        "a": np.zeros((2, 3), np.int32),
+        "b": (np.zeros((4,), np.float32), np.zeros((), np.int32)),
+    }
+
+
+def test_save_restore_roundtrip_bitexact(tmp_path):
+    path = ckpt.save_checkpoint(tmp_path, 3, _tree(3))
+    assert path == tmp_path / "step_00000003"
+    assert (path / "manifest.json").exists()
+    out = ckpt.restore_checkpoint(tmp_path, 3, _like())
+    for got, want in zip(
+        [out["a"], out["b"][0], out["b"][1]],
+        [_tree(3)["a"], _tree(3)["b"][0], _tree(3)["b"][1]],
+    ):
+        np.testing.assert_array_equal(got, want)
+        assert np.asarray(got).dtype == np.asarray(want).dtype
+
+
+def test_meta_roundtrips_through_manifest(tmp_path):
+    meta = {"round": 7, "num_ranks": 8, "overflow": "retain"}
+    ckpt.save_checkpoint(tmp_path, 7, _tree(), meta=meta)
+    man = ckpt.load_manifest(tmp_path, 7)
+    assert man["meta"] == meta
+    assert man["step"] == 7
+    # manifest is readable with zero knowledge of the tree structure
+    assert [e["dtype"] for e in man["leaves"]] == ["int32", "float32", "int32"]
+    with pytest.raises(FileNotFoundError):
+        ckpt.load_manifest(tmp_path, 99)
+
+
+def test_latest_step_ignores_tmp_dirs(tmp_path):
+    assert ckpt.latest_step(tmp_path) is None
+    ckpt.save_checkpoint(tmp_path, 2, _tree())
+    ckpt.save_checkpoint(tmp_path, 5, _tree())
+    (tmp_path / "step_00000009.tmp").mkdir()  # crashed writer, never published
+    assert ckpt.latest_step(tmp_path) == 5
+
+
+def test_corrupted_leaf_detected_before_deserialize(tmp_path):
+    ckpt.save_checkpoint(tmp_path, 1, _tree())
+    victim = tmp_path / "step_00000001" / "leaf_00000.npy"
+    raw = bytearray(victim.read_bytes())
+    raw[-1] ^= 0xFF  # bit-rot in the tensor payload, header intact
+    victim.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="corruption"):
+        ckpt.restore_checkpoint(tmp_path, 1, _like())
+
+
+def test_structure_shape_dtype_mismatches_raise_valueerror(tmp_path):
+    ckpt.save_checkpoint(tmp_path, 1, _tree())
+    # leaf-count mismatch (checkpoint/model drift)
+    with pytest.raises(ValueError, match="leaves"):
+        ckpt.restore_checkpoint(tmp_path, 1, {"a": np.zeros((2, 3), np.int32)})
+    # shape mismatch
+    bad_shape = _like()
+    bad_shape["a"] = np.zeros((3, 2), np.int32)
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore_checkpoint(tmp_path, 1, bad_shape)
+    # dtype mismatch
+    bad_dtype = _like()
+    bad_dtype["a"] = np.zeros((2, 3), np.float32)
+    with pytest.raises(ValueError, match="dtype"):
+        ckpt.restore_checkpoint(tmp_path, 1, bad_dtype)
+
+
+def test_crash_mid_write_leaves_prior_checkpoint_restorable(tmp_path):
+    """A writer dying mid-step must never shadow the published prefix: the
+    half-written state lives in ``step_*.tmp`` (invisible to restore), the
+    previous checkpoint restores clean, and the NEXT successful save sweeps
+    the orphan."""
+    ckpt.save_checkpoint(tmp_path, 4, _tree(4), keep=10)
+    # simulate a crash while writing step 8: tmp dir with a partial leaf
+    orphan = tmp_path / "step_00000008.tmp"
+    orphan.mkdir()
+    (orphan / "leaf_00000.npy").write_bytes(b"partial garbage")
+    assert ckpt.latest_step(tmp_path) == 4
+    out = ckpt.restore_checkpoint(tmp_path, 4, _like())
+    np.testing.assert_array_equal(out["a"], _tree(4)["a"])
+    # recovery sweep: the next publish deletes the orphan
+    ckpt.save_checkpoint(tmp_path, 12, _tree(12), keep=10)
+    assert not orphan.exists()
+    assert ckpt.latest_step(tmp_path) == 12
+
+
+def test_retention_keeps_newest_k_and_resave_overwrites(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save_checkpoint(tmp_path, s, _tree(s), keep=3)
+    steps = sorted(
+        int(p.name.split("_")[1])
+        for p in tmp_path.iterdir()
+        if p.name.startswith("step_") and not p.name.endswith(".tmp")
+    )
+    assert steps == [3, 4, 5]
+    # re-publishing an existing step replaces it atomically
+    ckpt.save_checkpoint(tmp_path, 5, _tree(50), keep=3)
+    out = ckpt.restore_checkpoint(tmp_path, 5, _like())
+    np.testing.assert_array_equal(out["a"], _tree(50)["a"])
+
+
+def test_manifest_hashes_witness_bit_identity(tmp_path):
+    """Two saves of the SAME tree publish byte-identical leaves (the property
+    ``chaos.boundary_digests`` turns into the preempt-resume bit-exactness
+    proof); a one-element change flips exactly that leaf's digest."""
+    ckpt.save_checkpoint(tmp_path / "x", 0, _tree(9))
+    ckpt.save_checkpoint(tmp_path / "y", 0, _tree(9))
+    mx = ckpt.load_manifest(tmp_path / "x", 0)
+    my = ckpt.load_manifest(tmp_path / "y", 0)
+    assert [e["sha256"] for e in mx["leaves"]] == [
+        e["sha256"] for e in my["leaves"]
+    ]
+    changed = _tree(9)
+    changed["a"] = changed["a"].copy()
+    changed["a"][0, 0] += 1
+    ckpt.save_checkpoint(tmp_path / "z", 0, changed)
+    mz = ckpt.load_manifest(tmp_path / "z", 0)
+    diff = [
+        i
+        for i, (ex, ez) in enumerate(zip(mx["leaves"], mz["leaves"]))
+        if ex["sha256"] != ez["sha256"]
+    ]
+    assert diff == [0]

@@ -365,6 +365,119 @@ def test_retain_adds_zero_collectives(request, fixture, axes, kw):
     assert ops_retain == ops_drop, (ops_retain, ops_drop)
 
 
+def _lower_round_with_health(mesh, cfg, axes):
+    """A forwarding round with a TRACED rank-health mask (replicated bool
+    ``(R,)``) — the ISSUE 7 draining remap in the position the recovery
+    drive uses it."""
+    def kernel(_x, h):
+        q = make_queue(ray_proto(), CAP)
+        me = jax.lax.axis_index(axes)
+        q = enqueue(
+            q, make_rays(10), ((me + jnp.arange(10)) % R).astype(jnp.int32),
+            jnp.ones(10, bool),
+        )
+        nq, total = forward_work(q, cfg, health=h)
+        return nq.count[None], total, nq.items.tmin
+
+    return jax.jit(
+        compat.shard_map(
+            kernel, mesh=mesh, in_specs=(P(axes), P()),
+            out_specs=(P(axes), P(), P(axes)),
+        )
+    ).lower(jnp.arange(8.0), jnp.ones((R,), bool)).as_text()
+
+
+@pytest.mark.recovery
+@pytest.mark.parametrize(
+    "fixture,axes,kw",
+    [
+        ("mesh8", "data", dict(exchange="padded")),
+        ("mesh8", "data", dict(exchange="padded", marshal="scatter")),
+        (
+            "mesh_pods222", ("pod", "node", "device"),
+            dict(exchange="hierarchical", level_sizes=(2, 2, 2)),
+        ),
+    ],
+    ids=["padded", "padded-scatter", "hier3"],
+)
+def test_health_mask_adds_zero_collectives(request, fixture, axes, kw):
+    """ISSUE 7 acceptance: the rank-draining destination remap is a pure
+    LOCAL table lookup (``health_table`` + gather) applied before the
+    marshal — the full collective inventory (kind, bytes, replica groups) of
+    a health-masked round is identical to the plain round.  Draining a rank
+    changes WHERE rows go, never what the fabric ships."""
+    mesh = request.getfixturevalue(fixture)
+    cfg = ForwardConfig(axes, R, CAP, **kw)
+    lower_off = (
+        _lower_one_round(mesh, cfg)
+        if axes == "data"
+        else _lower_hier_round(mesh, cfg)
+    )
+    ops_off = collective_ops(lower_off, with_groups=True)
+    ops_health = collective_ops(
+        _lower_round_with_health(mesh, cfg, axes), with_groups=True
+    )
+    assert ops_health == ops_off, (ops_health, ops_off)
+
+
+@pytest.mark.recovery
+def test_segmented_drive_preserves_collective_inventory(mesh8):
+    """ISSUE 7 acceptance: splitting the drive into checkpointable start +
+    segment programs re-arranges WHERE the while loop pauses, never what the
+    fabric does — the combined collective inventory of the two programs
+    equals the monolithic ``run_until_done`` drive's exactly (kind, bytes,
+    replica groups), accounting counters and health remap included."""
+    import numpy as np
+
+    from repro.core import DISCARD, WorkQueue
+    from repro.core.context import RafiContext
+
+    ctx = RafiContext(
+        mesh8, ray_proto(), capacity=CAP, peer_capacity=8, exchange="padded",
+        overflow="retain", telemetry=True, telemetry_window=8,
+    )
+
+    def round_fn(q_in, acc, rnd):
+        me = jax.lax.axis_index("data")
+        out = make_queue(ray_proto(), CAP)
+        out = enqueue(
+            out, make_rays(4), ((me + rnd) % R) * jnp.ones(4, jnp.int32),
+            (jnp.arange(4) >= 0) & (rnd < 2),
+        )
+        return out, acc + q_in.count
+
+    spec = P("data")
+    q0 = WorkQueue(
+        items=jax.tree.map(
+            lambda a: np.zeros((R * CAP,) + a.shape, a.dtype), ray_proto()
+        ),
+        dest=np.full((R * CAP,), DISCARD, np.int32),
+        count=np.zeros((R,), np.int32),
+        drops=np.zeros((R,), np.int32),
+    )
+    aux0 = np.zeros((R,), np.int32)
+    health = np.ones((R,), bool)
+
+    plain = ctx.run_until_done(round_fn, aux_specs=spec, max_rounds=16)
+    ops_plain = collective_ops(
+        plain.lower(q0, aux0).as_text(), with_groups=True
+    )
+    start_p, segment_p = ctx.checkpoint_drive_programs(
+        round_fn, aux_specs=spec, accounting=True
+    )
+    ops_start = collective_ops(
+        start_p.lower(q0, aux0, health).as_text(), with_groups=True
+    )
+    carry = start_p(q0, aux0, health)  # a concrete carry to lower against
+    ops_segment = collective_ops(
+        segment_p.lower(carry, np.int32(4), health).as_text(),
+        with_groups=True,
+    )
+    assert sorted(ops_start + ops_segment) == sorted(ops_plain), (
+        ops_start, ops_segment, ops_plain
+    )
+
+
 def test_cycle_hop_ships_one_packed_buffer(mesh8):
     """A ring hop moves items+dest as ONE packed collective_permute (plus the
     scalar count) — the cycling analogue of the forwarding budget."""
