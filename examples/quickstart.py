@@ -102,4 +102,18 @@ print(
     f"clamp drops {summary['drops']}"
 )
 assert summary["drops"] == 0
+
+# 5. The overlap law (PR 8): ``pipeline_shards=S`` splits every peer segment
+#    into S micro-shards, each on its own payload+count collective pair, so
+#    marshal of shard k+1 can overlap the wire time of shard k on an async
+#    fabric.  Pipelining changes the SCHEDULE, never the ANSWER — the same
+#    drive is bit-exact with the bulk round.
+cfg = dataclasses.replace(cfg, pipeline_shards=2)
+f2 = jax.jit(compat.shard_map(
+    drive, mesh=mesh, in_specs=P("data"),
+    out_specs=(P("data"), P("data"), ring_specs),
+))
+acc2, rounds2, _ = f2(jnp.arange(float(R)))
+assert (acc2 == acc).all() and int(rounds2[0]) == int(rounds[0])
+print(f"pipelined (S=2) drive bit-exact with bulk: {float(acc2.sum()):.3f}")
 print("OK")

@@ -108,6 +108,7 @@ def _make_ctx(
     level_capacities=(),
     telemetry: bool = True,
     max_rounds: int = 64,
+    pipeline_shards: int = 1,
 ) -> RafiContext:
     """The scenario context: ``telemetry_window`` pinned to ``max_rounds+1``
     so the ring records EVERY forward of the burst (the trajectory oracles
@@ -128,6 +129,7 @@ def _make_ctx(
         telemetry=telemetry,
         telemetry_window=max_rounds + 1,
         overflow=overflow,
+        pipeline_shards=pipeline_shards,
     )
 
 

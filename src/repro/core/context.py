@@ -68,6 +68,7 @@ class RafiContext:
         telemetry_window: int = 16,
         telemetry_buckets: int = 8,
         overflow: str = "drop",
+        pipeline_shards: int = 1,
     ):
         self.mesh = mesh
         self.proto = proto
@@ -98,6 +99,7 @@ class RafiContext:
             telemetry_window=telemetry_window,
             telemetry_buckets=telemetry_buckets,
             overflow=overflow,
+            pipeline_shards=pipeline_shards,
         )
         # PartitionSpec entries cannot nest: a joint-tier axis_name like
         # (("pod", "node"), "device") shards dim 0 over the flattened axes

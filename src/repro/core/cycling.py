@@ -71,6 +71,13 @@ def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig):
     Absorption stays FIFO in lane order — exactly the rows that fit are
     taken, front first.
     """
+    if cfg.pipeline_shards > 1:
+        raise ValueError(
+            "cycling cannot micro-shard: a ring hop ships the WHOLE queue in "
+            "one collective_permute (there is no per-peer segment to split), "
+            f"so pipeline_shards={cfg.pipeline_shards} has nothing to overlap "
+            "— use pipeline_shards=1 with the cycling pattern"
+        )
     me = jax.lax.axis_index(flatten_axis_names(cfg.axis_name))
     lane = jnp.arange(q.capacity)
     valid = lane < q.count
@@ -92,7 +99,7 @@ def cycle_step(q: WorkQueue, absorbed: WorkQueue, cfg: ForwardConfig):
 
     packed, spec = T.pack_payload({"dest": q.dest, "items": q.items})
     if cfg.marshal == "scatter":
-        from repro.core.exchange import _scatter
+        from repro.core.stages import scatter_rows as _scatter
 
         # sort-free stable compaction: position = exclusive prefix of the
         # passing mask (the 1-bucket counting sort), one payload scatter

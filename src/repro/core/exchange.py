@@ -3,8 +3,9 @@
 Wire format: the caller packs the whole work-item pytree into ONE
 ``(capacity, words)`` uint32 buffer (``core.types.pack_payload`` — the
 paper's contiguous 44-byte ray).  Every backend moves that single buffer with
-a SINGLE payload collective per round, and the send-side marshal is ONE
-payload pass (§4.2.1/§6.1) in either of two bit-exact modes:
+a SINGLE payload collective per round (per mesh axis; per micro-shard under
+pipelining — see below), and the send-side marshal is ONE payload pass
+(§4.2.1/§6.1) in either of two bit-exact modes:
 
 * ``marshal="sort"`` — the destination-sort permutation is composed with the
   send-layout gather (``packed[perm[off[r] + s]]``): no separate "sort the
@@ -20,8 +21,18 @@ lexicographic stable source order), and neither fans out per pytree leaf.
 The marshal law, alongside the collective budget below: ONE payload pass per
 round pre-collective, whichever mode runs.
 
+Since ISSUE 8 the backends are THIN COMPOSITIONS of the stage objects in
+``core.stages`` (SpillExtract → Marshal → CountExchange → PayloadExchange →
+Unmarshal over an explicit ``RoundState``): the marshal/clamp/spill/compact
+arithmetic lives there exactly once, shared by every backend.  The same
+layer supplies the overlap law: ``pipeline_shards=S`` splits each exchange's
+per-peer slot rows into S micro-shards whose send/recv chains are issued
+interleaved (``stages.Pipelined``) — S payload + S count collectives per
+mesh axis, payload wire bytes exactly conserved, placement bit-exact with
+the bulk-synchronous path (S=1), which remains the oracle.
+
 Collective budget per ``forward_work`` round (guarded by
-``tests/test_collective_budget.py``):
+``tests/test_collective_budget.py``; multiply by ``pipeline_shards``):
 
   payload   1 × all_to_all (padded) / 1 × ragged_all_to_all (ragged) /
             1 × all_to_all PER MESH AXIS (hierarchical — see below)
@@ -81,7 +92,9 @@ bound mesh axis:
   inward, one collective per axis.  Placement is bit-identical to the flat
   backends (lexicographic rank order is preserved end to end).
 * ``onehot`` — an all-gather reference oracle with a deliberately different
-  code path, used only by tests.
+  code path, used only by tests.  Bulk-synchronous by design: it has no
+  per-peer slot structure to micro-shard, so ``pipeline_shards > 1`` is
+  rejected.
 
 All backends share the contract: inputs are the *unsorted* packed payload
 plus the marshal plan — the destination-sort permutation (``marshal="sort"``)
@@ -127,7 +140,8 @@ destination map (``seg_dest``) needed to re-address it is derived
 rank-consistently from digits every later-stage peer shares, so no extra
 collective is spent on it either.  The onehot oracle has no sender clamp,
 so its plan is empty by construction (its receiver clamp stays a counted
-drop).
+drop).  Spill extraction always reads the FULL clamp (cut rows never ship),
+so retention is unchanged — and bit-exact — under pipelining.
 """
 from __future__ import annotations
 
@@ -138,6 +152,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.core import stages as ST
 from repro.telemetry import stats as TS
 
 __all__ = [
@@ -150,10 +165,18 @@ __all__ = [
     "padded_send_buffer",
 ]
 
-
-def _a2a(x: jax.Array, axis_name) -> jax.Array:
-    """all_to_all over leading axis: out[p] = what peer p sent me (block p)."""
-    return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=False)
+# The shared stage-library arithmetic (ISSUE 8 moved it to ``core.stages``);
+# re-exported under the historic private names for callers that composed
+# against the monolith (benchmark phase profiles, cycling's ring hop).
+padded_send_buffer = ST.padded_send_buffer
+_a2a = ST.a2a
+_scatter = ST.scatter_rows
+_spill_positions = ST.spill_positions
+_lanes_spill = ST.lanes_spill
+_clamp_subsegments = ST.clamp_subsegments
+_subsegment_gather = ST.subsegment_gather
+_compact_blocks = ST.compact_blocks
+_ragged_control_plane = ST.ragged_control_plane
 
 
 def exchange_counts(send_counts: jax.Array, axis_name) -> jax.Array:
@@ -162,7 +185,7 @@ def exchange_counts(send_counts: jax.Array, axis_name) -> jax.Array:
     ``send_counts``: (R,) — how many items *I* send to each peer.
     Returns (R,): how many items each peer sends *me*.
     """
-    return _a2a(send_counts[:, None], axis_name).reshape(-1)
+    return ST.a2a(send_counts[:, None], axis_name).reshape(-1)
 
 
 def exchange_count_matrix(send_counts: jax.Array, axis_name) -> jax.Array:
@@ -175,204 +198,6 @@ def exchange_count_matrix(send_counts: jax.Array, axis_name) -> jax.Array:
     exchanges are needed before the payload collective.
     """
     return jax.lax.all_gather(send_counts, axis_name)
-
-
-def _scatter(
-    buf: jax.Array, dstpos: jax.Array, n_slots: int, *, use_pallas: bool
-) -> jax.Array:
-    """The scatter marshal's single payload pass: ``out[dstpos[i]] = buf[i]``.
-
-    Positions at/past ``n_slots`` (the caller's drop/trash sentinel) are
-    discarded — §3.3 semantics.  The Pallas kernel
-    (``kernels/bucket_scatter.scatter_rows``) stores rows at their slots
-    directly; the XLA fallback scatters only the 1-word LANE INDEX and reads
-    the payload back through the inverse — XLA lowers a W-word row scatter
-    far worse than the equivalent gather, and the index scatter is
-    control-plane-sized (like the histogram), so the payload still moves in
-    exactly ONE pass.  Slots no lane claimed hold garbage on this path (row 0)
-    and zeros on the Pallas path — both are masked downstream by the
-    exchanged counts, exactly like the sort path's past-the-segment slots.
-    """
-    if use_pallas:
-        from repro.kernels.bucket_scatter import ops as bs_ops
-
-        return bs_ops.scatter_rows(buf, dstpos, num_slots=n_slots)
-    lane = jnp.arange(buf.shape[0], dtype=jnp.int32)
-    inv = jnp.zeros((n_slots,), jnp.int32).at[dstpos].set(lane, mode="drop")
-    return jnp.take(buf, inv, axis=0)
-
-
-def _spill_positions(n_slots, cut, seg_start):
-    """Source positions of a clamp site's cut rows, compacted segment-major.
-
-    ``cut[k]`` rows were clamped off segment ``k``; they sit contiguously
-    from ``seg_start[k]`` (the first position past the segment's allowance).
-    Spill slot ``j`` maps to segment ``k = #{inclusive-cumulative cut <= j}``
-    and position ``seg_start[k] + j - spill_off[k]`` — the same composed
-    positional arithmetic as the send gather, so extracting the spill is
-    just a second index vector into the marshal's source space.  In-segment
-    order is preserved (stable rank order = FIFO).  Returns ``(k, pos)``;
-    slots at/past the total cut hold clamped garbage the caller bounds by
-    the spill count.
-    """
-    incl = jnp.cumsum(cut)
-    j = jnp.arange(n_slots, dtype=jnp.int32)
-    k = jnp.sum((j[:, None] >= incl[None, :]).astype(jnp.int32), axis=1)
-    k = jnp.clip(k, 0, cut.shape[0] - 1)
-    pos = jnp.take(seg_start, k) + j - jnp.take(incl - cut, k)
-    return k, pos
-
-
-def _lanes_spill(
-    packed, perm, age, allow_tbl, cut, seg_start, n_spill, *,
-    num_ranks, marshal, dest_clean, dest_rank,
-):
-    """Pending-spill block for a sender-side clamp over the INPUT lanes.
-
-    ``allow_tbl[d]``/``cut[d]``: per-destination allowance and cut count;
-    ``seg_start[d]``: first cut position of destination ``d`` in the
-    MARSHALLED (sorted) order.  Sort mode reads the cut rows straight
-    through ``perm``; scatter mode inverts the (dest, in-bucket rank) plan
-    with one 1-word scatter.  Returns ``(rows, dest, age, n_spill)`` —
-    rows/dest/age are valid on the ``[0, n_spill)`` prefix only (the caller
-    bounds every read), ages carried forward +1.
-    """
-    C = packed.shape[0]
-    k, pos = _spill_positions(C, cut, seg_start)
-    if marshal == "scatter":
-        lanes = jnp.arange(C, dtype=jnp.int32)
-        d = jnp.clip(dest_clean, 0, num_ranks - 1)
-        al = jnp.take(allow_tbl, d)
-        tgt = jnp.where(
-            (dest_clean < num_ranks) & (dest_rank >= al),
-            jnp.take(jnp.cumsum(cut) - cut, d) + dest_rank - al,
-            C,
-        )
-        src = jnp.zeros((C,), jnp.int32).at[tgt].set(lanes, mode="drop")
-    else:
-        src = jnp.take(perm, jnp.clip(pos, 0, C - 1))
-    # segment index in marshalled order IS the global destination (flat and
-    # first hierarchical stage alike: lexicographic rank order)
-    return (
-        jnp.take(packed, src, axis=0),
-        k.astype(jnp.int32),
-        jnp.take(age, src).astype(jnp.int32) + 1,
-        n_spill,
-    )
-
-
-def _clamp_subsegments(cnt: jax.Array, slot: int) -> Tuple[jax.Array, jax.Array]:
-    """Truncate stacked sub-segments (rows of ``cnt``, concatenated in row
-    order) to a ``slot``-row budget per column.
-
-    ``cnt[i, j]``: rows of sub-segment ``i`` bound for slot column ``j``.
-    Returns ``(allowed, starts)`` with the same shape: ``allowed`` keeps a
-    contiguous prefix of each column's concatenation (any segment or segment
-    tail past ``slot`` is cut — the §3.3 drop rule), ``starts`` is where each
-    surviving sub-segment begins inside its slot.
-    """
-    raw_pref = jnp.cumsum(cnt, axis=0) - cnt
-    allowed = jnp.clip(jnp.minimum(cnt, slot - raw_pref), 0)
-    starts = jnp.cumsum(allowed, axis=0) - allowed
-    return allowed, starts
-
-
-def _ragged_control_plane(
-    cnt: jax.Array, me: jax.Array, capacity: int
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """From the (R_src, R_dst) count matrix, derive my ragged-a2a parameters.
-
-    Receiver-capacity clamp, replicated identically on all ranks: at each
-    destination column ``d`` the senders' segments land at the exclusive
-    prefix of the column; any segment (or segment tail) past ``capacity`` is
-    cut — the §3.3 drop rule (:func:`_clamp_subsegments`), decided without a
-    round trip.
-
-    Returns ``(send_sizes (R,), output_offsets (R,), recv_sizes (R,))``.
-    """
-    allowed, roff = _clamp_subsegments(cnt, capacity)
-    send_sizes = allowed[me]  # my row: what each peer lets me deliver
-    output_offsets = roff[me]  # where my block lands on each peer
-    recv_sizes = allowed[:, me]  # my column: what each peer delivers to me
-    return send_sizes, output_offsets, recv_sizes
-
-
-def _compact_blocks(
-    recv_buf: jax.Array,  # (G, S, W) received padded blocks
-    recv_counts: jax.Array,  # (G,) valid rows per block
-    capacity: int,
-    *,
-    use_pallas: bool,
-    front=None,  # retain mode: rows [0, front) are reserved for the spill
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Receive-side compaction shared by the padded-slot exchanges:
-    ``out[roff[g] + s] = recv_buf[g, s]`` for ``s < recv_counts[g]``, rows
-    past ``capacity`` dropped (§3.3).  Returns ``(out, new_count, drops)``.
-
-    With ``front`` the arrivals land shifted by that many rows — the same
-    scatter places them BEHIND the retained spill at zero extra cost, and
-    ``new_count``/``drops`` account against the reduced room.
-    """
-    G, S, W = recv_buf.shape
-    roff = jnp.cumsum(recv_counts) - recv_counts
-    if front is not None:
-        roff = roff + front
-    if use_pallas:
-        from repro.kernels.marshal import ops as marshal_ops
-
-        out = marshal_ops.fused_unmarshal(recv_buf, roff, recv_counts, capacity=capacity)
-    else:
-        g_idx = jnp.repeat(jnp.arange(G, dtype=jnp.int32), S)
-        s_idx = jnp.tile(jnp.arange(S, dtype=jnp.int32), G)
-        dstpos = roff[g_idx] + s_idx
-        ok = s_idx < recv_counts[g_idx]
-        slot = jnp.where(ok & (dstpos < capacity), dstpos, capacity)
-        out = jnp.zeros((capacity, W), recv_buf.dtype)
-        out = out.at[slot].set(recv_buf.reshape(G * S, W), mode="drop")
-    total_recv = jnp.sum(recv_counts)
-    room = capacity if front is None else jnp.clip(capacity - front, 0)
-    new_count = jnp.minimum(total_recv, room)
-    return out, new_count, total_recv - new_count
-
-
-def padded_send_buffer(
-    packed: jax.Array,  # (C, W) uint32 — UNSORTED packed payload
-    perm: jax.Array,  # (C,) sort mode: destination-sort permutation
-    send_counts: jax.Array,  # (R,) valid-destination counts
-    *,
-    num_ranks: int,
-    peer_capacity: int,
-    use_pallas: bool = False,
-    marshal: str = "sort",
-    dest_clean: jax.Array = None,  # (C,) scatter mode: sanitized destination
-    dest_rank: jax.Array = None,  # (C,) scatter mode: stable in-bucket rank
-) -> jax.Array:
-    """The padded exchange's send-side marshal — the round's ONE payload pass
-    (isolated so ``benchmarks/run.py --profile`` can time it standalone).
-
-    Sort mode gathers ``packed[perm[off[r] + s]]``; scatter mode scatters row
-    ``i`` to ``dest_clean[i]·S + dest_rank[i]`` (rank ≥ S → §3.3 drop).
-    Returns the ``(R, S, W)`` send buffer; rows past each segment's clamped
-    count are garbage (sort) or zeros (scatter) and masked by the exchanged
-    counts downstream.
-    """
-    R, S = num_ranks, peer_capacity
-    cap = packed.shape[0]
-    if marshal == "scatter":
-        keep = (dest_clean < R) & (dest_rank < S)
-        dstpos = jnp.where(keep, dest_clean * S + dest_rank, R * S)
-        send_buf = _scatter(packed, dstpos, R * S, use_pallas=use_pallas)
-        return send_buf.reshape(R, S, -1)
-    off = jnp.cumsum(send_counts) - send_counts  # segment starts, sorted order
-    r_idx = jnp.repeat(jnp.arange(R, dtype=jnp.int32), S)
-    s_idx = jnp.tile(jnp.arange(S, dtype=jnp.int32), R)
-    slotpos = jnp.clip(off[r_idx] + s_idx, 0, cap - 1)  # position in sorted order
-    src = jnp.take(perm, slotpos)  # compose with the sort → source lane
-    if use_pallas:
-        from repro.kernels.marshal import ops as marshal_ops
-
-        return marshal_ops.fused_marshal(packed, src, num_ranks=R, slot=S)
-    return jnp.take(packed, src, axis=0).reshape(R, S, -1)
 
 
 def exchange_padded(
@@ -392,8 +217,12 @@ def exchange_padded(
     telemetry_buckets: int = 8,
     overflow: str = "drop",
     age: jax.Array = None,  # (C,) retain mode: rounds each lane has waited
+    pipeline_shards: int = 1,
 ):
-    """Padded-slot exchange of the packed payload.
+    """Padded-slot exchange of the packed payload, as a stage composition:
+
+      SpillExtract(sender clamp) → Marshal → CountExchange →
+      PayloadExchange → Unmarshal
 
     Single-pass marshal, either mode: in sort mode the send buffer row for
     (peer r, slot s) is ``packed[perm[off[r] + s]]`` — destination sort and
@@ -409,76 +238,43 @@ def exchange_padded(
     order's segment tails in the same pass style as the send gather — and
     the receive compaction lands arrivals BEHIND the reserved spill front,
     so ``drops`` reduces to the receiver-side admission count.
+
+    With ``pipeline_shards=S > 1`` the Marshal→…→Unmarshal chain runs S
+    times over slot-row micro-shards, interleaved (``stages.Pipelined``):
+    S payload + S count collectives, payload bytes conserved, placement
+    bit-exact with S=1 (each shard lands its rows at their bulk positions).
     """
     R, S = num_ranks, peer_capacity
     retain = overflow == "retain"
-    clamped = jnp.minimum(send_counts, S)
-    send_drops = jnp.sum(send_counts - clamped)
-    front = None
-    if retain:
-        # The clamp's cut rows are the per-destination segment TAILS of the
-        # marshalled order — extract them with the same positional
-        # arithmetic the send gather uses (one extra (C, W) gather, no
-        # conditional, no mask machinery) and reserve the queue front for
-        # them.
-        if age is None:
-            age = jnp.zeros((packed.shape[0],), jnp.int32)
-        off = jnp.cumsum(send_counts) - send_counts
-        pending = (_lanes_spill(
-            packed, perm, age, clamped, send_counts - clamped, off + clamped,
-            send_drops, num_ranks=R, marshal=marshal,
-            dest_clean=dest_clean, dest_rank=dest_rank,
-        ),)
-        front = jnp.minimum(send_drops, capacity)
-        send_drops = jnp.zeros_like(send_drops)
-    send_buf = padded_send_buffer(
-        packed, perm, send_counts, num_ranks=R, peer_capacity=S,
-        use_pallas=use_pallas, marshal=marshal,
-        dest_clean=dest_clean, dest_rank=dest_rank,
+    st = ST.RoundState(
+        packed=packed, perm=perm, send_counts=send_counts, marshal=marshal,
+        dest_clean=dest_clean, dest_rank=dest_rank, use_pallas=use_pallas,
+        retain=retain, age=age,
     )
-    recv_counts = exchange_counts(clamped, axis_name)  # the ONE count collective
-    recv_buf = _a2a(send_buf, axis_name)  # the ONE payload collective
-
-    out, new_count, recv_drops = _compact_blocks(
-        recv_buf, recv_counts, capacity, use_pallas=use_pallas, front=front
+    inner = (
+        ST.Marshal(R, S, shards=pipeline_shards),
+        ST.CountExchange(axis_name),
+        ST.PayloadExchange(axis_name),
+        ST.Unmarshal(capacity, shards=pipeline_shards, slot=S),
     )
-    drops = send_drops + recv_drops
+    if pipeline_shards > 1:
+        inner = (ST.Pipelined(inner, pipeline_shards),)
+    st = ST.compose(
+        ST.SpillExtract(R, capacity, S, retain=retain), *inner
+    )(st)
+    drops = st.send_drops + st.recv_drops
     if telemetry:
         stats = TS.single_tier_stats(
             send_counts, S, telemetry_buckets,
-            sent_rows=jnp.sum(clamped), stage_drops=send_drops,
-            recv_total=jnp.sum(recv_counts), recv_drops=recv_drops,
+            sent_rows=jnp.sum(st.clamped), stage_drops=st.send_drops,
+            recv_total=jnp.sum(st.recv_counts), recv_drops=st.recv_drops,
         )
         if retain:
-            return out, recv_counts, new_count, drops, pending, stats
-        return out, recv_counts, new_count, drops, stats
+            return st.out, st.recv_counts, st.new_count, drops, tuple(st.pending), stats
+        return st.out, st.recv_counts, st.new_count, drops, stats
     if retain:
-        return out, recv_counts, new_count, drops, pending
-    return out, recv_counts, new_count, drops
-
-
-def _subsegment_gather(
-    allowed: jax.Array,  # (G, K) surviving sub-segment sizes per slot column k
-    starts: jax.Array,  # (G, K) slot-local sub-segment starts
-    src_base: jax.Array,  # (G, K) source offset of sub-segment (g, k)
-    slot: int,
-) -> jax.Array:
-    """Source row index for every (slot column k, slot position s).
-
-    Returns ``(K, slot)`` int32: the flat source row feeding slot ``k``'s
-    position ``s`` — rows past a column's total are clamped garbage, masked
-    downstream by the exchanged counts.  This is the composed two-stage
-    layout: one gather materialises a whole stage's send buffer.
-    """
-    G, K = allowed.shape
-    s_idx = jnp.arange(slot, dtype=jnp.int32)
-    incl = jnp.cumsum(allowed, axis=0)  # (G, K) inclusive prefix per column
-    # sub-segment owning position s = number of fully-completed predecessors
-    g_of = jnp.sum(s_idx[None, :, None] >= incl.T[:, None, :], axis=-1)  # (K, slot)
-    g_c = jnp.clip(g_of, 0, G - 1)
-    k_grid = jnp.arange(K, dtype=jnp.int32)[:, None]
-    s_local = s_idx[None, :] - starts[g_c, k_grid]
-    return src_base[g_c, k_grid] + s_local
+        return st.out, st.recv_counts, st.new_count, drops, tuple(st.pending)
+    return st.out, st.recv_counts, st.new_count, drops
 
 
 def exchange_hierarchical(
@@ -499,8 +295,12 @@ def exchange_hierarchical(
     telemetry_buckets: int = 8,
     overflow: str = "drop",
     age: jax.Array = None,  # (C,) retain mode: rounds each lane has waited
+    pipeline_shards: int = 1,
 ):
-    """N-stage packed exchange over an N-D ``(slowest, …, fastest)`` mesh.
+    """N-stage packed exchange over an N-D ``(slowest, …, fastest)`` mesh —
+    one SpillExtract → Marshal → CountExchange → PayloadExchange composition
+    per mesh axis, ``AdvanceTier`` threading the sub-segment bookkeeping
+    between tiers and ``Unmarshal`` closing the final one.
 
     Dimension-ordered routing, fastest axis first: stage ``l`` combines
     traffic within axis ``l`` so every item lands on a rank whose digit ``l``
@@ -509,11 +309,12 @@ def exchange_hierarchical(
     once, padded per peer SEGMENT at that tier (``level_capacities[l]``
     rows), never per rank.
 
-    Budget: one payload + one count collective per mesh axis; extent-1 axes
-    skip their stage entirely (so a single-node mesh degenerates to
-    flat-exchange cost parity).  Returns ``(recv_packed, recv_counts, total,
-    drops)`` — counts are per *source group* of the slowest non-trivial axis,
-    unlike the flat backends' per-rank counts.
+    Budget: one payload + one count collective per mesh axis (× the
+    micro-shard count under pipelining); extent-1 axes skip their stage
+    entirely (so a single-node mesh degenerates to flat-exchange cost
+    parity).  Returns ``(recv_packed, recv_counts, total, drops)`` — counts
+    are per *source group* of the slowest non-trivial axis, unlike the flat
+    backends' per-rank counts.
 
     Marshal modes: the first non-trivial stage is the round's single local
     payload pass — in sort mode the destination-sort permutation is composed
@@ -525,6 +326,14 @@ def exchange_hierarchical(
     tier) and the per-stage count collectives — the sorted destination vector
     is never re-scanned (no per-tier ``segment_bounds_from_sorted`` neighbor
     compares), on either marshal path.
+
+    With ``pipeline_shards=S > 1`` each tier's Marshal/CountExchange/
+    PayloadExchange chain runs S times over ``level_capacities[l]/S``-row
+    micro-shards (interleaved — stage-l of shard k overlaps stage-(l−1) of
+    shard k+1 on an async fabric), non-final tiers reassemble the bulk
+    stage buffer locally (``stages.Reassemble`` — zero extra collectives),
+    and the final tier's shards compact straight into the receive queue at
+    their bulk positions.  Placement stays bit-exact with S=1.
 
     With ``telemetry`` a trailing ``RoundStats`` is returned: tier ``l``'s
     segment demand is the pre-clamp row total per peer slot COLUMN of stage
@@ -553,41 +362,37 @@ def exchange_hierarchical(
     C, W = packed.shape
     rec = TS.make_stats(len(level_sizes), telemetry_buckets) if telemetry else None
     retain = overflow == "retain"
-    seg_dest = None
-    pending = []  # pending spill blocks: one (rows, dest, age, n) per stage
-    spill_run = jnp.zeros((), send_counts.dtype)  # total rows parked so far
+    st = ST.RoundState(
+        packed=packed, perm=perm, send_counts=send_counts, marshal=marshal,
+        dest_clean=dest_clean, dest_rank=dest_rank, use_pallas=use_pallas,
+        retain=retain, age=age,
+    )
+    st.spill_run = jnp.zeros((), send_counts.dtype)  # total rows parked so far
+    st.drops = jnp.zeros((), send_counts.dtype)
     if retain:
-        if age is None:
-            age = jnp.zeros((C,), jnp.int32)
+        if st.age is None:
+            st.age = jnp.zeros((C,), jnp.int32)
         # Which global destination does sub-segment k of the current buffer
         # hold?  Identity at the start (sorted destination order); updated
         # after each non-final stage from digits all later-stage peers share.
-        seg_dest = jnp.arange(R, dtype=jnp.int32)
-
-    def gather(buf, rows, n_slots, slot):
-        if use_pallas:
-            from repro.kernels.marshal import ops as marshal_ops
-
-            return marshal_ops.fused_marshal(buf, rows, num_ranks=n_slots, slot=slot)
-        return jnp.take(buf, rows, axis=0).reshape(n_slots, slot, W)
+        st.seg_dest = jnp.arange(R, dtype=jnp.int32)
 
     # Sub-segment state, always exactly R entries: counts and buffer offsets
     # in the current buffer order (initially the sorted destination order,
     # digits slowest-major).  Each stage reinterprets the vector as
     # (rest, A_l) — its peer digit is the fastest-varying non-trivial field —
     # and afterwards prepends the source digit: (A_l, rest) flattened.
-    cnt = send_counts
-    base = jnp.cumsum(cnt) - cnt
-    buf, n_rows, via_perm = packed, C, True
-    drops = jnp.zeros((), send_counts.dtype)
+    st.cnt = send_counts
+    st.base = jnp.cumsum(st.cnt) - st.cnt
+    st.buf, st.n_rows, st.via_perm = packed, C, True
 
-    stages = [l for l in reversed(range(len(level_sizes))) if level_sizes[l] > 1]
-    if not stages:
+    tiers = [l for l in reversed(range(len(level_sizes))) if level_sizes[l] > 1]
+    if not tiers:
         # 1-rank mesh: the round is a local compaction — no collectives
-        allowed = jnp.minimum(cnt, capacity)
+        allowed = jnp.minimum(st.cnt, capacity)
         if marshal == "scatter":
             keep = (dest_clean < R) & (dest_rank < capacity)
-            out = _scatter(
+            out = ST.scatter_rows(
                 packed,
                 jnp.where(keep, dest_rank, capacity),
                 capacity,
@@ -595,13 +400,20 @@ def exchange_hierarchical(
             )
         else:
             rows = jnp.take(perm, jnp.clip(jnp.arange(capacity), 0, C - 1))
-            out = gather(packed, rows, 1, capacity)[0]
-        local_drops = jnp.sum(cnt - allowed)
+            if use_pallas:
+                from repro.kernels.marshal import ops as marshal_ops
+
+                out = marshal_ops.fused_marshal(
+                    packed, rows, num_ranks=1, slot=capacity
+                )[0]
+            else:
+                out = jnp.take(packed, rows, axis=0).reshape(1, capacity, W)[0]
+        local_drops = jnp.sum(st.cnt - allowed)
         if telemetry:
             # no stage ran: only the receiver-side compaction is observable
             rec = dataclasses.replace(
                 rec,
-                recv_total=jnp.sum(cnt).astype(jnp.int32),
+                recv_total=jnp.sum(st.cnt).astype(jnp.int32),
                 recv_drops=local_drops.astype(jnp.int32),
             )
             if retain:  # no stage clamp ran either: nothing to spill
@@ -611,47 +423,14 @@ def exchange_hierarchical(
             return out, allowed, allowed[0], local_drops, ()
         return out, allowed, allowed[0], local_drops
 
-    for i, l in enumerate(stages):
+    for i, l in enumerate(tiers):
         A, S = level_sizes[l], level_capacities[l]
-        cnt2d = cnt.reshape(R // A, A)  # rows: buffer order, cols: peer digit
-        allowed, starts = _clamp_subsegments(cnt2d, S)
-        stage_drops = jnp.sum(cnt2d - allowed)
-        if retain:
-            alf = allowed.reshape(-1)  # flat, current buffer/destination order
-            if via_perm:
-                # Sender-clamp spill from the INPUT lanes: the cut rows are
-                # the per-destination segment tails of the sorted order
-                # (allowed is indexed [d // A, d % A], so its row-major
-                # flatten is the per-destination allowance; at the first
-                # stage buffer order == destination order, and the stable
-                # in-bucket rank against the full destination IS the
-                # in-sub-segment rank — the scatter marshal's equivalence).
-                pending.append(_lanes_spill(
-                    packed, perm, age, alf, cnt - alf, base + alf,
-                    stage_drops, num_ranks=R, marshal=marshal,
-                    dest_clean=dest_clean, dest_rank=dest_rank,
-                ))
-            else:
-                # Mid-route park: buffer rows whose sub-segment tail this
-                # stage cut stay HERE; destination routing resumes them next
-                # round.  Tails are read straight out of the stage buffer
-                # (marshal-mode-agnostic: positions, not lanes) and
-                # re-addressed through ``seg_dest``; ages restart at 1 (age
-                # cannot ride the wire without changing the payload bytes).
-                k, pos = _spill_positions(capacity, cnt - alf, base + alf)
-                src = jnp.clip(pos, 0, n_rows - 1)
-                pending.append((
-                    jnp.take(buf, src, axis=0),
-                    jnp.take(seg_dest, k),
-                    jnp.ones((capacity,), jnp.int32),
-                    stage_drops,
-                ))
-            spill_run = spill_run + stage_drops
-            stage_drops = jnp.zeros_like(stage_drops)
-        drops = drops + stage_drops
+        st = ST.SpillExtract(
+            R, capacity, S, retain=retain, kind="tier", extent=A
+        )(st)
         if telemetry:
             # segment demand at tier l = pre-clamp rows per peer slot column
-            col_demand = jnp.sum(cnt2d, axis=0)
+            col_demand = jnp.sum(st.cnt.reshape(R // A, A), axis=0)
             rec = dataclasses.replace(
                 rec,
                 demand_hist=rec.demand_hist.at[l].set(
@@ -659,76 +438,54 @@ def exchange_hierarchical(
                 ),
                 demand_max=rec.demand_max.at[l].set(jnp.max(col_demand)),
                 demand_total=rec.demand_total.at[l].set(jnp.sum(col_demand)),
-                sent_rows=rec.sent_rows.at[l].set(jnp.sum(allowed)),
-                stage_drops=rec.stage_drops.at[l].set(stage_drops),
+                sent_rows=rec.sent_rows.at[l].set(jnp.sum(st.allowed)),
+                stage_drops=rec.stage_drops.at[l].set(st.stage_drops),
             )
-        if via_perm and marshal == "scatter":
-            # first non-trivial stage, sort-free: scatter each row straight
-            # into the stage layout — the payload's single local pass of the
-            # round.  Sub-segment (rest, d_l) holds exactly one destination,
-            # so the in-bucket rank IS the in-sub-segment position; ranks at
-            # or past the stage clamp land in the trash slot (§3.3).
-            row = jnp.clip(dest_clean // A, 0, R // A - 1)
-            col = jnp.clip(dest_clean % A, 0, A - 1)
-            keep = (dest_clean < R) & (dest_rank < allowed[row, col])
-            dstpos = jnp.where(
-                keep, col * S + starts[row, col] + dest_rank, A * S
-            )
-            send = _scatter(packed, dstpos, A * S, use_pallas=use_pallas)
-            send = send.reshape(A, S, W)
-        else:
-            pos = _subsegment_gather(allowed, starts, base.reshape(R // A, A), S)
-            if via_perm:
-                # first non-trivial stage: compose the sort permutation
-                # straight into the send gather — the payload's single read
-                # of the round
-                rows = jnp.take(perm, jnp.clip(pos, 0, C - 1).reshape(-1))
-            else:
-                rows = jnp.clip(pos, 0, n_rows - 1).reshape(-1)
-            send = gather(buf, rows, A, S)
-
-        if i == len(stages) - 1:
+        mar = ST.Marshal(A, S, shards=pipeline_shards, kind="tier", num_ranks=R)
+        if i == len(tiers) - 1:
             # final stage: per-source-group totals suffice — blocks are
             # contiguous prefixes, compacted straight into the receive queue
-            recv_counts = _a2a(jnp.sum(allowed, axis=0)[:, None], axis_name[l])
-            recv_counts = recv_counts.reshape(-1)
-            recv = _a2a(send, axis_name[l])
-            out, new_count, recv_drops = _compact_blocks(
-                recv, recv_counts, capacity, use_pallas=use_pallas,
-                front=jnp.minimum(spill_run, capacity) if retain else None,
+            chain = (
+                mar,
+                ST.CountExchange(axis_name[l], kind="final"),
+                ST.PayloadExchange(axis_name[l]),
+                ST.Unmarshal(capacity, shards=pipeline_shards, slot=S, kind="final"),
             )
+            if pipeline_shards > 1:
+                st = ST.Pipelined(chain, pipeline_shards)(st)
+            else:
+                st = ST.compose(*chain)(st)
+            total_drops = st.drops + st.recv_drops
             if telemetry:
                 rec = dataclasses.replace(
                     rec,
-                    recv_total=jnp.sum(recv_counts).astype(jnp.int32),
-                    recv_drops=recv_drops.astype(jnp.int32),
+                    recv_total=jnp.sum(st.recv_counts).astype(jnp.int32),
+                    recv_drops=st.recv_drops.astype(jnp.int32),
                 )
                 if retain:
-                    return (out, recv_counts, new_count,
-                            drops + recv_drops, tuple(pending), rec)
-                return out, recv_counts, new_count, drops + recv_drops, rec
+                    return (st.out, st.recv_counts, st.new_count,
+                            total_drops, tuple(st.pending), rec)
+                return st.out, st.recv_counts, st.new_count, total_drops, rec
             if retain:
-                return (out, recv_counts, new_count,
-                        drops + recv_drops, tuple(pending))
-            return out, recv_counts, new_count, drops + recv_drops
+                return (st.out, st.recv_counts, st.new_count,
+                        total_drops, tuple(st.pending))
+            return st.out, st.recv_counts, st.new_count, total_drops
 
         # count collective for axis l: per-sub-segment survivor counts, so
         # the receiver can address every sub-segment of each incoming block
-        rcv = _a2a(allowed.T, axis_name[l])  # (A, R//A): [src digit, sub-seg]
-        recv = _a2a(send, axis_name[l])  # payload collective for axis l
-        cnt = rcv.reshape(-1)  # new buffer order: (s_l, previous order − d_l)
-        base = (
-            jnp.cumsum(rcv, axis=1) - rcv
-            + jnp.arange(A, dtype=jnp.int32)[:, None] * S
-        ).reshape(-1)
-        buf, n_rows, via_perm = recv.reshape(A * S, W), A * S, False
-        if retain:
-            # Sub-segment k of the NEW buffer order (s_l, rest) holds the
-            # destination whose digit l equals MINE — shared with every peer
-            # of the remaining (slower) stages, so the map stays
-            # rank-consistent with zero extra communication.
-            me_l = jax.lax.axis_index(axis_name[l])
-            seg_dest = jnp.tile(seg_dest.reshape(R // A, A)[:, me_l], A)
+        chain = (
+            mar,
+            ST.CountExchange(
+                axis_name[l], kind="tier", shards=pipeline_shards, slot=S
+            ),
+            ST.PayloadExchange(axis_name[l], collect=pipeline_shards > 1),
+        )
+        if pipeline_shards > 1:
+            st = ST.Pipelined(chain, pipeline_shards)(st)
+            st = ST.Reassemble(A, S)(st)
+        else:
+            st = ST.compose(*chain)(st)
+        st = ST.AdvanceTier(A, S, axis_name[l], retain=retain, num_ranks=R)(st)
 
 
 def exchange_ragged(
@@ -748,6 +505,7 @@ def exchange_ragged(
     telemetry_buckets: int = 8,
     overflow: str = "drop",
     age: jax.Array = None,  # (C,) retain mode: rounds each lane has waited
+    pipeline_shards: int = 1,
 ):
     """ragged_all_to_all exchange — the MPI_Alltoallv / GPU-RDMA analogue.
 
@@ -761,14 +519,23 @@ def exchange_ragged(
     ``overflow="retain"`` the rows past each segment's control-plane
     allowance (``send_sizes``) come back as a pending spill block instead
     of being dropped — the shipped segments are unchanged.
+
+    With ``pipeline_shards=S > 1`` the single collective becomes S: shard
+    ``k`` ships rows ``[k·capacity/S, (k+1)·capacity/S)`` of every
+    destination segment (offsets shifted, sizes clipped — the union of the
+    shard segments is exactly the bulk segments at the same landing
+    offsets), each with its own count all-gather.  The marshal stays ONE
+    local pass; only the wire movement is sharded.
     """
     del peer_capacity  # segments are contiguous: no slot gather
     retain = overflow == "retain"
     me = jax.lax.axis_index(axis_name)
     off = jnp.cumsum(send_counts) - send_counts
 
-    cnt = exchange_count_matrix(send_counts, axis_name)  # the ONE count collective
-    send_sizes, output_offsets, recv_sizes = _ragged_control_plane(cnt, me, capacity)
+    cnt = exchange_count_matrix(send_counts, axis_name)  # shard 0's count collective
+    send_sizes, output_offsets, recv_sizes = ST.ragged_control_plane(
+        cnt, me, capacity
+    )
     send_drops = jnp.sum(send_counts - send_sizes)
     front = None
     if retain:
@@ -776,7 +543,7 @@ def exchange_ragged(
         # allowance here is the control plane's ``send_sizes``.
         if age is None:
             age = jnp.zeros((packed.shape[0],), jnp.int32)
-        pending = (_lanes_spill(
+        pending = (ST.lanes_spill(
             packed, perm, age, send_sizes, send_counts - send_sizes,
             off + send_sizes, send_drops, num_ranks=num_ranks,
             marshal=marshal, dest_clean=dest_clean, dest_rank=dest_rank,
@@ -788,21 +555,40 @@ def exchange_ragged(
         keep = dest_clean < num_ranks
         pos = off[jnp.clip(dest_clean, 0, num_ranks - 1)] + dest_rank
         dstpos = jnp.where(keep, pos, packed.shape[0])
-        sorted_packed = _scatter(
+        sorted_packed = ST.scatter_rows(
             packed, dstpos, packed.shape[0], use_pallas=use_pallas
         )
     else:
         sorted_packed = jnp.take(packed, perm, axis=0)  # the ONE payload permute
     out = jnp.zeros((capacity, packed.shape[1]), packed.dtype)
-    out = compat.ragged_all_to_all(  # the ONE payload collective
-        sorted_packed,
-        out,
-        input_offsets=off,
-        send_sizes=send_sizes,
-        output_offsets=output_offsets,
-        recv_sizes=recv_sizes,
-        axis_name=axis_name,
-    )
+    if pipeline_shards == 1:
+        out = compat.ragged_all_to_all(  # the ONE payload collective
+            sorted_packed,
+            out,
+            input_offsets=off,
+            send_sizes=send_sizes,
+            output_offsets=output_offsets,
+            recv_sizes=recv_sizes,
+            axis_name=axis_name,
+        )
+    else:
+        chunk = capacity // pipeline_shards
+        for k in range(pipeline_shards):
+            if k > 0:
+                # shard k's own count collective + replicated control plane
+                cnt_k = exchange_count_matrix(send_counts, axis_name)
+                s_ss, s_oo, s_rs = ST.ragged_control_plane(cnt_k, me, capacity)
+            else:
+                s_ss, s_oo, s_rs = send_sizes, output_offsets, recv_sizes
+            out = compat.ragged_all_to_all(  # shard k's payload collective
+                sorted_packed,
+                out,
+                input_offsets=off + jnp.minimum(k * chunk, s_ss),
+                send_sizes=jnp.clip(s_ss - k * chunk, 0, chunk),
+                output_offsets=s_oo + jnp.minimum(k * chunk, s_ss),
+                recv_sizes=jnp.clip(s_rs - k * chunk, 0, chunk),
+                axis_name=axis_name,
+            )
     new_count = jnp.sum(recv_sizes)
     recv_cut = jnp.zeros((), send_counts.dtype)
     if retain:
@@ -855,6 +641,7 @@ def exchange_onehot(
     telemetry_buckets: int = 8,
     overflow: str = "drop",
     age: jax.Array = None,  # unused: the oracle has no sender clamp
+    pipeline_shards: int = 1,
 ):
     """All-gather reference oracle (tests only): every rank sees everything,
     selects what is addressed to it, and compacts stably by (source, lane).
@@ -863,9 +650,17 @@ def exchange_onehot(
     With ``overflow="retain"`` the pending spill plan is empty by
     construction — there is no sender clamp to spill from; the receiver
     clamp stays a counted drop (there is no bounded place left to keep those
-    rows).
+    rows).  Bulk-synchronous by design: the all-gather has no per-peer slot
+    rows to micro-shard, so ``pipeline_shards > 1`` raises.
     """
     del peer_capacity, age
+    if pipeline_shards != 1:
+        raise ValueError(
+            "exchange='onehot' is the bulk-synchronous reference oracle: the "
+            "all-gather ships whole queues, so there is no per-peer slot "
+            "dimension to micro-shard — pipeline_shards must be 1 "
+            f"(got {pipeline_shards})"
+        )
     retain = overflow == "retain"
     R = num_ranks
     me = jax.lax.axis_index(axis_name)
@@ -874,7 +669,7 @@ def exchange_onehot(
     if marshal == "scatter":
         keep = dest_clean < R
         pos = off[jnp.clip(dest_clean, 0, R - 1)] + dest_rank
-        sorted_packed = _scatter(
+        sorted_packed = ST.scatter_rows(
             packed, jnp.where(keep, pos, cap), cap, use_pallas=use_pallas
         )
     else:

@@ -140,6 +140,19 @@ class ForwardConfig:
         the retained rows, and the onehot oracle's receiver clamp) — both
         still counted in ``drops``; size ``capacity`` at the §6.3 worst case
         to make them unreachable.
+      pipeline_shards: micro-shard count S for software-pipelined forwarding
+        (the overlap law; default 1 = the bulk-synchronous oracle).  The
+        exchange's per-peer slot rows are split into S chunks whose
+        marshal→counts→payload→unmarshal chains are issued interleaved, so
+        an async-collective backend keeps shard k's payload collective in
+        flight while shard k−1 unmarshals and shard k+1 marshals (on
+        hierarchical routes, stage-l of shard k additionally overlaps
+        stage-(l−1) of shard k+1).  Placement is bit-exact with S=1 and
+        payload wire bytes are conserved; the collective inventory becomes
+        S payload + S count collectives per mesh axis.  Must divide the
+        queue capacity (and each per-tier slot budget); the bulk-synchronous
+        backends without a slot dimension — the onehot oracle and ring
+        cycling — reject S > 1.
     """
 
     axis_name: Any
@@ -158,6 +171,7 @@ class ForwardConfig:
     telemetry_window: int = 16
     telemetry_buckets: int = 8
     overflow: str = "drop"
+    pipeline_shards: int = 1
 
     def __post_init__(self):
         if self.exchange not in _EXCHANGES:
@@ -185,6 +199,23 @@ class ForwardConfig:
                 f"num_ranks ({self.num_ranks}) and capacity ({self.capacity}) "
                 "must be positive"
             )
+        if self.pipeline_shards < 1:
+            raise ValueError(
+                f"pipeline_shards ({self.pipeline_shards}) must be >= 1 "
+                "(1 = the bulk-synchronous round)"
+            )
+        if self.capacity % self.pipeline_shards:
+            raise ValueError(
+                f"pipeline_shards ({self.pipeline_shards}) must divide the "
+                f"queue capacity ({self.capacity}) so every micro-shard "
+                "covers an equal slice of the wavefront"
+            )
+        if self.pipeline_shards > 1 and self.exchange == "onehot":
+            raise ValueError(
+                "pipeline_shards > 1 is not supported by exchange='onehot': "
+                "the all-gather oracle is bulk-synchronous by design (whole "
+                "queues ship at once — no per-peer slot rows to micro-shard)"
+            )
         if self.exchange == "hierarchical":
             self._init_hierarchical()
             return
@@ -203,6 +234,12 @@ class ForwardConfig:
                 object.__setattr__(
                     self, "peer_capacity",
                     max(1, -(-self.capacity // self.num_ranks) * 2),
+                )
+            if self.peer_capacity % self.pipeline_shards:
+                raise ValueError(
+                    f"pipeline_shards ({self.pipeline_shards}) must divide "
+                    f"peer_capacity ({self.peer_capacity}): micro-shards are "
+                    "equal slices of the per-peer slot rows"
                 )
         elif self.peer_capacity:
             # ragged segments are contiguous (no slots); onehot gathers all
@@ -291,6 +328,12 @@ class ForwardConfig:
                     f"node_capacity {self.node_capacity} contradicts "
                     f"level_capacities {caps} (it aliases the slowest tier)"
                 )
+        if any(c % self.pipeline_shards for c in caps):
+            raise ValueError(
+                f"pipeline_shards ({self.pipeline_shards}) must divide every "
+                f"level_capacities entry ({caps}): micro-shards are equal "
+                "slices of each tier's per-segment slot rows"
+            )
         object.__setattr__(self, "level_sizes", sizes)
         object.__setattr__(self, "level_capacities", caps)
         # keep the legacy aliases live so 2-level callers read either form
@@ -392,6 +435,7 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig, *, age=None, health=None):
         dest_rank=dest_rank,
         telemetry=cfg.telemetry,
         telemetry_buckets=cfg.telemetry_buckets,
+        pipeline_shards=cfg.pipeline_shards,
     )
     if cfg.exchange == "hierarchical":
         kwargs.update(

@@ -175,6 +175,7 @@ def _intra_config(cfg: ForwardConfig) -> ForwardConfig:
         telemetry_window=cfg.telemetry_window,
         telemetry_buckets=cfg.telemetry_buckets,
         overflow=cfg.overflow,
+        pipeline_shards=cfg.pipeline_shards,
     )
 
 

@@ -120,6 +120,7 @@ def _meta_of(ctx, rnd: int) -> Dict[str, Any]:
         "overflow": cfg.overflow,
         "telemetry": bool(cfg.telemetry),
         "telemetry_window": int(cfg.telemetry_window),
+        "pipeline_shards": int(cfg.pipeline_shards),
     }
 
 

@@ -54,6 +54,15 @@ def pytest_configure(config):
         "conservation watchdog.  Part of tier-1; CI can select with "
         "`-m recovery`.",
     )
+    config.addinivalue_line(
+        "markers",
+        "pipeline: exercises the ISSUE-8 overlap law — micro-shard pipelined "
+        "forwarding (``ForwardConfig.pipeline_shards``) built on the stage-"
+        "graph exchange layer (repro.core.stages).  Placement must stay "
+        "bit-exact vs the bulk round and the per-axis collective budget "
+        "scales to S payload + S count collectives.  Part of tier-1; CI can "
+        "select with `-m pipeline`.",
+    )
 
 
 @pytest.fixture(autouse=True)

@@ -247,3 +247,28 @@ def test_retain_beats_drop_where_it_matters(mesh8):
     assert retained["drops"] == 0 and retained["lost"] == 0
     assert retained["delivered_total"] == sc.emitted
     assert retained["rounds"] > dropped["rounds"]  # the price: extra rounds
+
+
+# ------------------------------------------------- pipelined (the overlap law)
+@pytest.mark.pipeline
+@pytest.mark.parametrize("marshal", ["sort", "scatter"])
+@pytest.mark.parametrize("name", SCENARIO_IDS)
+def test_flat_retain_pipelined_matches_numpy_twin(mesh8, name, marshal):
+    """The overlap law under chaos: micro-shard pipelining
+    (``pipeline_shards=2`` — the starved ``peer_capacity=2`` splits into
+    1-row chunks, the worst case) keeps every scenario's retain trajectory
+    bit-exact with the numpy twin — same deliveries, same rounds to drain,
+    same retained rows, same worst-case age as the bulk round."""
+    sc = SCENARIOS[name]
+    sim = simulate_flat_retain(sc, peer_capacity=S, capacity=FLAT_CAP)
+    res = run_scenario(
+        mesh8, sc, capacity=FLAT_CAP, peer_capacity=S, overflow="retain",
+        marshal=marshal, max_rounds=64, pipeline_shards=2,
+    )
+    np.testing.assert_array_equal(res["delivered"], expected_by_rank(sc))
+    np.testing.assert_array_equal(res["delivered"], sim["delivered"])
+    assert res["drops"] == 0 and res["lost"] == 0 and res["done"]
+    assert res["resident"] == 0
+    assert res["rounds"] == sim["rounds"]
+    assert res["retained_rows"] == sim["retained_rows"]
+    assert res["age_max"] == sim["age_max"]

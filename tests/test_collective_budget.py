@@ -507,3 +507,134 @@ def test_cycle_hop_ships_one_packed_buffer(mesh8):
     # items (9 words) + dest (1 word) packed together → (CAP, 10) u32
     payload = [b for b in perms if b >= CAP * 4]
     assert payload == [CAP * (WORDS + 1) * 4], ops
+
+
+# ----------------------------------------------- pipelined budget (ISSUE 8)
+@pytest.mark.pipeline
+@pytest.mark.parametrize("S", [2, 4])
+def test_pipelined_padded_round_budget_S_payload_S_count(mesh8, S):
+    """The overlap law's budget: ``pipeline_shards=S`` lowers to exactly S
+    payload all_to_alls (one peer-chunk each) + S count all_to_alls — and
+    the S chunks sum to the bulk round's wire bytes exactly (pipelining
+    re-times the traffic, it never adds any)."""
+    cfg = ForwardConfig("data", R, CAP, exchange="padded", pipeline_shards=S)
+    ops = collective_ops(_lower_one_round(mesh8, cfg))
+    a2a = [b for k, b in ops if k == "all-to-all"]
+    chunk = cfg.peer_capacity // S
+    payload = [b for b in a2a if b >= chunk * WORDS * 4]
+    counts = [b for b in a2a if b < chunk * WORDS * 4]
+    assert payload == [R * chunk * WORDS * 4] * S, f"S={S}: {a2a}"
+    assert counts == [R * 4] * S, f"S={S}: {a2a}"
+    assert sum(payload) == R * cfg.peer_capacity * WORDS * 4  # bytes conserved
+
+
+@pytest.mark.pipeline
+def test_pipelined_3level_budget_S_per_axis(mesh_pods222):
+    """Per-axis overlap budget: on the (pod, node, device) route with
+    ``pipeline_shards=2``, EVERY tier lowers to 2 chunk-sized payload
+    all_to_alls + 2 count all_to_alls — the micro-shards pipeline each
+    fabric independently, and no tier escapes its chunking."""
+    from repro.roofline.analysis import group_tier
+
+    sizes = (2, 2, 2)
+    S = 2
+    cfg = ForwardConfig(
+        ("pod", "node", "device"), R, CAP, exchange="hierarchical",
+        level_sizes=sizes, pipeline_shards=S,
+    )
+    ops = collective_ops(_lower_hier_round(mesh_pods222, cfg), with_groups=True)
+    threshold = min(c // S for c in cfg.level_capacities) * WORDS * 4
+    a2a = [(b, group_tier(g, sizes)) for k, b, g in ops if k == "all-to-all"]
+    payload = [(b, t) for b, t in a2a if b >= threshold]
+    counts = [(b, t) for b, t in a2a if b < threshold]
+    assert sorted(t for _b, t in payload) == [0, 0, 1, 1, 2, 2], a2a
+    for b, t in payload:
+        assert b == sizes[t] * (cfg.level_capacities[t] // S) * WORDS * 4, (
+            payload
+        )
+    assert sorted(t for _b, t in counts) == [0, 0, 1, 1, 2, 2], a2a
+
+
+# The pre-refactor (PR 7) lowered HLO of one forward round, snapshotted with
+# THIS harness's kernel before exchange.py was rebuilt on the stage graph.
+# ``pipeline_shards=1`` must reproduce it byte for byte — the stage-graph
+# refactor and the bulk fast path are provably the same program.  The ragged
+# backend has no golden: this container's JAX predates ragged_all_to_all, so
+# the pre-refactor code never lowered it here (its S=1 path is covered by
+# test_ragged_round_has_one_payload_and_one_count_collective when present).
+_PRE_REFACTOR_SHA256 = {
+    "padded_sort": "f16365d26b599b27bd1a166d74fceaa5f90259332998d16b71d72d4439220717",
+    "padded_scatter": "0d857013e3f21a9a541a26394f81fe9a9f31733f99428977d1bfe7e98e732f79",
+    "padded_retain": "a8689e0fbf084f193636618b2566b1292aa82c9aa3f6e03f9423b91f70ae5b9d",
+    "padded_telemetry": "f16365d26b599b27bd1a166d74fceaa5f90259332998d16b71d72d4439220717",
+    "onehot": "fac130fe7f8774f30b03413382c9a995a8ebf2c949fa1e0c940acbde1297f660",
+    "hier3_sort": "cadd1301d5b03a763651c7898ffd6867eca0578c85f8a96bf1ab323cf918ef55",
+    "hier3_scatter": "e7598ae0e9d686f722ce48b9d3646a15ca4b2099cf81aa153c4bfc8f9bf81fe3",
+    "hier3_retain": "b643d76cf02f463482cba167be465431a026df7d38c4354bceaeb4bda891431d",
+}
+
+_GOLDEN_CASES = {
+    "padded_sort": ("mesh8", dict(exchange="padded")),
+    "padded_scatter": ("mesh8", dict(exchange="padded", marshal="scatter")),
+    "padded_retain": ("mesh8", dict(exchange="padded", overflow="retain")),
+    "padded_telemetry": ("mesh8", dict(exchange="padded", telemetry=True)),
+    "onehot": ("mesh8", dict(exchange="onehot")),
+    "hier3_sort": (
+        "mesh_pods222", dict(exchange="hierarchical", level_sizes=(2, 2, 2),
+                             level_capacities=(8, 8, 8)),
+    ),
+    "hier3_scatter": (
+        "mesh_pods222", dict(exchange="hierarchical", level_sizes=(2, 2, 2),
+                             level_capacities=(8, 8, 8), marshal="scatter"),
+    ),
+    "hier3_retain": (
+        "mesh_pods222", dict(exchange="hierarchical", level_sizes=(2, 2, 2),
+                             level_capacities=(8, 8, 8), overflow="retain"),
+    ),
+}
+
+
+def _lower_golden(mesh, cfg):
+    """The snapshot harness: arity-agnostic (retain/telemetry rounds return
+    more, the extras stay unused exactly as in the golden lowering)."""
+    axes = cfg.axis_name
+
+    def kernel(_x):
+        q = make_queue(ray_proto(), CAP)
+        me = jax.lax.axis_index(axes)
+        q = enqueue(
+            q, make_rays(10), ((me + jnp.arange(10)) % R).astype(jnp.int32),
+            jnp.ones(10, bool),
+        )
+        res = forward_work(q, cfg)
+        nq, total = res[0], res[1]
+        return nq.count[None], total, nq.items.tmin
+
+    spec = P(axes)
+    return jax.jit(
+        compat.shard_map(
+            kernel, mesh=mesh, in_specs=spec, out_specs=(spec, P(), spec)
+        )
+    ).lower(jnp.arange(8.0)).as_text()
+
+
+@pytest.mark.pipeline
+@pytest.mark.skipif(
+    jax.__version__ != "0.4.37",
+    reason="golden HLO digests are pinned to the container's JAX lowering",
+)
+@pytest.mark.parametrize("case", sorted(_GOLDEN_CASES))
+def test_bulk_lowering_bitidentical_to_pre_refactor(request, case):
+    """ISSUE 8 acceptance: with ``pipeline_shards=1`` the stage-graph
+    exchange lowers BYTE-identically to the pre-refactor monolith — same
+    StableHLO text, so same compiled program, no trust required."""
+    import hashlib
+
+    fixture, kw = _GOLDEN_CASES[case]
+    mesh = request.getfixturevalue(fixture)
+    axes = "data" if fixture == "mesh8" else ("pod", "node", "device")
+    cfg = ForwardConfig(axes, R, CAP, pipeline_shards=1, **kw)
+    got = hashlib.sha256(_lower_golden(mesh, cfg).encode()).hexdigest()
+    assert got == _PRE_REFACTOR_SHA256[case], (
+        f"{case}: S=1 lowering diverged from the pre-refactor HLO"
+    )

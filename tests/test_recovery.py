@@ -417,3 +417,37 @@ def test_rebalance_evacuates_unhealthy_rank(mesh8):
             make_queue(ray_proto(), FLAT_CAP), hier, scope="intra",
             health=jnp.ones(R, bool),
         )
+
+
+# ------------------------------------------------- pipelined (the overlap law)
+@pytest.mark.pipeline
+def test_preempt_resume_bitexact_pipelined(tmp_path, mesh8):
+    """Recovery law x overlap law: a micro-shard pipelined drive
+    (``pipeline_shards=2``) checkpoints and resumes with byte-identical
+    boundary digests, and its answer equals the bulk (unsharded) drive's —
+    pipelining is invisible to the carry."""
+    sc = capacity_drought()
+    kw = dict(
+        capacity=FLAT_CAP, peer_capacity=S, overflow="retain",
+        pipeline_shards=2,
+    )
+    ref = run_scenario(
+        mesh8, sc, capacity=FLAT_CAP, peer_capacity=S, overflow="retain"
+    )
+    a = run_scenario_checkpointed(
+        mesh8, sc, ckpt_dir=tmp_path / "a", checkpoint_every=3, keep=99, **kw
+    )
+    b = run_scenario_checkpointed(
+        mesh8, sc, ckpt_dir=tmp_path / "b", checkpoint_every=3, keep=99,
+        preempt_at=5, **kw
+    )
+    assert b["preempted"] and not a["preempted"]
+    np.testing.assert_array_equal(a["delivered"], ref["delivered"])
+    np.testing.assert_array_equal(b["delivered"], ref["delivered"])
+    assert a["rounds"] == b["rounds"] == ref["rounds"]
+    assert a["lost"] == b["lost"] == 0
+    da, db = boundary_digests(tmp_path / "a"), boundary_digests(tmp_path / "b")
+    common = sorted(set(da) & set(db))
+    assert len(common) >= 3
+    for step in common:
+        assert da[step] == db[step], f"state diverged at boundary {step}"
