@@ -139,6 +139,10 @@ def _emit_kernel(cfg, n_emit, cap, ballast_iters=0):
         if cfg.overflow == "retain":
             # same trick: the age vector keeps the spill compaction live
             telem_sum = telem_sum + jnp.sum(res[2])
+        if cfg.flow == "credit":
+            # and the returned credit vector keeps the advert/grant plumbing
+            # live (credits=None: the uncontended full-capacity assumption)
+            telem_sum = telem_sum + jnp.sum(res[3])
         if ballast_iters:
             # app-realistic per-round compute (a ray-march-shaped loop over
             # received payload) folded in through a branch XLA cannot

@@ -69,6 +69,17 @@
                          mid-burst two-rank brownout must drain lossless,
                          matching the numpy twin's trajectory.  FAILS on
                          any violation.
+  fwd_walltime_flow_*    ISSUE 9: retain-mode forwarding walltime with
+                         ``flow`` open vs credit on the fully-credited happy
+                         path — the advert column and grant arithmetic must
+                         be ~free when nobody is starved.
+  chaos_backpressure_*   ISSUE 9: the two overload scenarios (fixed hot-pair
+                         saturation, full-width incast) run open vs credit
+                         with goodput/waste accounting per row.  The section
+                         FAILS unless credit delivers everything with zero
+                         receiver drops, bounded occupancy, and an
+                         advert-only first round where open flow wastes >30%
+                         of its wire rows.
   sort_throughput_*      §4.2.1 key pack+sort throughput (keys/s), XLA vs
                          Pallas(interpret) paths.
   app_*                  §5 application throughputs (CPU, small scenes).
@@ -109,8 +120,14 @@ ballasted flat points whose buffers exceed the cache — where the locality
 mechanism applies; pipelining exists only for walltime, so ANY regression
 there defeats it — with the phase-profile overlap model bracketing the
 measured ratio.  BENCH_PR8.json is this gate's dump.
+``--compare open,credit`` is the PR-9 gate: credit-flow walltime must stay
+within a 1.05× geomean of open flow on the fully-credited happy path, and
+the chaos_backpressure acceptance must hold (credit lossless with bounded
+occupancy on both overload scenarios where open wastes >30% of its wire
+rows) — BENCH_PR9.json is this gate's dump.
 ``--autotune`` runs the autotune_drift section alone; ``--chaos`` runs the
-chaos_lossless + chaos_recovery acceptance sections alone.
+chaos_lossless + chaos_recovery + chaos_backpressure acceptance sections
+alone.
 
 Every ``--json`` dump carries provenance: git SHA, jax version, platform,
 the command line, and the ``ForwardConfig`` fields + mesh shape of each
@@ -1090,6 +1107,138 @@ def chaos_recovery():
     )
 
 
+# --------------------------------- ISSUE 9: backpressure (credit flow)
+def fwd_walltime_flow(samples=8):
+    """Credit-flow overhead sweep on the HAPPY PATH (every receiver fully
+    credited, nothing gated): the same retain-mode forwarding round with
+    ``flow`` open vs credit (flat padded + 3-level hierarchical), timed
+    interleaved per point.  Returns ``{(tag, variant, n_emit): us}`` for the
+    ``--compare open,credit`` gate (credit/open walltime geomean must stay
+    ≤ 1.05 — the advert column and the grant arithmetic must be ~free when
+    nobody is starved)."""
+    from repro.core import ForwardConfig
+    from repro.launch.mesh import make_pod_mesh
+
+    mesh_flat = _mesh8()
+    mesh_pod = make_pod_mesh(2, 2, 2)
+    axes3 = ("pod", "node", "device")
+    times = {}
+    for n_emit in (256, 2048):
+        cap = max(256, n_emit * 2)
+        points = (
+            (
+                "flat", mesh_flat, "data",
+                lambda f: ForwardConfig(
+                    "data", 8, cap, exchange="padded", overflow="retain",
+                    flow=f,
+                ),
+            ),
+            (
+                "hier3", mesh_pod, axes3,
+                lambda f: ForwardConfig(
+                    axes3, 8, cap, exchange="hierarchical",
+                    level_sizes=(2, 2, 2), overflow="retain", flow=f,
+                ),
+            ),
+        )
+        for tag, mesh, axes, mk_cfg in points:
+            best = _paired_times(
+                {"open": mk_cfg("open"), "credit": mk_cfg("credit")},
+                mesh, axes, n_emit, cap, samples,
+            )
+            record_cfg(f"flow_{tag}_n{n_emit}", mk_cfg("credit"), mesh)
+            for variant, us in best.items():
+                times[(tag, variant, n_emit)] = us
+                rays_s = 8 * n_emit / (us / 1e6)
+                emit(
+                    f"fwd_walltime_flow_{tag}_{variant}_n{n_emit}", us,
+                    f"rays_per_s={rays_s:.2e}",
+                )
+    return times
+
+
+def chaos_backpressure():
+    """The ISSUE-9 acceptance run: the two overload scenarios (fixed
+    hot-pair saturation, full-width incast) under queue capacities their
+    offered load overwhelms, open vs credit flow.  Records per-scenario
+    goodput/waste accounting and RAISES unless (a) OPEN flow wastes >30%%
+    of its wire rows on receiver drops — the configs must keep demonstrating
+    the collapse — while (b) CREDIT flow on the IDENTICAL schedule delivers
+    every row with zero receiver drops, zero emission overflow, a
+    payload-free first round (the zero-credit cold start), occupancy
+    bounded by the configured queues, and a clean drain.  Graceful
+    degradation must trip CI when it regresses, not trend a row."""
+    from repro.chaos import overload_scenarios, run_scenario
+
+    mesh = _mesh8()
+    # per-scenario (capacity, slot): each pins open-flow waste >30% while
+    # staying large enough that the gated emitter never clips a seed row
+    caps = {"sustained_overload": (16, 4), "incast_collapse": (32, 8)}
+    problems = []
+    for sc in overload_scenarios(8):
+        C, S = caps[sc.name]
+        rows = {}
+        for flow in ("open", "credit"):
+            t0 = time.perf_counter()
+            res = run_scenario(
+                mesh, sc, capacity=C, peer_capacity=S, overflow="retain",
+                flow=flow, max_rounds=256,
+            )
+            dt = time.perf_counter() - t0
+            rows[flow] = res
+            waste = res["wasted_wire_rows"] / max(res["wire_rows"], 1)
+            emit(
+                f"chaos_backpressure_{sc.name}_{flow}", dt * 1e6,
+                f"emitted={res['emitted']};delivered={res['delivered_total']}"
+                f";drops={res['drops']};lost={res['lost']}"
+                f";goodput={res['goodput']:.3f};waste_frac={waste:.3f}"
+                f";emit_overflow={res['emit_overflow']}"
+                f";rounds={res['rounds']};age_max={res.get('age_max', 0)}",
+            )
+            if res["lost"] != 0:  # conservation broken in EITHER mode
+                problems.append(f"{sc.name}/{flow}: lost={res['lost']}")
+        op, cr = rows["open"], rows["credit"]
+        waste = op["wasted_wire_rows"] / max(op["wire_rows"], 1)
+        if waste <= 0.30:
+            problems.append(
+                f"{sc.name}/open: wastes only {waste:.1%} of wire rows — the "
+                "overload no longer demonstrates the credit win"
+            )
+        if cr["drops"] != 0 or cr["emit_overflow"] != 0 or not cr["done"]:
+            problems.append(
+                f"{sc.name}/credit: drops={cr['drops']} "
+                f"emit_overflow={cr['emit_overflow']} done={cr['done']}"
+            )
+        if cr["delivered_total"] != sc.emitted:
+            problems.append(
+                f"{sc.name}/credit: delivered {cr['delivered_total']} != "
+                f"emitted {sc.emitted}"
+            )
+        if cr["goodput"] < op["goodput"] or cr["goodput"] != 1.0:
+            problems.append(
+                f"{sc.name}: credit goodput {cr['goodput']:.3f} must be 1.0 "
+                f"(open: {op['goodput']:.3f})"
+            )
+        if int(np.asarray(cr["recv_trace"])[0]) != 0:
+            problems.append(
+                f"{sc.name}/credit: first round shipped payload before any "
+                "receiver advertised"
+            )
+        if int(np.asarray(cr["retained_trace"]).max()) > 8 * C:
+            problems.append(
+                f"{sc.name}/credit: retained rows exceed the configured "
+                f"queues ({int(np.asarray(cr['retained_trace']).max())} > "
+                f"{8 * C}) — occupancy unbounded"
+            )
+    if problems:
+        raise RuntimeError("backpressure gate failed: " + "; ".join(problems))
+    print(
+        "# backpressure ok: open flow wastes >30% wire rows on both overload "
+        "scenarios, credit flow drains both lossless with goodput 1.0, "
+        "bounded occupancy, and an advert-only first round"
+    )
+
+
 # ------------------------------------- ISSUE 4: sort vs scatter marshal
 def _paired_marshal_times(mk_cfg, mesh, axes, n_emit, cap, samples):
     return _paired_times(
@@ -1366,6 +1515,40 @@ def compare_backends(spec: str) -> int:
             print(f"# COMPARE FAILED: {e}")
             return 1
         return 0
+    if names == ("open", "credit"):
+        # PR-9 gate: credit flow must be ~free when nobody is starved —
+        # credit-mode walltime within a 1.05× GEOMEAN of open flow across
+        # the fully-credited happy-path sweep — and the chaos_backpressure
+        # acceptance must hold (credit lossless with bounded occupancy on
+        # both overload scenarios where open wastes >30% of its wire rows;
+        # it raises otherwise).
+        times = fwd_walltime_flow(samples=40)
+        ratios = []
+        for (tag, variant, n_emit), us in sorted(times.items()):
+            if variant != "credit":
+                continue
+            ratio = us / times[(tag, "open", n_emit)]
+            ratios.append(ratio)
+            emit(f"compare_flow_{tag}_n{n_emit}", us, f"ratio={ratio:.3f}")
+        geomean = float(np.exp(np.mean(np.log(ratios))))
+        emit("compare_flow_geomean", 0.0, f"ratio={geomean:.3f}")
+        if geomean > 1.05:
+            print(
+                f"# COMPARE FAILED: credit flow regresses open flow by "
+                f"{geomean:.2f}x > 1.05x on the fully-credited happy path "
+                f"(geomean)"
+            )
+            return 1
+        print(
+            f"# compare ok: credit/open walltime geomean {geomean:.3f} "
+            f"(per-point: {', '.join(f'{r:.3f}' for r in ratios)})"
+        )
+        try:
+            chaos_backpressure()
+        except RuntimeError as e:
+            print(f"# COMPARE FAILED: {e}")
+            return 1
+        return 0
     if names == ("nockpt", "ckpt"):
         # PR-7 gate: recovery must be amortized — the segmented drive WITH
         # the checkpoint writer (W=8 rounds between saves) within a 1.05×
@@ -1517,8 +1700,8 @@ def compare_backends(spec: str) -> int:
         raise SystemExit(
             "error: --compare supports 'flat,hierarchical', "
             "'flat,hierarchical2,hierarchical3', 'sort,scatter', "
-            "'off,telemetry', 'drop,retain', 'nockpt,ckpt', or "
-            f"'bulk,pipelined', got {spec!r}"
+            "'off,telemetry', 'drop,retain', 'nockpt,ckpt', "
+            f"'bulk,pipelined', or 'open,credit', got {spec!r}"
         )
     n_emit, cap = 2048, 4096
     flat, hier, mesh = _hier_pair(1, 8, n_emit, cap)
@@ -1615,8 +1798,10 @@ SECTIONS = [
     ("fwd_walltime_telemetry", fwd_walltime_telemetry),
     ("fwd_walltime_overflow", fwd_walltime_overflow),
     ("fwd_walltime_ckpt", fwd_walltime_ckpt),
+    ("fwd_walltime_flow", fwd_walltime_flow),
     ("chaos_lossless", chaos_lossless),
     ("chaos_recovery", chaos_recovery),
+    ("chaos_backpressure", chaos_backpressure),
     ("rebalance_skew", rebalance_skew),
     ("autotune_drift", autotune_drift),
     ("sort_throughput", sort_throughput),
@@ -1647,9 +1832,12 @@ def main(argv=None) -> None:
     ap.add_argument("--chaos", action="store_true",
                     help="run only the chaos acceptance sections: the ISSUE-6 "
                          "chaos_lossless gauntlet (retain mode must lose "
-                         "nothing where drop mode loses >20%%) plus the "
-                         "ISSUE-7 chaos_recovery run (preempt-resume "
-                         "bit-exact, rank brownout lossless)")
+                         "nothing where drop mode loses >20%%), the ISSUE-7 "
+                         "chaos_recovery run (preempt-resume bit-exact, rank "
+                         "brownout lossless), and the ISSUE-9 "
+                         "chaos_backpressure overload pair (credit flow "
+                         "lossless with bounded occupancy where open flow "
+                         "wastes >30%% of its wire rows)")
     ap.add_argument("--compare", metavar="A,B[,C]", default=None,
                     help="regression gate: 'flat,hierarchical' times both "
                          "exchanges on a single-node mesh and exits nonzero "
@@ -1670,7 +1858,10 @@ def main(argv=None) -> None:
                          "micro-shard pipelining at a 1.0x geomean over the "
                          "bulk round on ballasted cache-exceeding rounds, "
                          "with the phase-profile overlap model bracketing "
-                         "the measurement")
+                         "the measurement; 'open,credit' gates credit flow "
+                         "at a 1.05x walltime geomean over open flow on the "
+                         "fully-credited happy path and runs the "
+                         "chaos_backpressure acceptance")
     args = ap.parse_args(argv)
 
     global PROFILE
@@ -1678,7 +1869,7 @@ def main(argv=None) -> None:
     if args.autotune:
         args.only = "autotune_drift"
     if args.chaos:
-        args.only = "chaos"  # chaos_lossless + chaos_recovery
+        args.only = "chaos"  # chaos_lossless + chaos_recovery + chaos_backpressure
 
     print("name,us_per_call,derived")
     if args.compare:

@@ -116,4 +116,28 @@ f2 = jax.jit(compat.shard_map(
 acc2, rounds2, _ = f2(jnp.arange(float(R)))
 assert (acc2 == acc).all() and int(rounds2[0]) == int(rounds[0])
 print(f"pipelined (S=2) drive bit-exact with bulk: {float(acc2.sum()):.3f}")
+
+# 6. The backpressure law (PR 9): under sustained overload, open flow ships
+#    rows its receivers must clamp — wire bytes spent on work that is thrown
+#    away.  ``flow="credit"`` piggybacks each receiver's free space on the
+#    count collective and gates senders on it, so every shipped row lands:
+#    slower to drain (credits are one round stale), but goodput 1.0 and zero
+#    loss where open flow drops almost half the traffic.
+from repro.chaos import run_scenario, sustained_overload
+
+sc = sustained_overload()  # 2 of 8 ranks hot: concentration that persists
+for flow in ("open", "credit"):
+    r = run_scenario(
+        mesh, sc, capacity=16, max_rounds=256, flow=flow,
+        overflow="retain", pipeline_shards=4,
+    )
+    print(
+        f"overload [{flow:6s}]: delivered {r['delivered_total']}/{r['emitted']}"
+        f" in {r['rounds']} rounds, goodput {r['goodput']:.3f},"
+        f" drops {r['drops']}"
+    )
+    if flow == "open":
+        assert r["goodput"] < 0.9  # wire wasted on clamped rows
+    else:
+        assert r["goodput"] == 1.0 and r["drops"] == 0 and r["done"]
 print("OK")

@@ -28,6 +28,16 @@ ISSUE 7 widens the gauntlet to the recovery law: :func:`rank_brownout` /
 :func:`run_scenario_checkpointed` (checkpoint every W rounds, simulated
 preemption, resume — optionally on a different mesh) with
 :func:`boundary_digests` as the bit-exactness witness.
+
+ISSUE 9 widens it again to the backpressure law: :func:`sustained_overload`
+/ :func:`incast_collapse` keep the offered load above any bounded drain
+rate for the whole schedule, the driver grows a cursor-gated emitter that
+respects the drive's ``headroom`` budget, and :func:`simulate_flat_credit`
+is the round-for-round numpy twin of the credit pipeline (zero-credit cold
+start, reserve + liveness-floor adverts, floor-share apportionment).  The
+gate: ``flow="credit"`` delivers everything with ZERO receiver drops and
+bounded occupancy on schedules where ``flow="open"`` wastes >30% of its
+wire bytes on rows the receiver throws away.
 """
 from repro.chaos.scenarios import (
     Scenario,
@@ -36,10 +46,17 @@ from repro.chaos.scenarios import (
     burst_storm,
     capacity_drought,
     convergecast,
+    incast_collapse,
+    overload_scenarios,
     rank_brownout,
     rotating_hotspot,
+    sustained_overload,
 )
-from repro.chaos.oracle import expected_by_rank, simulate_flat_retain
+from repro.chaos.oracle import (
+    expected_by_rank,
+    simulate_flat_credit,
+    simulate_flat_retain,
+)
 from repro.chaos.driver import (
     ChaosItem,
     boundary_digests,
@@ -57,7 +74,11 @@ __all__ = [
     "convergecast",
     "rank_brownout",
     "rotating_hotspot",
+    "sustained_overload",
+    "incast_collapse",
+    "overload_scenarios",
     "expected_by_rank",
+    "simulate_flat_credit",
     "simulate_flat_retain",
     "ChaosItem",
     "boundary_digests",

@@ -109,6 +109,8 @@ def _make_ctx(
     telemetry: bool = True,
     max_rounds: int = 64,
     pipeline_shards: int = 1,
+    flow: str = "open",
+    emit_reserve: int = -1,
 ) -> RafiContext:
     """The scenario context: ``telemetry_window`` pinned to ``max_rounds+1``
     so the ring records EVERY forward of the burst (the trajectory oracles
@@ -130,6 +132,8 @@ def _make_ctx(
         telemetry_window=max_rounds + 1,
         overflow=overflow,
         pipeline_shards=pipeline_shards,
+        flow=flow,
+        emit_reserve=emit_reserve,
     )
 
 
@@ -173,20 +177,115 @@ def _make_round_fn(ctx: RafiContext, sc: Scenario):
     return round_fn
 
 
+def _flat_schedule(sc: Scenario):
+    """The schedule flattened per rank into emission order — the layout the
+    credit-gated emitter walks with a cursor.  Returns ``(dest (R, K) i32,
+    uid (R, K) i32, prefix (R, rounds) i32)`` where ``prefix[rank, r]`` is
+    the number of schedule entries in rounds ``0..r`` inclusive and ``K`` is
+    the longest per-rank entry list (short ranks are zero-padded — the
+    cursor never reaches the pad)."""
+    R, E = sc.num_ranks, sc.emits_per_round
+    per = [[] for _ in range(R)]
+    for r in range(sc.rounds):
+        for rank in range(R):
+            for e in range(E):
+                d = int(sc.dests[r, rank, e])
+                if d >= 0:
+                    per[rank].append((d, int(sc.uid(r, rank, e))))
+    K = max(1, max(len(p) for p in per))
+    dest = np.zeros((R, K), np.int32)
+    uid = np.zeros((R, K), np.int32)
+    for rank, p in enumerate(per):
+        for k, (d, u) in enumerate(p):
+            dest[rank, k] = d
+            uid[rank, k] = u
+    prefix = (
+        np.cumsum((np.asarray(sc.dests) >= 0).sum(axis=2), axis=0)
+        .T.astype(np.int32)
+    )
+    return dest, uid, prefix
+
+
+def _make_gated_round_fn(ctx: RafiContext, sc: Scenario):
+    """The credit-flow emitter: same consumption/checksum law as
+    :func:`_make_round_fn`, but emission is CURSOR-based and bounded by the
+    drive's ``headroom`` keyword (ISSUE 9).  Instead of firing schedule row
+    ``rnd + 1`` unconditionally, the rank keeps a cursor into its flattened
+    schedule and each round emits ``min(backlog, headroom)`` entries from
+    it — schedule rows the gate defers are emitted later, identities
+    unchanged, so the delivered-checksum oracle applies verbatim while the
+    emission TIMING adapts to receiver pressure (this is what a well-behaved
+    backpressure-aware application does; the drive still counts any excess
+    an ill-behaved app emits as ``emit_overflow``)."""
+    R = sc.num_ranks
+    C = ctx.cfg.capacity
+    dest_np, uid_np, prefix_np = _flat_schedule(sc)
+    K = dest_np.shape[1]
+    dest_dev = jnp.asarray(dest_np)
+    uid_dev = jnp.asarray(uid_np)
+    prefix_dev = jnp.asarray(prefix_np)
+    axes = flatten_axis_names(ctx.cfg.axis_name)
+
+    def round_fn(q_in, aux, rnd, headroom=None):
+        me = jax.lax.axis_index(axes)
+        lane = jnp.arange(C)
+        valid = lane < q_in.count
+        u = q_in.items.uid.astype(jnp.uint32)
+        z = jnp.zeros_like(u)
+        cnt, s, s2, cursor = aux
+        cnt = cnt + jnp.sum(valid).astype(jnp.uint32)
+        s = s + jnp.sum(jnp.where(valid, u, z))
+        s2 = s2 + jnp.sum(jnp.where(valid, u * u, z))
+        # due = everything scheduled through row rnd + 1 (row 0 seeded q0);
+        # emit the oldest un-emitted entries that fit the round's headroom
+        src = jnp.minimum(me, R - 1)
+        er = jnp.clip(rnd + 1, 0, sc.rounds - 1)
+        want = jnp.where(me < R, prefix_dev[src, er], 0).astype(jnp.int32)
+        have = cursor[0].astype(jnp.int32)
+        n = jnp.clip(want - have, 0, headroom)
+        idx = jnp.clip(have + lane, 0, K - 1)
+        mask = lane < n
+        uid = jnp.take(uid_dev[src], idx)
+        row = jnp.take(dest_dev[src], idx)
+        out = Q.make_queue(chaos_proto(), C)
+        out = Q.enqueue(
+            out,
+            ChaosItem(uid=uid, val=_val_of(uid)),
+            jnp.where(mask, row, Q.DISCARD).astype(jnp.int32),
+            mask,
+        )
+        return out, (cnt, s, s2, (cursor + n).astype(jnp.int32))
+
+    return round_fn
+
+
 def _aux0(num_ranks: int):
     return tuple(jnp.zeros((num_ranks,), jnp.uint32) for _ in range(3))
 
 
+def _cursor0(sc: Scenario):
+    """Initial per-rank schedule cursor: row 0 is consumed by the seed queue
+    (its capacity clips are counted drops, still 'emitted')."""
+    return (np.asarray(sc.dests[0]) >= 0).sum(axis=1).astype(np.int32)
+
+
 def _result_dict(sc: Scenario, q, aux, rounds, done, *, cfg=None, ring=None) -> Dict:
-    cnt, s, s2 = aux
+    cnt, s, s2 = aux[:3]
     delivered = np.stack(
         [np.asarray(cnt), np.asarray(s), np.asarray(s2)], axis=-1
     ).astype(np.uint32)
+    # a cursor-gated run (credit flow) may be truncated by max_rounds with
+    # schedule entries never emitted: the cursor, not the schedule, says how
+    # many rows were actually put in flight (on a completed run they agree)
+    emitted = (
+        int(np.asarray(aux[3]).astype(np.int64).sum()) if len(aux) > 3
+        else sc.emitted
+    )
     res = {
         "scenario": sc.name,
         "delivered": delivered,
         "delivered_total": int(delivered[:, 0].sum()),
-        "emitted": sc.emitted,
+        "emitted": emitted,
         "resident": int(np.asarray(q.count).sum()),
         "drops": int(np.asarray(q.drops).sum()),
         "rounds": int(np.asarray(rounds)),
@@ -199,10 +298,14 @@ def _result_dict(sc: Scenario, q, aux, rounds, done, *, cfg=None, ring=None) -> 
         summary = TS.summarize(ring, tier_capacities=TS.tier_capacities(cfg))
         res["retained_rows"] = summary["retained_rows"]
         res["age_max"] = summary["age_max"]
+        res["goodput"] = summary["goodput"]
+        res["emit_overflow"] = summary["emit_overflow"]
         trace = TS.ring_trace(ring)
         res["retained_trace"] = trace["retained_rows"]
         res["age_trace"] = trace["age_max"]
         res["recv_trace"] = trace["recv_total"]
+        res["wire_rows"] = int(np.asarray(trace["recv_total"]).sum())
+        res["wasted_wire_rows"] = int(np.asarray(trace["recv_drops"]).sum())
     return res
 
 
@@ -234,14 +337,18 @@ def run_scenario(
         )
     cfg = ctx.cfg
     retain = cfg.overflow == "retain"
+    credit = cfg.flow == "credit"
     spec = ctx._spec
+    rfn = _make_gated_round_fn(ctx, sc) if credit else _make_round_fn(ctx, sc)
+    aux_specs = (spec,) * 4 if credit else (spec,) * 3
+    aux0 = _aux0(R) + ((jnp.asarray(_cursor0(sc)),) if credit else ())
     drive = ctx.run_until_done(
-        _make_round_fn(ctx, sc),
-        aux_specs=(spec, spec, spec),
+        rfn,
+        aux_specs=aux_specs,
         max_rounds=max_rounds,
         with_health=health is not None,
     )
-    args = (_seed_queue(sc, cfg.capacity), _aux0(R))
+    args = (_seed_queue(sc, cfg.capacity), aux0)
     if health is not None:
         args = args + (jnp.asarray(np.asarray(health).astype(bool)),)
     out = drive(*args)
@@ -292,12 +399,23 @@ def run_scenario_checkpointed(
             f"axis has {ctx.num_ranks}"
         )
     spec = ctx._spec
+    credit = ctx.cfg.flow == "credit"
+
+    def _rfn(c):
+        return _make_gated_round_fn(c, sc) if credit else _make_round_fn(c, sc)
+
+    def _specs(c):
+        return (c._spec,) * (4 if credit else 3)
+
+    aux0 = _aux0(ctx.num_ranks) + (
+        (jnp.asarray(_cursor0(sc)),) if credit else ()
+    )
     res = recovery.run_checkpointed(
         ctx,
-        _make_round_fn(ctx, sc),
+        _rfn(ctx),
         _seed_queue(sc, ctx.cfg.capacity),
-        _aux0(ctx.num_ranks),
-        aux_specs=(spec, spec, spec),
+        aux0,
+        aux_specs=_specs(ctx),
         ckpt_dir=ckpt_dir,
         checkpoint_every=checkpoint_every,
         max_rounds=max_rounds,
@@ -311,12 +429,15 @@ def run_scenario_checkpointed(
         rcap = resume_capacity if resume_capacity is not None else capacity
         ctx = _make_ctx(rmesh, capacity=rcap, max_rounds=max_rounds, **cfg_kwargs)
         spec = ctx._spec
+        aux_like = tuple(np.zeros((ctx.num_ranks,), np.uint32) for _ in range(3))
+        if credit:
+            aux_like = aux_like + (np.zeros((ctx.num_ranks,), np.int32),)
         res = recovery.resume_run(
             ctx,
-            _make_round_fn(ctx, sc),
+            _rfn(ctx),
             ckpt_dir,
-            aux_specs=(spec, spec, spec),
-            aux_like=tuple(np.zeros((ctx.num_ranks,), np.uint32) for _ in range(3)),
+            aux_specs=_specs(ctx),
+            aux_like=aux_like,
             checkpoint_every=checkpoint_every,
             max_rounds=max_rounds,
             health=health,

@@ -41,6 +41,9 @@ __all__ = [
     "convergecast",
     "rank_brownout",
     "brownout_mask",
+    "sustained_overload",
+    "incast_collapse",
+    "overload_scenarios",
     "all_scenarios",
 ]
 
@@ -204,6 +207,57 @@ def brownout_mask(num_ranks: int, down=(2, 5), down_from: int = 3):
         return h
 
     return health
+
+
+def sustained_overload(
+    num_ranks: int = 8,
+    rounds: int = 12,
+    emits_per_round: int = 12,
+    hot=(0, 1),
+    hot_frac: float = 0.67,
+    seed: int = 9,
+) -> Scenario:
+    """Every rank fires EVERY lane EVERY round, with most traffic pinned on
+    a FIXED hot pair of ranks — unlike :func:`rotating_hotspot` the pressure
+    never moves, so the hot receivers' offered load exceeds their drain
+    capacity for the WHOLE schedule.  Open flow keeps shipping the full
+    fan-in and sheds the excess at the hot receivers round after round
+    (wasted wire); credit flow must hold the excess at the SOURCE and drain
+    it losslessly after the schedule ends (the ISSUE 9 graceful-degradation
+    gate).  Uniform sustained traffic would not do: consumption keeps up
+    with symmetric arrivals, so receivers never overflow — overload that
+    wastes wire needs concentration that PERSISTS."""
+    rng = np.random.default_rng(seed)
+    shape = (rounds, num_ranks, emits_per_round)
+    uniform = rng.integers(0, num_ranks, size=shape)
+    hot = np.asarray(hot, np.int32)
+    hotdest = hot[rng.integers(0, hot.size, size=shape)]
+    d = np.where(rng.random(shape) < hot_frac, hotdest, uniform).astype(np.int32)
+    return Scenario("sustained_overload", num_ranks, rounds, emits_per_round, d)
+
+
+def incast_collapse(
+    num_ranks: int = 8, rounds: int = 10, emits_per_round: int = 8, seed: int = 10
+) -> Scenario:
+    """Sustained full-width convergecast: every rank's every lane targets
+    rank 0 for ``rounds`` straight rounds — R·E rows per round against ONE
+    queue of bounded capacity.  The classic TCP-incast collapse shape: open
+    flow ships the full fan-in and throws most of it away at rank 0; credit
+    flow apportions rank 0's real free space among the R senders and ships
+    nothing it cannot admit."""
+    del seed  # fully deterministic; kept for a uniform generator signature
+    d = np.zeros((rounds, num_ranks, emits_per_round), np.int32)
+    return Scenario("incast_collapse", num_ranks, rounds, emits_per_round, d)
+
+
+def overload_scenarios(num_ranks: int = 8, seed: int = 0):
+    """The backpressure gauntlet (ISSUE 9): sustained aggregate overload and
+    single-destination incast — the two shapes where open flow livelocks on
+    wasted wire and credit flow must degrade gracefully instead."""
+    return [
+        sustained_overload(num_ranks, seed=seed + 9),
+        incast_collapse(num_ranks, seed=seed + 10),
+    ]
 
 
 def all_scenarios(num_ranks: int = 8, seed: int = 0):

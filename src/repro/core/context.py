@@ -69,6 +69,8 @@ class RafiContext:
         telemetry_buckets: int = 8,
         overflow: str = "drop",
         pipeline_shards: int = 1,
+        flow: str = "open",
+        emit_reserve: int = -1,
     ):
         self.mesh = mesh
         self.proto = proto
@@ -100,6 +102,8 @@ class RafiContext:
             telemetry_buckets=telemetry_buckets,
             overflow=overflow,
             pipeline_shards=pipeline_shards,
+            flow=flow,
+            emit_reserve=emit_reserve,
         )
         # PartitionSpec entries cannot nest: a joint-tier axis_name like
         # (("pod", "node"), "device") shards dim 0 over the flattened axes
@@ -250,6 +254,9 @@ class RafiContext:
         }
         if cfg.overflow == "retain":
             specs["age"] = self._spec
+        if cfg.flow == "credit":
+            # per-rank (R,) credit vector stacks to (R·R,), like age's lanes
+            specs["credits"] = self._spec
         if cfg.telemetry:
             specs["ring"] = self._ring_specs()
         if accounting:

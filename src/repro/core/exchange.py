@@ -142,6 +142,22 @@ collective is spent on it either.  The onehot oracle has no sender clamp,
 so its plan is empty by construction (its receiver clamp stays a counted
 drop).  Spill extraction always reads the FULL clamp (cut rows never ship),
 so retention is unchanged — and bit-exact — under pipelining.
+
+Credit flow (ISSUE 9): with ``flow="credit"`` (requires ``overflow=
+"retain"``; the default ``"open"`` ships every clamped segment and stays
+the bit-exactness oracle) every backend additionally enforces the
+backpressure law — no wire byte is spent on a row its receiver cannot
+admit.  Receivers advertise their free queue room ON the count collective
+the round already runs (the padded count ``all_to_all`` widens from
+``(A_l, R/A_l)`` to ``(A_l, R/A_l + 1)`` i32; the ragged count
+``all_gather`` from ``(R,)`` to ``(R+1,)`` — nothing payload-sized, so the
+collective *inventory* above is unchanged), senders deterministically
+apportion the one-round-stale credits across the R contending peers (floor
+share + rank-ordered residual — incast cannot overshoot the advertised
+room by design), and the un-credited tail of each destination segment is
+parked through the retain spill machinery instead of shipped-and-bounced.
+The updated ``(R,)`` credit estimate rides back as an extra ``credits_out``
+element right before the stats, to be carried into the next round.
 """
 from __future__ import annotations
 
@@ -218,10 +234,13 @@ def exchange_padded(
     overflow: str = "drop",
     age: jax.Array = None,  # (C,) retain mode: rounds each lane has waited
     pipeline_shards: int = 1,
+    flow: str = "open",
+    credits: jax.Array = None,  # (R,) credit mode: advertised free, 1-round stale
+    credit_reserve: int = 0,  # credit mode: receive room withheld from adverts
 ):
     """Padded-slot exchange of the packed payload, as a stage composition:
 
-      SpillExtract(sender clamp) → Marshal → CountExchange →
+      [CreditGate →] SpillExtract(sender clamp) → Marshal → CountExchange →
       PayloadExchange → Unmarshal
 
     Single-pass marshal, either mode: in sort mode the send buffer row for
@@ -246,32 +265,49 @@ def exchange_padded(
     """
     R, S = num_ranks, peer_capacity
     retain = overflow == "retain"
+    credit = flow == "credit"
     st = ST.RoundState(
         packed=packed, perm=perm, send_counts=send_counts, marshal=marshal,
         dest_clean=dest_clean, dest_rank=dest_rank, use_pallas=use_pallas,
-        retain=retain, age=age,
+        retain=retain, age=age, flow=flow, credits=credits,
     )
     inner = (
         ST.Marshal(R, S, shards=pipeline_shards),
-        ST.CountExchange(axis_name),
+        ST.CountExchange(axis_name, num_ranks=R, capacity=capacity,
+                         flat_axes=axis_name),
         ST.PayloadExchange(axis_name),
         ST.Unmarshal(capacity, shards=pipeline_shards, slot=S),
     )
     if pipeline_shards > 1:
         inner = (ST.Pipelined(inner, pipeline_shards),)
+    head = (ST.CreditGate(axis_name, R),) if credit else ()
     st = ST.compose(
-        ST.SpillExtract(R, capacity, S, retain=retain), *inner
+        *head,
+        ST.SpillExtract(R, capacity, S, retain=retain, reserve=credit_reserve),
+        *inner,
     )(st)
     drops = st.send_drops + st.recv_drops
     if telemetry:
+        tkw = {}
+        if retain:
+            tkw["rows_held"] = st.stage_held
+        if credit:
+            tkw["credits_granted"] = jnp.sum(jnp.minimum(st.credit_allow, S))
         stats = TS.single_tier_stats(
             send_counts, S, telemetry_buckets,
             sent_rows=jnp.sum(st.clamped), stage_drops=st.send_drops,
             recv_total=jnp.sum(st.recv_counts), recv_drops=st.recv_drops,
+            **tkw,
         )
+        if credit:
+            return (st.out, st.recv_counts, st.new_count, drops,
+                    tuple(st.pending), st.credits_out, stats)
         if retain:
             return st.out, st.recv_counts, st.new_count, drops, tuple(st.pending), stats
         return st.out, st.recv_counts, st.new_count, drops, stats
+    if credit:
+        return (st.out, st.recv_counts, st.new_count, drops,
+                tuple(st.pending), st.credits_out)
     if retain:
         return st.out, st.recv_counts, st.new_count, drops, tuple(st.pending)
     return st.out, st.recv_counts, st.new_count, drops
@@ -296,6 +332,9 @@ def exchange_hierarchical(
     overflow: str = "drop",
     age: jax.Array = None,  # (C,) retain mode: rounds each lane has waited
     pipeline_shards: int = 1,
+    flow: str = "open",
+    credits: jax.Array = None,  # (R,) credit mode: advertised free, 1-round stale
+    credit_reserve: int = 0,  # credit mode: receive room withheld from adverts
 ):
     """N-stage packed exchange over an N-D ``(slowest, …, fastest)`` mesh —
     one SpillExtract → Marshal → CountExchange → PayloadExchange composition
@@ -356,17 +395,42 @@ def exchange_hierarchical(
     stage rides back before the stats, the final compaction lands arrivals
     behind the reserved spill front, and stage drops move into the blocks —
     ``drops`` reduces to the receiver-side admission count.
+
+    With ``flow="credit"`` (the backpressure law; requires retain) the
+    carried ``credits`` vector gates the route's FIRST clamp: the per-
+    destination grant (floor share + rank-ordered residual over the R
+    contending senders) caps each sub-segment before the fastest tier's
+    clamp, so a saturated destination throttles every downstream fabric —
+    including the DCN stage — at the source, and the un-granted tail parks
+    in the sender's own spill blocks.  Credits aggregate per tier: each
+    tier's count ``all_to_all`` widens by ONE i32 column carrying the
+    min-aggregated free space of the sender's destination SUBTREE on that
+    axis (the final tier folds in this rank's fresh post-spill room first),
+    and receivers scatter the advertised column back into their estimate of
+    every subtree member — every rank's estimate of every destination
+    refreshes every round, conservatively (min over the subtree), with no
+    payload-sized traffic added.  The updated ``credits_out`` rides back
+    right before the stats.
     """
     level_sizes = tuple(int(a) for a in level_sizes)
     R = num_ranks
     C, W = packed.shape
     rec = TS.make_stats(len(level_sizes), telemetry_buckets) if telemetry else None
     retain = overflow == "retain"
+    credit = flow == "credit"
+    # One flattened axis spec covering every tier — the global rank index
+    # (slowest-major) that the credit bookkeeping addresses by.
+    flat_axes = []
+    for ax in axis_name:
+        flat_axes.extend(ax) if isinstance(ax, (tuple, list)) else flat_axes.append(ax)
+    flat_axes = tuple(flat_axes)
     st = ST.RoundState(
         packed=packed, perm=perm, send_counts=send_counts, marshal=marshal,
         dest_clean=dest_clean, dest_rank=dest_rank, use_pallas=use_pallas,
-        retain=retain, age=age,
+        retain=retain, age=age, flow=flow, credits=credits,
     )
+    if credit:
+        st = ST.CreditGate(flat_axes, R)(st)
     st.spill_run = jnp.zeros((), send_counts.dtype)  # total rows parked so far
     st.drops = jnp.zeros((), send_counts.dtype)
     if retain:
@@ -390,6 +454,7 @@ def exchange_hierarchical(
     if not tiers:
         # 1-rank mesh: the round is a local compaction — no collectives
         allowed = jnp.minimum(st.cnt, capacity)
+        credits_out = (capacity - allowed).astype(jnp.int32) if credit else None
         if marshal == "scatter":
             keep = (dest_clean < R) & (dest_rank < capacity)
             out = ST.scatter_rows(
@@ -416,15 +481,22 @@ def exchange_hierarchical(
                 recv_total=jnp.sum(st.cnt).astype(jnp.int32),
                 recv_drops=local_drops.astype(jnp.int32),
             )
+            if credit:
+                return out, allowed, allowed[0], local_drops, (), credits_out, rec
             if retain:  # no stage clamp ran either: nothing to spill
                 return out, allowed, allowed[0], local_drops, (), rec
             return out, allowed, allowed[0], local_drops, rec
+        if credit:
+            return out, allowed, allowed[0], local_drops, (), credits_out
         if retain:
             return out, allowed, allowed[0], local_drops, ()
         return out, allowed, allowed[0], local_drops
 
     for i, l in enumerate(tiers):
         A, S = level_sizes[l], level_capacities[l]
+        stride = 1
+        for sz in level_sizes[l + 1:]:
+            stride *= sz
         st = ST.SpillExtract(
             R, capacity, S, retain=retain, kind="tier", extent=A
         )(st)
@@ -441,13 +513,26 @@ def exchange_hierarchical(
                 sent_rows=rec.sent_rows.at[l].set(jnp.sum(st.allowed)),
                 stage_drops=rec.stage_drops.at[l].set(st.stage_drops),
             )
+            if retain:
+                rec = dataclasses.replace(
+                    rec, rows_held=rec.rows_held.at[l].set(st.stage_held)
+                )
+            if credit and i == 0:
+                rec = dataclasses.replace(
+                    rec,
+                    credits_granted=rec.credits_granted.at[l].set(
+                        jnp.sum(jnp.minimum(st.credit_allow, S))
+                    ),
+                )
         mar = ST.Marshal(A, S, shards=pipeline_shards, kind="tier", num_ranks=R)
         if i == len(tiers) - 1:
             # final stage: per-source-group totals suffice — blocks are
             # contiguous prefixes, compacted straight into the receive queue
             chain = (
                 mar,
-                ST.CountExchange(axis_name[l], kind="final"),
+                ST.CountExchange(axis_name[l], kind="final", num_ranks=R,
+                                 stride=stride, capacity=capacity,
+                                 flat_axes=flat_axes, reserve=credit_reserve),
                 ST.PayloadExchange(axis_name[l]),
                 ST.Unmarshal(capacity, shards=pipeline_shards, slot=S, kind="final"),
             )
@@ -462,10 +547,16 @@ def exchange_hierarchical(
                     recv_total=jnp.sum(st.recv_counts).astype(jnp.int32),
                     recv_drops=st.recv_drops.astype(jnp.int32),
                 )
+                if credit:
+                    return (st.out, st.recv_counts, st.new_count,
+                            total_drops, tuple(st.pending), st.credits_out, rec)
                 if retain:
                     return (st.out, st.recv_counts, st.new_count,
                             total_drops, tuple(st.pending), rec)
                 return st.out, st.recv_counts, st.new_count, total_drops, rec
+            if credit:
+                return (st.out, st.recv_counts, st.new_count,
+                        total_drops, tuple(st.pending), st.credits_out)
             if retain:
                 return (st.out, st.recv_counts, st.new_count,
                         total_drops, tuple(st.pending))
@@ -476,7 +567,9 @@ def exchange_hierarchical(
         chain = (
             mar,
             ST.CountExchange(
-                axis_name[l], kind="tier", shards=pipeline_shards, slot=S
+                axis_name[l], kind="tier", shards=pipeline_shards, slot=S,
+                num_ranks=R, stride=stride, capacity=capacity,
+                flat_axes=flat_axes,
             ),
             ST.PayloadExchange(axis_name[l], collect=pipeline_shards > 1),
         )
@@ -506,6 +599,9 @@ def exchange_ragged(
     overflow: str = "drop",
     age: jax.Array = None,  # (C,) retain mode: rounds each lane has waited
     pipeline_shards: int = 1,
+    flow: str = "open",
+    credits: jax.Array = None,  # (R,) credit mode: advertised free, 1-round stale
+    credit_reserve: int = 0,  # credit mode: receive room withheld from adverts
 ):
     """ragged_all_to_all exchange — the MPI_Alltoallv / GPU-RDMA analogue.
 
@@ -526,13 +622,38 @@ def exchange_ragged(
     shard segments is exactly the bulk segments at the same landing
     offsets), each with its own count all-gather.  The marshal stays ONE
     local pass; only the wire movement is sharded.
+
+    With ``flow="credit"`` (requires retain) the carried ``credits`` vector
+    gates each sender's per-destination counts BEFORE the count all-gather
+    (floor share + rank-ordered residual), so the replicated control plane —
+    and the wire — only ever sees granted traffic; the un-granted tail parks
+    in the spill block with the control-plane cut.  The gather widens by ONE
+    i32 column carrying each rank's own-entry advert (its post-spill free
+    room from last round), and this rank's fresh advert replaces its own
+    entry in the returned ``credits_out`` — every rank's estimate of every
+    receiver refreshes every round with no payload-sized traffic added.
     """
     del peer_capacity  # segments are contiguous: no slot gather
     retain = overflow == "retain"
+    credit = flow == "credit"
+    R = num_ranks
     me = jax.lax.axis_index(axis_name)
     off = jnp.cumsum(send_counts) - send_counts
 
-    cnt = exchange_count_matrix(send_counts, axis_name)  # shard 0's count collective
+    credits_out = grant = None
+    send_gated = send_counts
+    if credit:
+        free = jnp.clip(credits, 0)
+        grant = (free // R + (me < free % R)).astype(send_counts.dtype)
+        send_gated = jnp.minimum(send_counts, grant)
+        # shard 0's count collective, widened by this rank's own-entry advert
+        wide = jnp.concatenate(
+            [send_gated, jnp.take(credits, me)[None].astype(send_gated.dtype)]
+        )
+        gath = jax.lax.all_gather(wide, axis_name)  # (R, R+1)
+        cnt, credits_out = gath[:, :R], gath[:, R].astype(jnp.int32)
+    else:
+        cnt = exchange_count_matrix(send_counts, axis_name)  # shard 0's count collective
     send_sizes, output_offsets, recv_sizes = ST.ragged_control_plane(
         cnt, me, capacity
     )
@@ -549,6 +670,19 @@ def exchange_ragged(
             marshal=marshal, dest_clean=dest_clean, dest_rank=dest_rank,
         ),)
         front = jnp.minimum(send_drops, capacity)
+        held_rows = send_drops
+        if credit:
+            # fresh advert: the room left behind the reserved spill front,
+            # minus the reserve withheld for next round's local emissions,
+            # floored at one row per sender whenever room exists (liveness
+            # — see stages.SpillExtract's flat advert)
+            room = capacity - front
+            credits_out = credits_out.at[me].set(
+                jnp.maximum(
+                    jnp.clip(room - credit_reserve, 0),
+                    jnp.minimum(room, num_ranks),
+                ).astype(jnp.int32)
+            )
         send_drops = jnp.zeros_like(send_drops)
 
     if marshal == "scatter":  # the ONE payload pass, sort-free
@@ -576,7 +710,7 @@ def exchange_ragged(
         for k in range(pipeline_shards):
             if k > 0:
                 # shard k's own count collective + replicated control plane
-                cnt_k = exchange_count_matrix(send_counts, axis_name)
+                cnt_k = exchange_count_matrix(send_gated, axis_name)
                 s_ss, s_oo, s_rs = ST.ragged_control_plane(cnt_k, me, capacity)
             else:
                 s_ss, s_oo, s_rs = send_sizes, output_offsets, recv_sizes
@@ -611,14 +745,26 @@ def exchange_ragged(
         # backend (each counts what the control plane cut from its row), so
         # recv_drops stays 0 — stats sum to the exchange's drops return.
         col_demand = jnp.sum(cnt, axis=0)
+        tkw = {}
+        if retain:
+            tkw["rows_held"] = held_rows
+        if credit:
+            tkw["credits_granted"] = jnp.sum(jnp.minimum(grant, send_counts))
         stats = TS.single_tier_stats(
             col_demand, capacity, telemetry_buckets,
             sent_rows=jnp.sum(send_sizes), stage_drops=send_drops,
             recv_total=col_demand[me], recv_drops=recv_cut.astype(jnp.int32),
+            **tkw,
         )
+        if credit:
+            return (out, recv_sizes, new_count, send_drops + recv_cut,
+                    pending, credits_out, stats)
         if retain:
             return out, recv_sizes, new_count, send_drops + recv_cut, pending, stats
         return out, recv_sizes, new_count, send_drops, stats
+    if credit:
+        return (out, recv_sizes, new_count, send_drops + recv_cut,
+                pending, credits_out)
     if retain:
         return out, recv_sizes, new_count, send_drops + recv_cut, pending
     return out, recv_sizes, new_count, send_drops

@@ -48,7 +48,7 @@ from repro.core import types as T
 from repro.core.health import remap_dest
 from repro.core.queue import DISCARD, WorkQueue
 
-__all__ = ["ForwardConfig", "flatten_axis_names", "forward_work"]
+__all__ = ["ForwardConfig", "credit_reserve_rows", "flatten_axis_names", "forward_work"]
 
 _EXCHANGES = {
     "padded": X.exchange_padded,
@@ -153,6 +153,33 @@ class ForwardConfig:
         queue capacity (and each per-tier slot budget); the bulk-synchronous
         backends without a slot dimension — the onehot oracle and ring
         cycling — reject S > 1.
+      flow: wire admission policy — the backpressure law.  ``"open"``
+        (default) ships every clamped segment regardless of receiver state:
+        the §3.3 contract and the bit-exactness oracle.  ``"credit"`` makes
+        each receiver advertise its free queue space on the count collective
+        the round already runs (the count ``all_to_all`` widens from one i32
+        column to two — nothing payload-sized, so the budget law's
+        collective inventory is unchanged), and senders spend wire ONLY on
+        rows the advertised credit admits: one-round-stale credits are
+        apportioned deterministically across the R contending senders
+        (floor share + rank-ordered residual, so an incast can never
+        overshoot the receiver), and the un-credited tail of each
+        destination segment is held locally through the ``overflow="retain"``
+        spill/compaction machinery — which credit mode therefore requires —
+        instead of being shipped and bounced.  On hierarchical routes each
+        tier advertises its own aggregated headroom, so a saturated node
+        throttles the slow-fabric stage, not just the last hop.  Credits ride
+        the drive's while-loop carry (``forward_work`` takes ``credits=`` and
+        returns ``credits_out``); the onehot oracle has no sender clamp to
+        gate and rejects credit flow.
+      emit_reserve: credit mode only — receive-queue rows each advertisement
+        WITHHOLDS for the rank's own next-round emissions (``-1``, the
+        default, resolves to ``capacity // 2``).  The drive's emission gate
+        hands the app exactly this budget back as per-round headroom, so
+        retained backlog + gated emissions + advertised credits never exceed
+        ``capacity``: granted arrivals always fit and the flat credit path
+        is receiver-drop-free by construction (hierarchical adverts are
+        min-aggregated and tier-stale — bounded, counted overshoot).
     """
 
     axis_name: Any
@@ -172,6 +199,8 @@ class ForwardConfig:
     telemetry_buckets: int = 8
     overflow: str = "drop"
     pipeline_shards: int = 1
+    flow: str = "open"
+    emit_reserve: int = -1
 
     def __post_init__(self):
         if self.exchange not in _EXCHANGES:
@@ -180,6 +209,34 @@ class ForwardConfig:
             raise ValueError(
                 f"unknown overflow {self.overflow!r} (expected 'drop' — the "
                 "§3.3 oracle — or 'retain': spill-and-retry, the lossless law)"
+            )
+        if self.flow not in ("open", "credit"):
+            raise ValueError(
+                f"unknown flow {self.flow!r} (expected 'open' — ship every "
+                "clamped segment, the §3.3 oracle — or 'credit': "
+                "receiver-advertised admission, the backpressure law)"
+            )
+        if self.flow == "credit" and self.overflow != "retain":
+            raise ValueError(
+                "flow='credit' requires overflow='retain': the un-credited "
+                "tail of each destination segment is held locally through "
+                "the retain spill/compaction machinery — with overflow="
+                "'drop' the credit gate would convert backpressure into "
+                "silent sender-side loss"
+            )
+        if self.flow == "credit" and self.exchange == "onehot":
+            raise ValueError(
+                "flow='credit' is not supported by exchange='onehot': the "
+                "all-gather oracle ships whole queues (no per-destination "
+                "sender clamp exists for a credit gate to tighten)"
+            )
+        if self.emit_reserve != -1 and not (
+            0 <= self.emit_reserve < self.capacity
+        ):
+            raise ValueError(
+                f"emit_reserve ({self.emit_reserve}) must be -1 (auto: "
+                f"capacity // 2) or in [0, capacity) — reserving the whole "
+                "queue would advertise zero credit forever"
             )
         if self.marshal not in ("sort", "scatter"):
             raise ValueError(f"unknown marshal {self.marshal!r}")
@@ -342,7 +399,16 @@ class ForwardConfig:
         object.__setattr__(self, "node_capacity", caps[0])
 
 
-def forward_work(q: WorkQueue, cfg: ForwardConfig, *, age=None, health=None):
+def credit_reserve_rows(cfg: ForwardConfig) -> int:
+    """Resolved ``emit_reserve``: receive rows every credit advertisement
+    withholds for the rank's own emissions (the drive's per-round emission
+    headroom).  ``-1`` auto-sizes to half the queue."""
+    return cfg.capacity // 2 if cfg.emit_reserve < 0 else cfg.emit_reserve
+
+
+def forward_work(
+    q: WorkQueue, cfg: ForwardConfig, *, age=None, health=None, credits=None
+):
     """One collective forwarding round. Must run inside ``shard_map``.
 
     Returns ``(new_queue, total_in_flight)`` where ``total_in_flight`` is the
@@ -361,6 +427,17 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig, *, age=None, health=None):
     ``age=`` on the next call; ``None`` means all lanes are fresh).  Arrivals
     that don't fit next to the retained rows are the one remaining loss site
     — counted into ``drops``.
+
+    With ``cfg.flow == "credit"`` the returns grow ``credits_out`` after
+    ``age_out`` (``(new_queue, total, age_out, credits_out[, stats])``):
+    ``credits_out[d]`` is destination ``d``'s free-space advertisement
+    received on this round's count collective, to be fed back via
+    ``credits=`` on the next call so the sender clamp spends wire only on
+    admissible rows.  ``credits=None`` means every receiver starts fully
+    credited (``capacity`` each) — the uncontended single-shot assumption
+    (benchmarks, examples).  The termination drive instead cold-starts its
+    carried credits at ZERO — the first round is advert-only, so no wire is
+    risked before any receiver has spoken (see ``drive_start``).
 
     ``health`` (optional ``(R,) bool``, replicated) drains sick ranks: every
     destination on an unhealthy rank is re-addressed pre-marshal through the
@@ -447,10 +524,23 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig, *, age=None, health=None):
         if age is None:
             age = jnp.zeros((cfg.capacity,), jnp.int32)
         kwargs.update(overflow="retain", age=age)
+    credit = cfg.flow == "credit"
+    if credit:
+        if credits is None:
+            # single-shot call: assume uncontended, fully credited receivers
+            credits = jnp.full((R,), cfg.capacity, jnp.int32)
+        kwargs.update(
+            flow="credit", credits=credits,
+            credit_reserve=credit_reserve_rows(cfg),
+        )
     fn = _EXCHANGES[cfg.exchange]
-    stats = pending = None
+    stats = pending = credits_out = None
     res = fn(packed, perm, send_counts, **kwargs)
-    if retain and cfg.telemetry:
+    if credit and cfg.telemetry:
+        recv_packed, recv_counts, new_count, drops, pending, credits_out, stats = res
+    elif credit:
+        recv_packed, recv_counts, new_count, drops, pending, credits_out = res
+    elif retain and cfg.telemetry:
         recv_packed, recv_counts, new_count, drops, pending, stats = res
     elif retain:
         recv_packed, recv_counts, new_count, drops, pending = res
@@ -539,7 +629,11 @@ def forward_work(q: WorkQueue, cfg: ForwardConfig, *, age=None, health=None):
                 retained_rows=ret_count,
                 age_max=jnp.max(age_out).astype(jnp.int32),
             )
+            if credit:
+                return new_q, total, age_out, credits_out, stats
             return new_q, total, age_out, stats
+        if credit:
+            return new_q, total, age_out, credits_out
         return new_q, total, age_out
 
     new_q = WorkQueue(

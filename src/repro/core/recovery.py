@@ -95,6 +95,8 @@ def _carry_like(ctx, aux_like: Any, *, accounting: bool = True) -> Dict[str, Any
     }
     if cfg.overflow == "retain":
         like["age"] = np.zeros((R * C,), np.int32)
+    if cfg.flow == "credit":
+        like["credits"] = np.zeros((R * R,), np.int32)
     if cfg.telemetry:
         ring = TS.make_ring(
             TS.num_tiers(cfg),
@@ -118,6 +120,7 @@ def _meta_of(ctx, rnd: int) -> Dict[str, Any]:
         "num_ranks": int(ctx.num_ranks),
         "capacity": int(cfg.capacity),
         "overflow": cfg.overflow,
+        "flow": cfg.flow,
         "telemetry": bool(cfg.telemetry),
         "telemetry_window": int(cfg.telemetry_window),
         "pipeline_shards": int(cfg.pipeline_shards),
@@ -297,6 +300,12 @@ def resume_run(
             f"{cfg.overflow!r} vs {meta.get('overflow')!r}, telemetry "
             f"{cfg.telemetry} vs {meta.get('telemetry')}"
         )
+    # pre-backpressure checkpoints have no "flow" key: they are open-flow
+    if meta.get("flow", "open") != cfg.flow:
+        raise ValueError(
+            f"resume context disagrees with checkpoint: flow "
+            f"{cfg.flow!r} vs {meta.get('flow', 'open')!r}"
+        )
     like_new = _carry_like(ctx, aux_like, accounting=True)
     R_old, C_old = int(meta["num_ranks"]), int(meta["capacity"])
     if R_old == ctx.num_ranks and C_old == cfg.capacity:
@@ -452,6 +461,11 @@ def _elastic_restore(
     }
     if retain:
         carry["age"] = new_age
+    if cfg.flow == "credit":
+        # conservative cold restart: zero credits → the first resumed round
+        # is advert-only, exactly like a fresh drive_start (no wire risked
+        # against adverts computed for the retired mesh shape)
+        carry["credits"] = np.zeros((R_new * R_new,), np.int32)
     if cfg.telemetry:
         ring = TS.make_ring(
             TS.num_tiers(cfg),

@@ -59,6 +59,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "RoundState",
+    "CreditGate",
     "SpillExtract",
     "Marshal",
     "CountExchange",
@@ -400,6 +401,16 @@ class RoundState:
     retain: bool = False
     age: Any = None
 
+    # credit flow (the backpressure law, ISSUE 9) — all None/"open" unless
+    # ForwardConfig(flow="credit"); the branches they feed are Python-static
+    # so the open-flow lowering is byte-identical with or without them.
+    flow: str = "open"
+    credits: Any = None  # carried-in (R,) per-destination free estimates
+    credit_allow: Any = None  # (R,) this round's per-destination grant
+    credits_out: Any = None  # working/updated (R,) estimates (returned)
+    my_free: Any = None  # this rank's advertised receive room this round
+    stage_held: Any = None  # rows the current clamp held locally (telemetry)
+
     # clamp site (written by SpillExtract)
     clamped: Any = None  # flat: (R,) per-destination clamped counts
     allowed: Any = None  # tier: (G, A) surviving sub-segment sizes
@@ -434,6 +445,41 @@ class RoundState:
 
 
 @dataclasses.dataclass(frozen=True)
+class CreditGate:
+    """The backpressure law's sender gate (``flow="credit"``, ISSUE 9).
+
+    Deterministically apportions each destination's one-round-stale
+    advertised free space across the R contending senders: rank ``me`` may
+    ship ``free[d] // R + (me < free[d] % R)`` rows to destination ``d`` —
+    floor share plus rank-ordered residual.  The grants over all senders sum
+    to EXACTLY the advertised space, so an incast can never overshoot the
+    receiver, and every rank computes every grant locally from the same
+    replicated credit vector (collective-free, deterministic across marshal
+    modes and shard counts).  The grant tightens the §3.3 sender clamp in
+    :class:`SpillExtract`; the un-credited tail of each segment follows the
+    ``overflow="retain"`` spill path instead of shipping — no wire byte is
+    spent on a row its receiver cannot admit.
+    """
+
+    axis_name: Any  # FLAT mesh axis name(s): global rank index
+    num_ranks: int
+
+    def __call__(self, st: RoundState) -> RoundState:
+        me = jax.lax.axis_index(self.axis_name)
+        free = jnp.clip(st.credits, 0)
+        st.credit_allow = (
+            free // self.num_ranks
+            + (me < free % self.num_ranks).astype(jnp.int32)
+        ).astype(jnp.int32)
+        st.credits_out = st.credits
+        return st
+
+    def shard(self, st: RoundState, k: int) -> RoundState:
+        # grants are shard-independent (the slot chunking happens downstream)
+        return self(st) if k == 0 else st
+
+
+@dataclasses.dataclass(frozen=True)
 class SpillExtract:
     """The §3.3 clamp site.  ``kind="flat"``: the sender clamp of the flat
     backends (per-destination counts vs the ``slot`` budget).
@@ -448,12 +494,17 @@ class SpillExtract:
     retain: bool = False
     kind: str = "flat"
     extent: int = 0  # tier: A_l, the stage's axis size
+    reserve: int = 0  # credit: receive room withheld for local emissions
 
     def __call__(self, st: RoundState) -> RoundState:
         if self.kind == "tier":
             return self._tier(st)
         S = self.slot
         st.clamped = jnp.minimum(st.send_counts, S)
+        if st.flow == "credit":
+            # the credit gate's per-destination grant tightens the slot
+            # clamp; the extra cut rows ride the same retain spill below
+            st.clamped = jnp.minimum(st.clamped, st.credit_allow)
         send_drops = jnp.sum(st.send_counts - st.clamped)
         if self.retain:
             # The clamp's cut rows are the per-destination segment TAILS of
@@ -471,6 +522,30 @@ class SpillExtract:
                 dest_clean=st.dest_clean, dest_rank=st.dest_rank,
             ))
             st.front = jnp.minimum(send_drops, self.capacity)
+            st.stage_held = send_drops
+            if st.flow == "credit":
+                # my advertisement: the receive room left behind the spill
+                # front, MINUS the reserve withheld for next round's local
+                # emissions.  Senders use it one round stale — with the
+                # drive's emission gate (retained + emitted + advert ≤
+                # capacity) next round's spill front can never grow into
+                # the room advertised here, so granted arrivals always fit:
+                # the flat credit path is receiver-drop-free by construction.
+                # The liveness floor (min(room, R)) keeps up to one credit
+                # PER SENDER alive whenever room exists: the floor never
+                # exceeds room, so advert + front still never exceeds
+                # capacity (the drop-free proof is untouched), but a backlog
+                # that ate into the emission reserve can no longer pin the
+                # advert at zero — and because the floor covers all R
+                # senders, the rank-ordered residual cannot starve high
+                # ranks when every queue saturates at once (a floor of 1
+                # would hand the single credit to rank 0 every round and
+                # collapse sustained-overload drain to ~1 row/round).
+                room = self.capacity - st.front
+                st.my_free = jnp.maximum(
+                    jnp.clip(room - self.reserve, 0),
+                    jnp.minimum(room, self.num_ranks),
+                ).astype(jnp.int32)
             send_drops = jnp.zeros_like(send_drops)
         st.send_drops = send_drops
         return st
@@ -478,7 +553,16 @@ class SpillExtract:
     def _tier(self, st: RoundState) -> RoundState:
         A, S, R = self.extent, self.slot, self.num_ranks
         cnt2d = st.cnt.reshape(R // A, A)  # rows: buffer order, cols: peer digit
-        st.allowed, st.starts = clamp_subsegments(cnt2d, S)
+        cnt_eff = cnt2d
+        if st.flow == "credit" and st.via_perm:
+            # The route's FIRST clamp is the credit gate: at stage one the
+            # buffer is in destination order, so the per-destination grant
+            # reshapes straight onto the sub-segment grid.  Gating here
+            # means the un-credited tail never enters ANY fabric tier — a
+            # saturated node throttles the slow/DCN stage at the source,
+            # not just the last hop.
+            cnt_eff = jnp.minimum(cnt2d, st.credit_allow.reshape(R // A, A))
+        st.allowed, st.starts = clamp_subsegments(cnt_eff, S)
         stage_drops = jnp.sum(cnt2d - st.allowed)
         if self.retain:
             alf = st.allowed.reshape(-1)  # flat, current buffer/destination order
@@ -512,6 +596,7 @@ class SpillExtract:
                     stage_drops,
                 ))
             st.spill_run = st.spill_run + stage_drops
+            st.stage_held = stage_drops
             stage_drops = jnp.zeros_like(stage_drops)
         st.stage_drops = stage_drops
         st.drops = st.drops + stage_drops
@@ -616,22 +701,98 @@ class CountExchange:
     runs repeat the FULL vector per shard (each micro-shard's chain derives
     its own landing offsets — control-plane bytes ×S, payload bytes exact);
     sharded tier runs ship each shard's own chunk counts and sum them back
-    on receive."""
+    on receive.
+
+    Credit flow (ISSUE 9): with ``st.flow == "credit"`` the count matrix
+    widens by ONE i32 column carrying the credit advertisement — the SAME
+    collective the round already runs, nothing payload-sized, so the budget
+    law's inventory is unchanged.  Flat: every rank ships its own receive
+    room and reads back all R advertisements.  Hierarchical: credits
+    aggregate per tier — at tier ``l`` each peer ships the MIN cached
+    estimate over its tier-l subtree (the ranks its already-run faster-tier
+    exchanges aggregated: ``r // stride_l == me // stride_l``), the final
+    tier folding in its own fresh post-spill headroom first; receivers fan
+    the aggregate back over the peer's subtree.  A saturated rank drags its
+    node's aggregate down within one round, throttling remote senders at
+    the route's FIRST clamp — before the slow fabric.  Conservative by
+    construction (a min under-, never over-states any member's room; only
+    staleness can overshoot, absorbed by the retain spill)."""
 
     axis_name: Any
     kind: str = "flat"
     shards: int = 1
     slot: int = 0  # tier: full per-peer slot rows (shard chunking)
+    num_ranks: int = 0  # credit: global rank count R
+    stride: int = 1  # credit tier: Π level_sizes[l+1:] — the tier's stride
+    capacity: int = 0  # credit final: queue capacity (fresh headroom)
+    flat_axes: Any = None  # credit hierarchical: flattened axis names
+    reserve: int = 0  # credit: receive room withheld for local emissions
 
     def __call__(self, st: RoundState) -> RoundState:
         if self.kind == "tier":
-            st.rcv = a2a(st.allowed.T, self.axis_name)  # (A, G): [src digit, sub-seg]
+            if st.flow == "credit":
+                st.rcv = self._credit_recv(st, st.allowed.T)
+            else:
+                st.rcv = a2a(st.allowed.T, self.axis_name)  # (A, G): [src digit, sub-seg]
         elif self.kind == "final":
-            recv = a2a(jnp.sum(st.allowed, axis=0)[:, None], self.axis_name)
-            st.recv_counts = recv.reshape(-1)
+            sums = jnp.sum(st.allowed, axis=0)[:, None]
+            if st.flow == "credit":
+                st.recv_counts = self._credit_recv(st, sums).reshape(-1)
+            else:
+                st.recv_counts = a2a(sums, self.axis_name).reshape(-1)
         else:
-            st.recv_counts = a2a(st.clamped[:, None], self.axis_name).reshape(-1)
+            if st.flow == "credit":
+                # widen (R, 1) → (R, 2): column 1 carries my receive room to
+                # every peer; received column 1 is all R advertisements
+                wide = jnp.stack(
+                    [st.clamped,
+                     jnp.full_like(st.clamped, st.my_free)], axis=1
+                )
+                recv = a2a(wide, self.axis_name)
+                st.recv_counts = recv[:, 0]
+                st.credits_out = recv[:, 1]
+            else:
+                st.recv_counts = a2a(st.clamped[:, None], self.axis_name).reshape(-1)
         return st
+
+    def _credit_recv(self, st: RoundState, counts: jax.Array) -> jax.Array:
+        """Run the tier/final count a2a widened with the advertisement
+        column, apply the received aggregates to ``st.credits_out``, and
+        return the un-widened count block."""
+        A = counts.shape[0]
+        me = jax.lax.axis_index(self.flat_axes)
+        if self.kind == "final":
+            # fold my own fresh post-spill headroom into the carried view
+            # before aggregating (spill_run is complete at the final tier —
+            # this is exactly the room the final Unmarshal grants arrivals)
+            room = jnp.clip(self.capacity - st.spill_run, 0)
+            # reserve withheld for local emissions + the per-sender liveness
+            # floor (see SpillExtract's flat advert)
+            fresh = jnp.maximum(
+                jnp.clip(room - self.reserve, 0),
+                jnp.minimum(room, self.num_ranks),
+            ).astype(jnp.int32)
+            st.my_free = fresh
+            st.credits_out = st.credits_out.at[me].set(fresh)
+        r = jnp.arange(self.num_ranks, dtype=jnp.int32)
+        sub = (r // self.stride) == (me // self.stride)  # my tier-l subtree
+        adv = jnp.min(
+            jnp.where(sub, st.credits_out, jnp.int32(self.capacity))
+        )
+        wide = jnp.concatenate(
+            [counts, jnp.full((A, 1), adv, counts.dtype)], axis=1
+        )
+        recv = a2a(wide, self.axis_name)
+        # peer a's aggregate covers ranks sharing my slower digits with
+        # digit_l = a; my own subtree keeps its fresher per-rank entries
+        dig = (r // self.stride) % A
+        me_dig = (me // self.stride) % A
+        blk = (r // (self.stride * A)) == (me // (self.stride * A))
+        upd = blk & (dig != me_dig)
+        st.credits_out = jnp.where(
+            upd, jnp.take(recv[:, -1], dig), st.credits_out
+        )
+        return recv[:, :-1]
 
     def shard(self, st: RoundState, k: int) -> RoundState:
         if self.kind != "tier":
@@ -643,7 +804,15 @@ class CountExchange:
         # its landing offsets without waiting on siblings).
         chunk = self.slot // self.shards
         allowed_k = jnp.clip(st.allowed - k * chunk, 0, chunk)
-        part = a2a(allowed_k.T, self.axis_name)
+        if st.flow == "credit":
+            # same widened collective per shard; the advertisement column is
+            # shard-independent, so only shard 0's read updates the credits
+            saved = st.credits_out
+            part = self._credit_recv(st, allowed_k.T)
+            if k > 0:
+                st.credits_out = saved
+        else:
+            part = a2a(allowed_k.T, self.axis_name)
         st.rcv = part if k == 0 else st.rcv + part
         return st
 

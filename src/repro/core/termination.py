@@ -30,13 +30,20 @@ run and a segmented run execute bit-identical programs round for round.
 """
 from __future__ import annotations
 
+import inspect
+
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro import compat
-from repro.core.forwarding import ForwardConfig, flatten_axis_names, forward_work
+from repro.core.forwarding import (
+    ForwardConfig,
+    credit_reserve_rows,
+    flatten_axis_names,
+    forward_work,
+)
 from repro.core.queue import DISCARD, WorkQueue
 from repro.telemetry import stats as TS
 
@@ -80,18 +87,26 @@ def _split_retained(q: WorkQueue) -> Tuple[jax.Array, WorkQueue]:
 
 
 def _merge_retained(
-    q: WorkQueue, n_ret: jax.Array, out_q: WorkQueue, age: jax.Array
+    q: WorkQueue, n_ret: jax.Array, out_q: WorkQueue, age: jax.Array,
+    limit=None,
 ) -> Tuple[WorkQueue, jax.Array]:
     """Recombine the retained front of ``q`` with ``round_fn``'s output queue
     (retained FIRST — FIFO priority through the stable marshal).  Emissions
     that don't fit behind the backlog are cut and counted (unreachable when
-    the app sizes ``capacity`` for its emission burst plus worst-case spill).
+    the app sizes ``capacity`` for its emission burst plus worst-case spill —
+    and surfaced per round as the ``emit_overflow`` telemetry counter).
+    Under credit flow the drive passes ``limit = capacity − outstanding
+    advert``: emissions may never eat room already promised to in-flight
+    arrivals, which is what makes the credit law receiver-drop-free even
+    against an app that ignores its emission headroom.  Retained rows are
+    never cut — ``limit`` binds emissions only.
     Returns ``(merged_queue, age_in)`` ready for ``forward_work``."""
     C = q.capacity
     lane = jnp.arange(C, dtype=jnp.int32)
     tail = jnp.clip(lane - n_ret, 0, C - 1)
     n_tot = n_ret + out_q.count
-    count = jnp.minimum(n_tot, C)
+    cap = C if limit is None else jnp.maximum(limit, n_ret)
+    count = jnp.minimum(n_tot, cap)
     front = lane < n_ret
 
     def merge(_):
@@ -125,22 +140,33 @@ def _merge_retained(
     return merged, age_in
 
 
-def _fwd(q, age, cfg, health):
-    """Uniform forward_work unpack: ``(new_q, total, age_out, stats)`` with
-    Nones where the config doesn't produce the value."""
+def _fwd(q, age, cfg, health, credits=None):
+    """Uniform forward_work unpack: ``(new_q, total, age_out, credits_out,
+    stats)`` with Nones where the config doesn't produce the value."""
     retain = cfg.overflow == "retain"
-    if retain and cfg.telemetry:
+    credit = cfg.flow == "credit"
+    if credit and cfg.telemetry:
+        new_q, total, age_out, credits_out, stats = forward_work(
+            q, cfg, age=age, health=health, credits=credits
+        )
+    elif credit:
+        new_q, total, age_out, credits_out = forward_work(
+            q, cfg, age=age, health=health, credits=credits
+        )
+        stats = None
+    elif retain and cfg.telemetry:
         new_q, total, age_out, stats = forward_work(q, cfg, age=age, health=health)
+        credits_out = None
     elif retain:
         new_q, total, age_out = forward_work(q, cfg, age=age, health=health)
-        stats = None
+        credits_out = stats = None
     elif cfg.telemetry:
         new_q, total, stats = forward_work(q, cfg, health=health)
-        age_out = None
+        age_out = credits_out = None
     else:
         new_q, total = forward_work(q, cfg, health=health)
-        age_out = stats = None
-    return new_q, total, age_out, stats
+        age_out = credits_out = stats = None
+    return new_q, total, age_out, credits_out, stats
 
 
 def drive_start(
@@ -165,7 +191,17 @@ def drive_start(
     ``emitted == delivered + in-flight + drops`` holds exactly; both are
     values the loop computes anyway, so the cost is two scalar adds).
     """
-    q1, total0, age1, stats0 = _fwd(q0, None, cfg, health)
+    credit = cfg.flow == "credit"
+    credits0 = None
+    if credit:
+        # cold start at ZERO credit: the first forward is advert-only (all
+        # rows retained), so no wire byte is risked before any receiver has
+        # advertised — the backpressure law holds from round one
+        credits0 = jnp.zeros((cfg.num_ranks,), jnp.int32)
+    q1, total0, age1, credits1, stats0 = _fwd(q0, None, cfg, health, credits0)
+    if cfg.telemetry and stats0 is not None:
+        # round 0's local emission loss is the ray-gen enqueue overflow
+        stats0 = TS.attach_emit_overflow(stats0, q0.drops)
     carry: Dict[str, Any] = {
         "q": _vary(q1, cfg.axis_name),
         "aux": _vary(aux0, cfg.axis_name),
@@ -175,6 +211,8 @@ def drive_start(
     }
     if cfg.overflow == "retain":
         carry["age"] = _vary(age1, cfg.axis_name)
+    if credit:
+        carry["credits"] = _vary(credits1, cfg.axis_name)
     if cfg.telemetry:
         ring0 = TS.ring_push(
             TS.make_ring(
@@ -210,7 +248,18 @@ def drive_segment(
     """
     telem = cfg.telemetry
     retain = cfg.overflow == "retain"
+    credit = cfg.flow == "credit"
     track = "emitted" in carry
+    # Emission gate (credit flow): round_fn may declare a ``headroom``
+    # keyword to receive its per-round emission budget — the receive room
+    # not already owed to retained backlog or outstanding advertised
+    # credits.  An app that emits within it never sees emit_overflow; one
+    # that ignores it degrades locally (counted), never on the wire.
+    wants_headroom = False
+    try:
+        wants_headroom = "headroom" in inspect.signature(round_fn).parameters
+    except (TypeError, ValueError):  # builtins / exotic callables: no gate
+        pass
 
     def cond(c):
         return (c["total"] > 0) & (c["rnd"] < seg_end)
@@ -226,15 +275,35 @@ def drive_segment(
         if retain:
             n_ret, view = _split_retained(q)
             consumed = view.count
-            out_q, aux = round_fn(view, aux, rnd)
-            fwd_q, age_in = _merge_retained(q, n_ret, out_q, c["age"])
+            limit = None
+            kw = {}
+            if credit:
+                # my outstanding advert = my own carried entry (the count
+                # collective hands every rank its own fresh value back)
+                me = jax.lax.axis_index(flatten_axis_names(cfg.axis_name))
+                adv = jnp.clip(jnp.take(c["credits"], me), 0)
+                limit = (cfg.capacity - adv).astype(jnp.int32)
+                if wants_headroom:
+                    kw["headroom"] = jnp.maximum(limit - n_ret, 0)
+            elif wants_headroom:
+                kw["headroom"] = jnp.maximum(cfg.capacity - n_ret, 0)
+            out_q, aux = round_fn(view, aux, rnd, **kw)
+            fwd_q, age_in = _merge_retained(q, n_ret, out_q, c["age"], limit)
             attempted = out_q.count + out_q.drops
         else:
             consumed = q.count
-            fwd_q, aux = round_fn(q, aux, rnd)
+            kw = {"headroom": jnp.int32(cfg.capacity)} if wants_headroom else {}
+            fwd_q, aux = round_fn(q, aux, rnd, **kw)
             age_in = None
             attempted = fwd_q.count + fwd_q.drops
-        new_q, total, age_out, stats = _fwd(fwd_q, age_in, cfg, health)
+        new_q, total, age_out, credits_out, stats = _fwd(
+            fwd_q, age_in, cfg, health, c.get("credits")
+        )
+        if telem and stats is not None:
+            # local emission loss this round: enqueue overflow inside
+            # round_fn plus the merge's emission cut — rows lost BEFORE the
+            # wire, distinct from every clamp/admission counter
+            stats = TS.attach_emit_overflow(stats, fwd_q.drops)
         # Per-round queues are fresh, so cumulative overflow drops must ride
         # the loop carry (observability: silent loss is a capacity bug).
         drops = drops + new_q.drops
@@ -247,6 +316,8 @@ def drive_segment(
         }
         if retain:
             out["age"] = _vary(age_out, cfg.axis_name)
+        if credit:
+            out["credits"] = _vary(credits_out, cfg.axis_name)
         if telem:
             out["ring"] = _vary(TS.ring_push(c["ring"], stats), cfg.axis_name)
         if track:

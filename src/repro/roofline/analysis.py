@@ -361,6 +361,66 @@ def spill_drain_model(backlog_rows: int, allowance_rows_per_round: int) -> Dict:
     return {"rounds": rounds, "age_bound": rounds}
 
 
+def goodput_model(
+    offered_rows_per_round: int,
+    drain_rows_per_round: int,
+    *,
+    rounds: int = 1,
+    item_bytes: int = 1,
+) -> Dict:
+    """Model: wire goodput under sustained overload, open vs credit flow
+    (the backpressure law's analytical half, gated by the chaos benchmark).
+
+    ``offered_rows_per_round`` rows per round contend for a receiver that
+    can consume (drain) ``drain_rows_per_round``.  With ``flow="open"`` the
+    senders ship the full offered load every round; once the receiver's
+    bounded queue saturates it admits only what it drains, so every other
+    shipped row is wire spent on a row the receiver throws away:
+
+        goodput_open  →  min(1, drain / offered)
+
+    With ``flow="credit"`` senders ship only rows the receiver's advertised
+    free space admits — a shipped row is an admitted row by construction:
+
+        goodput_credit = 1.0
+
+    at the price of the excess being HELD at the source through the retain
+    spill path (``held_rows``), draining after the overload subsides.  The
+    chaos gate asserts the measured goodputs respect this ordering on every
+    overload scenario: credit ≥ open, with open below 0.7 where the
+    scenario offers ≥ 1.43× the drain rate.
+
+    Returns ``{"open": {wire_B, admitted_B, wasted_B, goodput},
+    "credit": {wire_B, admitted_B, wasted_B, goodput, held_rows},
+    "goodput_gain"}`` — totals over ``rounds`` rounds.
+    """
+    if drain_rows_per_round < 1:
+        raise ValueError(
+            "drain must be >= 1 row/round — every clamp/credit budget admits "
+            f"at least one row (got {drain_rows_per_round})"
+        )
+    offered = float(offered_rows_per_round) * rounds
+    admitted = float(min(offered_rows_per_round, drain_rows_per_round)) * rounds
+    open_flow = {
+        "wire_B": offered * item_bytes,
+        "admitted_B": admitted * item_bytes,
+        "wasted_B": (offered - admitted) * item_bytes,
+        "goodput": admitted / offered if offered else 1.0,
+    }
+    credit_flow = {
+        "wire_B": admitted * item_bytes,
+        "admitted_B": admitted * item_bytes,
+        "wasted_B": 0.0,
+        "goodput": 1.0,
+        "held_rows": offered - admitted,
+    }
+    return {
+        "open": open_flow,
+        "credit": credit_flow,
+        "goodput_gain": credit_flow["goodput"] - open_flow["goodput"],
+    }
+
+
 def marshal_cost_model(
     marshal: str,
     *,

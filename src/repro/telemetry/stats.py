@@ -33,6 +33,19 @@ The recorded quantities, per round, per rank:
   instead of dropping, and the oldest retained lane's rounds-waiting counter
   (the anti-starvation bound the chaos gate asserts on).  Zero under
   ``overflow="drop"``.
+* ``credits_granted`` / ``rows_held`` (L,) — backpressure observability
+  (ISSUE 9, ``ForwardConfig(flow="credit")``): the wire allowance the credit
+  apportionment granted this rank at the gating tier, and the rows each
+  tier's clamp held locally this round (under open flow ``rows_held`` is the
+  retain spill count; under credit it includes the un-credited tails).  Like
+  every other field, derived from control-plane values the round already
+  computes — zero added collectives.
+* ``emit_overflow`` — rows the LOCAL emission path discarded (the
+  application enqueued past the queue capacity, or the retained-rows merge
+  clipped at capacity).  Previously folded silently into ``drops``; surfaced
+  separately so the chaos uid accounting can attribute it (retain + credit
+  together must drive it to zero — the graceful-degradation half of the
+  backpressure law).  Stamped by the drive, not the exchange.
 
 Tier indexing matches ``ForwardConfig``: hierarchical configs record one row
 per ``level_sizes`` entry (slowest first; extent-1 tiers skip their stage and
@@ -58,6 +71,7 @@ import numpy as np
 __all__ = [
     "RoundStats",
     "StatsRing",
+    "attach_emit_overflow",
     "bucket_width",
     "bucket_upper_edges",
     "occupancy_bucket",
@@ -93,6 +107,9 @@ class RoundStats:
     recv_drops: jax.Array    # () rows the receiver compaction cut
     retained_rows: jax.Array  # () rows retained locally (overflow="retain")
     age_max: jax.Array       # () oldest retained lane's rounds waiting
+    credits_granted: jax.Array  # (L,) credit allowance granted (flow="credit")
+    rows_held: jax.Array     # (L,) rows each tier's clamp held locally
+    emit_overflow: jax.Array  # () local emission rows clipped (drive-stamped)
 
     @property
     def tiers(self) -> int:
@@ -175,6 +192,9 @@ def make_stats(tiers: int, buckets: int) -> RoundStats:
         recv_drops=z,
         retained_rows=z,
         age_max=z,
+        credits_granted=jnp.zeros((tiers,), jnp.int32),
+        rows_held=jnp.zeros((tiers,), jnp.int32),
+        emit_overflow=z,
     )
 
 
@@ -187,6 +207,8 @@ def single_tier_stats(
     stage_drops: jax.Array,  # () send-clamp drops
     recv_total: jax.Array,  # () rows arriving pre receiver clamp
     recv_drops: jax.Array,  # () receiver compaction drops
+    credits_granted: jax.Array = None,  # () credit allowance granted
+    rows_held: jax.Array = None,  # () rows the send clamp held locally
 ) -> RoundStats:
     """The flat-backend capture: one tier, filled in one call.  The retain
     fields start zero — ``forward_work`` stamps them after the merge (the
@@ -202,6 +224,11 @@ def single_tier_stats(
         recv_drops=recv_drops.astype(jnp.int32),
         retained_rows=z,
         age_max=z,
+        credits_granted=(
+            z if credits_granted is None else credits_granted.astype(jnp.int32)
+        )[None],
+        rows_held=(z if rows_held is None else rows_held.astype(jnp.int32))[None],
+        emit_overflow=z,
     )
 
 
@@ -214,6 +241,16 @@ def make_ring(tiers: int, *, window: int, buckets: int) -> StatsRing:
             lambda a: jnp.zeros((window,) + a.shape, a.dtype), proto
         ),
         pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def attach_emit_overflow(stats: RoundStats, n) -> RoundStats:
+    """Stamp the round's local emission loss onto a snapshot — the drive
+    owns this number (round_fn's enqueue overflow plus the retained-rows
+    merge cut), so the exchange backends leave the field zero and the
+    termination loop stamps it just before the ring push."""
+    return dataclasses.replace(
+        stats, emit_overflow=jnp.asarray(n).astype(jnp.int32)
     )
 
 
@@ -291,6 +328,21 @@ def summarize(ring: StatsRing, *, tier_capacities: Tuple[int, ...]) -> Dict:
         # the controller treats retained != 0 like drops != 0 (not converged)
         "retained_rows": int(np.asarray(ring.stats.retained_rows).sum()),
         "age_max": int(np.asarray(ring.stats.age_max).max()),
+        # backpressure-law observability (ISSUE 9): credit allowance granted
+        # and rows held per tier; local emission clips; and goodput — the
+        # fraction of rows put on the wire that the receivers admitted
+        # (1.0 when nothing is clipped; flow="credit" must keep it at or
+        # above the open-flow value on every overload scenario)
+        "credits_granted": np.asarray(ring.stats.credits_granted)
+        .reshape(-1, L).sum(axis=0),
+        "rows_held": np.asarray(ring.stats.rows_held).reshape(-1, L).sum(axis=0),
+        "emit_overflow": int(np.asarray(ring.stats.emit_overflow).sum()),
+        "goodput": (
+            1.0
+            if int(np.asarray(ring.stats.recv_total).sum()) == 0
+            else 1.0
+            - recv_drops / int(np.asarray(ring.stats.recv_total).sum())
+        ),
     }
 
 
@@ -331,6 +383,7 @@ def ring_trace(ring: StatsRing) -> Dict:
         "age_max": per_round(ring.stats.age_max, np.max),
         "recv_total": per_round(ring.stats.recv_total, np.sum),
         "recv_drops": per_round(ring.stats.recv_drops, np.sum),
+        "emit_overflow": per_round(ring.stats.emit_overflow, np.sum),
     }
 
 

@@ -56,6 +56,16 @@ def pytest_configure(config):
     )
     config.addinivalue_line(
         "markers",
+        "backpressure: exercises the ISSUE-9 backpressure law — credit-based "
+        "flow control (``ForwardConfig.flow='credit'``): widened count "
+        "collectives carrying receiver adverts, deterministic floor-share "
+        "credit apportionment, the drive's emission gate, and graceful "
+        "degradation under sustained overload (bounded occupancy, zero "
+        "receiver drops where open flow wastes wire).  Part of tier-1; CI "
+        "can select with `-m backpressure`.",
+    )
+    config.addinivalue_line(
+        "markers",
         "pipeline: exercises the ISSUE-8 overlap law — micro-shard pipelined "
         "forwarding (``ForwardConfig.pipeline_shards``) built on the stage-"
         "graph exchange layer (repro.core.stages).  Placement must stay "

@@ -555,6 +555,95 @@ def test_pipelined_3level_budget_S_per_axis(mesh_pods222):
     assert sorted(t for _b, t in counts) == [0, 0, 1, 1, 2, 2], a2a
 
 
+# ----------------------------------------------- credit budget (ISSUE 9)
+def _lower_round_any_flow(mesh, cfg, axes):
+    """Flow-mode-agnostic lowering: a credit round returns ``age_out`` and
+    ``credits_out`` (kept live so their computation can't be DCE'd); other
+    modes return zero placeholders so every program has the same output
+    signature and only the round's internals differ."""
+    def kernel(_x):
+        q = make_queue(ray_proto(), CAP)
+        me = jax.lax.axis_index(axes)
+        q = enqueue(
+            q, make_rays(10), ((me + jnp.arange(10)) % R).astype(jnp.int32),
+            jnp.ones(10, bool),
+        )
+        credits = (
+            jnp.full((R,), 4, jnp.int32) if cfg.flow == "credit" else None
+        )
+        res = forward_work(q, cfg, credits=credits)
+        nq, total = res[0], res[1]
+        age = res[2] if cfg.overflow == "retain" else jnp.zeros(CAP, jnp.int32)
+        creds = res[3] if cfg.flow == "credit" else jnp.zeros(R, jnp.int32)
+        return nq.count[None], total, nq.items.tmin, age, creds[None]
+
+    spec = P(axes)
+    return jax.jit(
+        compat.shard_map(
+            kernel, mesh=mesh, in_specs=spec,
+            out_specs=(spec, P(), spec, spec, spec),
+        )
+    ).lower(jnp.arange(8.0)).as_text()
+
+
+@pytest.mark.backpressure
+def test_credit_round_budget_one_payload_one_widened_count(mesh8):
+    """ISSUE 9 acceptance, flat: the credit round still lowers to exactly
+    ONE payload all_to_all of the SAME size as the open round — the advert
+    rides the count collective, widened from (R,) to (R, 2) i32.  Nothing
+    payload-sized is added for flow control."""
+    cfg = ForwardConfig(
+        "data", R, CAP, exchange="padded", overflow="retain", flow="credit"
+    )
+    ops = collective_ops(_lower_round_any_flow(mesh8, cfg, "data"))
+    a2a = [b for k, b in ops if k == "all-to-all"]
+    payload = [b for b in a2a if b >= _payload_threshold(cfg)]
+    counts = [b for b in a2a if b < _payload_threshold(cfg)]
+    assert payload == [R * cfg.peer_capacity * WORDS * 4], a2a
+    assert counts == [R * 2 * 4], a2a  # (R, 2) i32: count + advert columns
+
+
+@pytest.mark.backpressure
+@pytest.mark.parametrize(
+    "fixture,axes,kw",
+    [
+        ("mesh8", "data", dict(exchange="padded")),
+        ("mesh8", "data", dict(exchange="padded", marshal="scatter")),
+        (
+            "mesh_pods222", ("pod", "node", "device"),
+            dict(exchange="hierarchical", level_sizes=(2, 2, 2),
+                 level_capacities=(8, 8, 8)),
+        ),
+    ],
+    ids=["padded", "padded-scatter", "hier3"],
+)
+def test_credit_adds_only_the_widened_count_column(request, fixture, axes, kw):
+    """ISSUE 9 acceptance: the FULL collective inventory of a credit round
+    equals the open-retain round's except that each per-tier count
+    all_to_all grows by exactly one i32 column (A_l · 4 bytes — the advert
+    lane).  Same op kinds, same op count, payload bytes untouched."""
+    mesh = request.getfixturevalue(fixture)
+    cfg_open = ForwardConfig(axes, R, CAP, overflow="retain", **kw)
+    cfg_cred = ForwardConfig(
+        axes, R, CAP, overflow="retain", flow="credit", **kw
+    )
+    ops_open = collective_ops(_lower_round_any_flow(mesh, cfg_open, axes))
+    ops_cred = collective_ops(_lower_round_any_flow(mesh, cfg_cred, axes))
+    assert len(ops_cred) == len(ops_open), (ops_cred, ops_open)
+    sizes = kw.get("level_sizes", (R,))
+    threshold = 4 * R * len(sizes) * 4  # any count block is far below this
+    widened = 0
+    for (ko, bo), (kc, bc) in zip(sorted(ops_open), sorted(ops_cred)):
+        assert kc == ko
+        if bc == bo:
+            continue
+        # a widened count exchange: one extra i32 per segment of the block
+        assert ko == "all-to-all" and bo < threshold, (ops_open, ops_cred)
+        assert (bc - bo) in {4 * a for a in sizes}, (bo, bc)
+        widened += 1
+    assert widened == len(sizes)  # one widened count collective per tier
+
+
 # The pre-refactor (PR 7) lowered HLO of one forward round, snapshotted with
 # THIS harness's kernel before exchange.py was rebuilt on the stage graph.
 # ``pipeline_shards=1`` must reproduce it byte for byte — the stage-graph
