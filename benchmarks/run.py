@@ -80,6 +80,16 @@
                          receiver drops, bounded occupancy, and an
                          advert-only first round where open flow wastes >30%
                          of its wire rows.
+  fwd_walltime_obs_*     ISSUE 10: the same compiled chaos burst with the
+                         ambient span tracer + per-burst metrics snapshot
+                         off vs on (the lowered HLO is identical — this
+                         times the host bookkeeping).
+  obs_flight_report_*    ISSUE 10 acceptance: the incast-collapse overload
+                         pair captured through the tracer and replayed
+                         through the ``repro.obs.report`` flight-data
+                         analyzer — the report must reproduce the driver's
+                         goodput/waste numbers and flag only the open-flow
+                         run as degraded.  FAILS on any mismatch.
   sort_throughput_*      §4.2.1 key pack+sort throughput (keys/s), XLA vs
                          Pallas(interpret) paths.
   app_*                  §5 application throughputs (CPU, small scenes).
@@ -125,6 +135,13 @@ within a 1.05× geomean of open flow on the fully-credited happy path, and
 the chaos_backpressure acceptance must hold (credit lossless with bounded
 occupancy on both overload scenarios where open wastes >30% of its wire
 rows) — BENCH_PR9.json is this gate's dump.
+``--compare off,obs`` is the PR-10 gate: a traced + metered burst must stay
+within a 1.05× walltime geomean of the untraced one (the device program is
+bit-identical by construction; the gate covers the host span/metrics cost),
+and the obs_flight_report acceptance must hold (the flight-data analyzer
+reproduces the chaos driver's goodput/waste numbers from the capture alone
+and flags only the open-flow overload run as degraded) — BENCH_PR10.json is
+this gate's dump.
 ``--autotune`` runs the autotune_drift section alone; ``--chaos`` runs the
 chaos_lossless + chaos_recovery + chaos_backpressure acceptance sections
 alone.
@@ -263,98 +280,18 @@ def fwd_walltime():
 
 
 def _profile_phases(tag, cfg, mesh, n_emit, cap):
-    """--profile: time the four phases of one padded forwarding round as
-    standalone jitted programs — marshal (plan + send-buffer build, via the
-    production ``exchange.padded_send_buffer``), the count collective, the
-    payload collective, and the receive-side unmarshal.  Flat single-axis
-    configs only (the phase split of the N-stage route is the per-stage
-    version of the same four)."""
-    from repro.core import enqueue, make_queue
-    from repro.core import exchange as X
-    from repro.core import sorting as S
-    from repro.core import types as T
-    from repro.core.forwarding import flatten_axis_names
+    """--profile: thin consumer of :func:`repro.obs.phases.profile_phases`
+    (PR 10 promoted the phase split into the observation law's library,
+    growing it from the flat padded four to hierarchical / pipelined /
+    ragged rounds).  Row names ``fwd_profile_{tag}_{phase}`` and the
+    ``marshal_mode=…;n_emit=…`` derived string are STABLE since PR 8; the
+    bench ``_timeit`` methodology is passed through."""
+    from repro.obs.phases import profile_phases
 
-    R, slot = cfg.num_ranks, cfg.peer_capacity
-    words = T.pack_spec(_ray_proto()).total_words
-    axes = flatten_axis_names(cfg.axis_name)
-
-    def setup(me):
-        q = make_queue(_ray_proto(), cap)
-        lane = jnp.arange(n_emit)
-        rays = Ray44(
-            origin=jnp.ones((n_emit, 3)), direction=jnp.ones((n_emit, 3)),
-            tmin=lane.astype(jnp.float32), pixel=lane.astype(jnp.int32),
-            integral=jnp.zeros(n_emit), extra=jnp.zeros((n_emit, 2)),
-        )
-        dest = ((me * 7 + lane * 131) % R).astype(jnp.int32)
-        return enqueue(q, rays, dest, jnp.ones(n_emit, bool))
-
-    def marshal_kernel(x):
-        me = jax.lax.axis_index(axes)
-        q = setup(me)
-        packed, _spec = T.pack_payload(q.items)
-        if cfg.marshal == "scatter":
-            d_clean, rank, hist = S.destination_rank(q.dest, q.count, R)
-            send = X.padded_send_buffer(
-                packed, None, hist[:R], num_ranks=R, peer_capacity=slot,
-                marshal="scatter", dest_clean=d_clean, dest_rank=rank,
-                use_pallas=cfg.use_pallas,
-            )
-        else:
-            perm, _d, counts = S.sort_permutation(
-                q.dest, q.count, R, method=cfg.sort_method
-            )
-            send = X.padded_send_buffer(
-                packed, perm, counts[:R], num_ranks=R, peer_capacity=slot,
-                use_pallas=cfg.use_pallas,
-            )
-        return jnp.sum(send, dtype=jnp.uint32)[None] + x[:1].astype(jnp.uint32) * 0
-
-    def count_collective_kernel(x):
-        me = jax.lax.axis_index(axes)
-        counts = ((me + jnp.arange(R)) % jnp.int32(slot)).astype(jnp.int32)
-        recv = X.exchange_counts(counts, cfg.axis_name)
-        return jnp.sum(recv)[None] + x[:1].astype(jnp.int32) * 0
-
-    def payload_collective_kernel(x):
-        me = jax.lax.axis_index(axes)
-        buf = (
-            me.astype(jnp.uint32) + jnp.arange(R * slot * words, dtype=jnp.uint32)
-        ).reshape(R, slot, words)
-        recv = X._a2a(buf, cfg.axis_name)
-        return jnp.sum(recv, dtype=jnp.uint32)[None] + x[:1].astype(jnp.uint32) * 0
-
-    def unmarshal_kernel(x):
-        me = jax.lax.axis_index(axes)
-        buf = (
-            me.astype(jnp.uint32) + jnp.arange(R * slot * words, dtype=jnp.uint32)
-        ).reshape(R, slot, words)
-        counts = jnp.minimum(
-            ((me + jnp.arange(R)) % jnp.int32(slot)).astype(jnp.int32), cap // R
-        )
-        out, new_count, _drops = X._compact_blocks(
-            buf, counts, cap, use_pallas=cfg.use_pallas
-        )
-        return jnp.sum(out, dtype=jnp.uint32)[None] + (
-            new_count * 0 + x[:1].astype(jnp.int32) * 0
-        ).astype(jnp.uint32)
-
-    phases = (
-        ("marshal", marshal_kernel),
-        ("count_collective", count_collective_kernel),
-        ("payload_collective", payload_collective_kernel),
-        ("unmarshal", unmarshal_kernel),
+    phase_us = profile_phases(
+        cfg, mesh, n_emit=n_emit, cap=cap, proto=_ray_proto(), timeit=_timeit
     )
-    phase_us = {}
-    for phase, kernel in phases:
-        f = jax.jit(
-            compat.shard_map(
-                kernel, mesh=mesh, in_specs=P(axes), out_specs=P(axes)
-            )
-        )
-        us, _ = _timeit(f, jnp.arange(8.0))
-        phase_us[phase] = us
+    for phase, us in phase_us.items():
         emit(
             f"fwd_profile_{tag}_{phase}", us,
             f"marshal_mode={cfg.marshal};n_emit={n_emit}",
@@ -1239,6 +1176,150 @@ def chaos_backpressure():
     )
 
 
+# --------------------------------- ISSUE 10: the observation law (obs)
+def fwd_walltime_obs(samples=8):
+    """Observation-law overhead sweep: the SAME compiled chaos burst timed
+    with the ambient tracer OFF vs ON — the ON arm pays the ambient cost of
+    the toggle (the drive-entry span hooks recording into the ring buffer).
+    The lowered device program is shared by construction (obs is host-only;
+    HLO bit-identity is guarded in ``tests/test_collective_budget.py``), so
+    the delta is exactly the host bookkeeping.  Interleaved samples,
+    per-variant medians (see :func:`_paired_times` for why).
+
+    The metrics EXPORT (``obs.metrics.from_summary`` + the Prometheus
+    render on the burst's flight-recorder summary) is an explicit user
+    call, not part of the toggle — its cost is emitted as an informational
+    ``_metrics`` row per scenario, outside the overhead gate.  Returns
+    ``{(tag, variant): us}`` for the ``--compare off,obs`` gate."""
+    from repro.chaos.driver import _aux0, _make_ctx, _make_round_fn, _seed_queue
+    from repro.chaos.scenarios import burst_storm, rotating_hotspot
+    from repro.obs import metrics as OM
+    from repro.obs import trace as OT
+    from repro.telemetry import stats as TS
+
+    mesh = _mesh8()
+    times = {}
+    for tag, sc in (("hotspot", rotating_hotspot(8)), ("burst", burst_storm(8))):
+        ctx = _make_ctx(mesh, capacity=256, peer_capacity=64, max_rounds=32)
+        rfn = _make_round_fn(ctx, sc)
+        spec = ctx._spec
+        drive = ctx.run_until_done(rfn, aux_specs=(spec,) * 3, max_rounds=32)
+        q0 = _seed_queue(sc, 256)
+        aux0 = _aux0(8)
+        caps = TS.tier_capacities(ctx.cfg)
+
+        def burst():
+            out = drive(q0, aux0)
+            jax.block_until_ready(jax.tree.leaves(out))
+            return out
+
+        burst()
+        out = burst()  # compile + warm
+        ts = {"off": [], "obs": []}
+        for _ in range(samples):
+            t0 = time.perf_counter()
+            burst()
+            ts["off"].append((time.perf_counter() - t0) * 1e6)
+            with OT.capture():
+                t0 = time.perf_counter()
+                burst()
+                ts["obs"].append((time.perf_counter() - t0) * 1e6)
+        record_cfg(f"obs_{tag}", ctx.cfg, mesh)
+        for variant, v in ts.items():
+            us = float(np.median(v))
+            times[(tag, variant)] = us
+            emit(
+                f"fwd_walltime_obs_{tag}_{variant}", us,
+                f"scenario={sc.name};rounds_max=32",
+            )
+        # metrics export cost — explicit user call, informational (ungated)
+        mts = []
+        for _ in range(max(samples, 5)):
+            t0 = time.perf_counter()
+            summary = TS.summarize(out[-1], tier_capacities=caps)
+            OM.to_prometheus(OM.from_summary(summary))
+            mts.append((time.perf_counter() - t0) * 1e6)
+        emit(
+            f"fwd_walltime_obs_{tag}_metrics", float(np.median(mts)),
+            f"scenario={sc.name};rounds_max=32;gated=no",
+        )
+    return times
+
+
+def obs_flight_report():
+    """The ISSUE-10 acceptance run: capture the incast-collapse overload
+    pair (open vs credit, the PR-9 gauntlet point) with the ambient tracer
+    on, build the flight capture, and run the ``repro.obs.report`` analyzer
+    over it.  RAISES unless the report (a) reproduces the chaos driver's
+    goodput and wasted-wire-row numbers exactly from the capture alone and
+    (b) flags the open-flow run — and ONLY it — as degraded.  Like the other
+    acceptance sections this must trip CI, not trend a row."""
+    import tempfile
+    from pathlib import Path
+
+    from repro.chaos import run_scenario
+    from repro.chaos.scenarios import incast_collapse
+    from repro.obs import report as OR
+    from repro.obs import trace as OT
+
+    mesh = _mesh8()
+    sc = incast_collapse(8)
+    C, S = 32, 8  # the chaos_backpressure gauntlet's incast point
+    runs, events, driver = [], [], {}
+    for flow in ("open", "credit"):
+        t0 = time.perf_counter()
+        with OT.capture() as tr:
+            res = run_scenario(
+                mesh, sc, capacity=C, peer_capacity=S, overflow="retain",
+                flow=flow, max_rounds=256,
+            )
+        dt = time.perf_counter() - t0
+        driver[flow] = res
+        runs.append(OR.chaos_capture(
+            f"{sc.name}_{flow}", res, flow=flow, tier_capacities=(S,),
+            capacity=C,
+        ))
+        events.extend(tr.events)
+        emit(
+            f"obs_flight_{sc.name}_{flow}", dt * 1e6,
+            f"goodput={res['goodput']:.3f};wasted={res['wasted_wire_rows']}"
+            f";wire={res['wire_rows']};rounds={res['rounds']}",
+        )
+    problems = []
+    with tempfile.TemporaryDirectory() as d:
+        path = OR.save_capture(
+            Path(d) / "capture.json", runs, events=events,
+            meta={"source": "benchmarks.obs_flight_report"},
+        )
+        report = OR.analyze(OR.load_capture(path))
+    for rr in report["runs"]:
+        res = driver[rr["flow"]]
+        if abs(rr["goodput"] - res["goodput"]) > 1e-9:
+            problems.append(
+                f"{rr['name']}: report goodput {rr['goodput']:.6f} != driver "
+                f"{res['goodput']:.6f}"
+            )
+        if rr["wasted_wire_rows"] != res["wasted_wire_rows"]:
+            problems.append(
+                f"{rr['name']}: report wasted {rr['wasted_wire_rows']} != "
+                f"driver {res['wasted_wire_rows']}"
+            )
+        bad = [c["check"] for c in rr["checks"] if not c["ok"]]
+        if bad:
+            problems.append(f"{rr['name']}: failed checks {bad}")
+    deg = set(report["degraded_runs"])
+    if deg != {f"{sc.name}_open"}:
+        problems.append(
+            f"degraded set {sorted(deg)} != exactly the open run"
+        )
+    if problems:
+        raise RuntimeError("obs flight gate failed: " + "; ".join(problems))
+    print(
+        "# obs flight ok: report reproduces driver goodput/waste on both "
+        "incast runs and flags only the open run as degraded"
+    )
+
+
 # ------------------------------------- ISSUE 4: sort vs scatter marshal
 def _paired_marshal_times(mk_cfg, mesh, axes, n_emit, cap, samples):
     return _paired_times(
@@ -1549,6 +1630,40 @@ def compare_backends(spec: str) -> int:
             print(f"# COMPARE FAILED: {e}")
             return 1
         return 0
+    if names == ("off", "obs"):
+        # PR-10 gate: observation must be ~free — a traced + metered burst
+        # within a 1.05× walltime GEOMEAN of the untraced one (the lowered
+        # HLO is bit-identical by construction; this gates the host
+        # bookkeeping) — and the flight-data analyzer acceptance must hold
+        # (the report reproduces the chaos driver's goodput/waste numbers
+        # from the capture alone and flags only the open-flow overload run
+        # as degraded; it raises otherwise).
+        times = fwd_walltime_obs(samples=40)
+        ratios = []
+        for (tag, variant), us in sorted(times.items()):
+            if variant != "obs":
+                continue
+            ratio = us / times[(tag, "off")]
+            ratios.append(ratio)
+            emit(f"compare_obs_{tag}", us, f"ratio={ratio:.3f}")
+        geomean = float(np.exp(np.mean(np.log(ratios))))
+        emit("compare_obs_geomean", 0.0, f"ratio={geomean:.3f}")
+        if geomean > 1.05:
+            print(
+                f"# COMPARE FAILED: tracing+metrics regresses the untraced "
+                f"burst by {geomean:.2f}x > 1.05x (geomean)"
+            )
+            return 1
+        print(
+            f"# compare ok: obs/off walltime geomean {geomean:.3f} "
+            f"(per-point: {', '.join(f'{r:.3f}' for r in ratios)})"
+        )
+        try:
+            obs_flight_report()
+        except RuntimeError as e:
+            print(f"# COMPARE FAILED: {e}")
+            return 1
+        return 0
     if names == ("nockpt", "ckpt"):
         # PR-7 gate: recovery must be amortized — the segmented drive WITH
         # the checkpoint writer (W=8 rounds between saves) within a 1.05×
@@ -1701,7 +1816,7 @@ def compare_backends(spec: str) -> int:
             "error: --compare supports 'flat,hierarchical', "
             "'flat,hierarchical2,hierarchical3', 'sort,scatter', "
             "'off,telemetry', 'drop,retain', 'nockpt,ckpt', "
-            f"'bulk,pipelined', or 'open,credit', got {spec!r}"
+            f"'bulk,pipelined', 'open,credit', or 'off,obs', got {spec!r}"
         )
     n_emit, cap = 2048, 4096
     flat, hier, mesh = _hier_pair(1, 8, n_emit, cap)
@@ -1802,6 +1917,8 @@ SECTIONS = [
     ("chaos_lossless", chaos_lossless),
     ("chaos_recovery", chaos_recovery),
     ("chaos_backpressure", chaos_backpressure),
+    ("fwd_walltime_obs", fwd_walltime_obs),
+    ("obs_flight_report", obs_flight_report),
     ("rebalance_skew", rebalance_skew),
     ("autotune_drift", autotune_drift),
     ("sort_throughput", sort_throughput),
@@ -1861,7 +1978,13 @@ def main(argv=None) -> None:
                          "the measurement; 'open,credit' gates credit flow "
                          "at a 1.05x walltime geomean over open flow on the "
                          "fully-credited happy path and runs the "
-                         "chaos_backpressure acceptance")
+                         "chaos_backpressure acceptance; 'off,obs' gates "
+                         "the observation law (tracer + metrics snapshot) "
+                         "at a 1.05x walltime geomean over the untraced "
+                         "burst and runs the obs_flight_report acceptance "
+                         "(the analyzer must reproduce the chaos driver's "
+                         "goodput/waste numbers and flag only the open-flow "
+                         "overload run as degraded)")
     args = ap.parse_args(argv)
 
     global PROFILE
@@ -1873,9 +1996,13 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
     if args.compare:
+        t0 = time.perf_counter()
         rc = compare_backends(args.compare)
         if args.json:
-            _write_json(args.json, compare=args.compare, compare_failed=bool(rc))
+            _write_json(
+                args.json, compare=args.compare, compare_failed=bool(rc),
+                compare_walltime_s=round(time.perf_counter() - t0, 3),
+            )
         raise SystemExit(rc)
     failures = []
     selected = [
@@ -1892,16 +2019,25 @@ def main(argv=None) -> None:
                 f"{only_hits}; drop --smoke to run them"
             )
         raise SystemExit(f"error: no benchmark section matches --only {args.only!r}")
+    section_walltime_s = {}
     for name, fn in selected:
+        t0 = time.perf_counter()
         try:
             fn()
         except Exception as e:  # a broken section must not hide the others' rows
             failures.append(name)
             print(f"# section {name} failed: {type(e).__name__}: {e}", flush=True)
+        finally:
+            # per-section wall time rides the JSON dump (the trajectory files
+            # show WHERE a slow bench run spent its minutes, not just rows)
+            section_walltime_s[name] = round(time.perf_counter() - t0, 3)
     print(f"# {len(ROWS)} benchmarks complete" + (f"; failed sections: {failures}" if failures else ""))
 
     if args.json:
-        _write_json(args.json, smoke=bool(args.smoke), failed_sections=failures)
+        _write_json(
+            args.json, smoke=bool(args.smoke), failed_sections=failures,
+            section_walltime_s=section_walltime_s,
+        )
 
     if failures:  # the canary must trip CI, not just leave a comment
         raise SystemExit(1)

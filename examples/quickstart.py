@@ -4,7 +4,9 @@ Mirrors the paper's introductory usage: define a work-item type, emit items
 to destination ranks from per-rank kernels, call the forwarding collective,
 and drive a multi-round computation to distributed termination — here with
 the sort-free ``marshal="scatter"`` hot path and the traffic flight recorder
-(``telemetry=True``) on, printing the burst's traffic summary at the end.
+(``telemetry=True``) on, printing the burst's traffic summary at the end,
+then closing with the observation law: capture a burst, export the Perfetto
+timeline, and run the flight-data analyzer over it.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -27,7 +29,12 @@ from repro.core import (
 )
 
 
+def section(n, title):
+    print(f"== {n}. {title}")
+
+
 # 1. A work item is any dataclass of arrays — RaFI never looks inside (§3.1).
+section(1, "work-item type")
 @work_item
 @dataclasses.dataclass
 class Ray:
@@ -47,6 +54,9 @@ cfg = ForwardConfig(
 
 
 # 2. A per-rank "kernel": read incoming work, emit outgoing work (§3.3).
+section(2, "per-rank round kernel")
+
+
 def round_fn(q_in, acc, rnd):
     me = jax.lax.axis_index("data")
     lane = jnp.arange(CAP)
@@ -63,6 +73,9 @@ def round_fn(q_in, acc, rnd):
 
 # 3. Drive to distributed termination (§4.2.3) — all on device.  With
 #    telemetry on, the StatsRing of the last W rounds rides the loop carry.
+section(3, "drive to distributed termination")
+
+
 def drive(_):
     me = jax.lax.axis_index("data")
     q0 = make_queue(PROTO, CAP)
@@ -94,6 +107,7 @@ assert abs(float(acc.sum()) - expected) < 1e-3
 
 # 4. Read the flight recorder back on the host — what the burst's traffic
 #    looked like, and what repro.tune would size the send slots to.
+section(4, "telemetry summary")
 summary = TM.summarize(ring, tier_capacities=TM.tier_capacities(cfg))
 print(
     f"telemetry: {summary['rounds']} rounds recorded, "
@@ -108,6 +122,7 @@ assert summary["drops"] == 0
 #    marshal of shard k+1 can overlap the wire time of shard k on an async
 #    fabric.  Pipelining changes the SCHEDULE, never the ANSWER — the same
 #    drive is bit-exact with the bulk round.
+section(5, "pipelined overlap, bit-exact")
 cfg = dataclasses.replace(cfg, pipeline_shards=2)
 f2 = jax.jit(compat.shard_map(
     drive, mesh=mesh, in_specs=P("data"),
@@ -124,20 +139,55 @@ print(f"pipelined (S=2) drive bit-exact with bulk: {float(acc2.sum()):.3f}")
 #    slower to drain (credits are one round stale), but goodput 1.0 and zero
 #    loss where open flow drops almost half the traffic.
 from repro.chaos import run_scenario, sustained_overload
+from repro.obs import report as OR
+from repro.obs import trace as OT
 
+section(6, "backpressure under sustained overload")
 sc = sustained_overload()  # 2 of 8 ranks hot: concentration that persists
-for flow in ("open", "credit"):
-    r = run_scenario(
-        mesh, sc, capacity=16, max_rounds=256, flow=flow,
-        overflow="retain", pipeline_shards=4,
-    )
-    print(
-        f"overload [{flow:6s}]: delivered {r['delivered_total']}/{r['emitted']}"
-        f" in {r['rounds']} rounds, goodput {r['goodput']:.3f},"
-        f" drops {r['drops']}"
-    )
-    if flow == "open":
-        assert r["goodput"] < 0.9  # wire wasted on clamped rows
-    else:
-        assert r["goodput"] == 1.0 and r["drops"] == 0 and r["done"]
+results = {}
+# ...captured under the ambient span tracer (PR 10): tracing rides the HOST
+# side only, so the device program — and every number below — is unchanged.
+with OT.capture() as tracer:
+    for flow in ("open", "credit"):
+        r = results[flow] = run_scenario(
+            mesh, sc, capacity=16, max_rounds=256, flow=flow,
+            overflow="retain", pipeline_shards=4,
+        )
+        print(
+            f"overload [{flow:6s}]: delivered {r['delivered_total']}/{r['emitted']}"
+            f" in {r['rounds']} rounds, goodput {r['goodput']:.3f},"
+            f" drops {r['drops']}"
+        )
+        if flow == "open":
+            assert r["goodput"] < 0.9  # wire wasted on clamped rows
+        else:
+            assert r["goodput"] == 1.0 and r["drops"] == 0 and r["done"]
+
+# 7. The observation law (PR 10): the burst above became flight data.  Export
+#    the host span timeline as Perfetto JSON (load it at ui.perfetto.dev),
+#    write the chaos runs into a capture file, and let the analyzer re-derive
+#    the ledger and flag the degraded run — open flow, and only open flow.
+section(7, "observation law: trace export + flight-data report")
+import tempfile
+
+outdir = tempfile.mkdtemp(prefix="rafi_quickstart_")
+trace_path = os.path.join(outdir, "trace.perfetto.json")
+tracer.save(trace_path)
+print(f"perfetto timeline: {trace_path} ({len(tracer.events)} events)")
+
+capture_path = os.path.join(outdir, "capture.json")
+OR.save_capture(
+    capture_path,
+    [
+        OR.chaos_capture(
+            f"{sc.name}_{flow}", results[flow], flow=flow,
+            tier_capacities=(4,), capacity=16,
+        )
+        for flow in ("open", "credit")
+    ],
+    meta={"source": "quickstart"},
+)
+report = OR.analyze(OR.load_capture(capture_path))
+print(OR.render(report))
+assert report["degraded_runs"] == [f"{sc.name}_open"]
 print("OK")

@@ -300,12 +300,22 @@ def _result_dict(sc: Scenario, q, aux, rounds, done, *, cfg=None, ring=None) -> 
         res["age_max"] = summary["age_max"]
         res["goodput"] = summary["goodput"]
         res["emit_overflow"] = summary["emit_overflow"]
+        res["recv_drops"] = summary["recv_drops"]
         trace = TS.ring_trace(ring)
         res["retained_trace"] = trace["retained_rows"]
         res["age_trace"] = trace["age_max"]
         res["recv_trace"] = trace["recv_total"]
         res["wire_rows"] = int(np.asarray(trace["recv_total"]).sum())
-        res["wasted_wire_rows"] = int(np.asarray(trace["recv_drops"]).sum())
+        # first-class recorder field since PR 10 (== recv_drops on flat
+        # routes; hierarchically it also counts post-first-hop stage cuts)
+        res["wasted_wire_rows"] = int(np.asarray(trace["wasted_wire_rows"]).sum())
+        res["wasted_trace"] = trace["wasted_wire_rows"]
+        # per-round emission clips: with wasted_trace this is the complete
+        # drop chronology of a retain-mode run — per round, every dropped
+        # row is either an emission clip or a receiver wire cut, so
+        # Σ (emit_trace + wasted_trace) must equal the queue's own drop
+        # counter (the PR-10 recorder identity, tested in test_obs.py)
+        res["emit_trace"] = trace["emit_overflow"]
     return res
 
 
@@ -328,6 +338,8 @@ def run_scenario(
     chronologies from the full-window ring.  ``health`` (optional ``(R,)``
     bool mask, constant for the burst) re-addresses traffic away from
     unhealthy ranks."""
+    from repro.obs import trace as OT
+
     ctx = _make_ctx(mesh, capacity=capacity, max_rounds=max_rounds, **cfg_kwargs)
     R = sc.num_ranks
     if ctx.num_ranks != R:
@@ -339,25 +351,45 @@ def run_scenario(
     retain = cfg.overflow == "retain"
     credit = cfg.flow == "credit"
     spec = ctx._spec
-    rfn = _make_gated_round_fn(ctx, sc) if credit else _make_round_fn(ctx, sc)
-    aux_specs = (spec,) * 4 if credit else (spec,) * 3
-    aux0 = _aux0(R) + ((jnp.asarray(_cursor0(sc)),) if credit else ())
-    drive = ctx.run_until_done(
-        rfn,
-        aux_specs=aux_specs,
+    with OT.span(
+        "chaos.run_scenario", OT.CAT_CHAOS,
+        scenario=sc.name, num_ranks=R, capacity=capacity,
+        flow=cfg.flow, overflow=cfg.overflow, exchange=cfg.exchange,
         max_rounds=max_rounds,
-        with_health=health is not None,
-    )
-    args = (_seed_queue(sc, cfg.capacity), aux0)
-    if health is not None:
-        args = args + (jnp.asarray(np.asarray(health).astype(bool)),)
-    out = drive(*args)
-    q, aux, rounds, done = out[:4]
-    rest = out[4:]
-    if retain:
-        rest = rest[1:]  # final per-lane ages — accounted via the ring here
-    ring = rest[0] if cfg.telemetry else None
-    return _result_dict(sc, q, aux, rounds, done, cfg=cfg, ring=ring)
+    ) as sp:
+        if health is not None:
+            # fault-injection record: which ranks the burst routes around
+            OT.event(
+                "chaos.health_mask", OT.CAT_CHAOS, scenario=sc.name,
+                unhealthy=[
+                    i for i, h in enumerate(np.asarray(health)) if not h
+                ],
+            )
+        rfn = _make_gated_round_fn(ctx, sc) if credit else _make_round_fn(ctx, sc)
+        aux_specs = (spec,) * 4 if credit else (spec,) * 3
+        aux0 = _aux0(R) + ((jnp.asarray(_cursor0(sc)),) if credit else ())
+        drive = ctx.run_until_done(
+            rfn,
+            aux_specs=aux_specs,
+            max_rounds=max_rounds,
+            with_health=health is not None,
+        )
+        args = (_seed_queue(sc, cfg.capacity), aux0)
+        if health is not None:
+            args = args + (jnp.asarray(np.asarray(health).astype(bool)),)
+        out = drive(*args)
+        q, aux, rounds, done = out[:4]
+        rest = out[4:]
+        if retain:
+            rest = rest[1:]  # final per-lane ages — accounted via the ring here
+        ring = rest[0] if cfg.telemetry else None
+        res = _result_dict(sc, q, aux, rounds, done, cfg=cfg, ring=ring)
+        sp.set(
+            rounds=res["rounds"], done=res["done"], drops=res["drops"],
+            delivered_total=res["delivered_total"],
+            goodput=res.get("goodput"),
+        )
+    return res
 
 
 def run_scenario_checkpointed(
@@ -392,6 +424,8 @@ def run_scenario_checkpointed(
     Returns the :func:`run_scenario` accounting dict plus ``steps`` (the
     published boundary rounds), ``preempted`` and ``ckpt_dir``.
     """
+    from repro.obs import trace as OT
+
     ctx = _make_ctx(mesh, capacity=capacity, max_rounds=max_rounds, **cfg_kwargs)
     if ctx.num_ranks != sc.num_ranks:
         raise ValueError(
@@ -410,6 +444,18 @@ def run_scenario_checkpointed(
     aux0 = _aux0(ctx.num_ranks) + (
         (jnp.asarray(_cursor0(sc)),) if credit else ()
     )
+    chaos_cm = OT.span(
+        "chaos.run_scenario_checkpointed", OT.CAT_CHAOS,
+        scenario=sc.name, num_ranks=ctx.num_ranks, capacity=capacity,
+        checkpoint_every=checkpoint_every, max_rounds=max_rounds,
+        flow=ctx.cfg.flow, overflow=ctx.cfg.overflow,
+    )
+    chaos_sp = chaos_cm.__enter__()
+    if preempt_at is not None:
+        OT.event(
+            "chaos.preempt_scheduled", OT.CAT_CHAOS,
+            scenario=sc.name, preempt_at=preempt_at,
+        )
     res = recovery.run_checkpointed(
         ctx,
         _rfn(ctx),
@@ -428,6 +474,11 @@ def run_scenario_checkpointed(
         rmesh = resume_mesh if resume_mesh is not None else mesh
         rcap = resume_capacity if resume_capacity is not None else capacity
         ctx = _make_ctx(rmesh, capacity=rcap, max_rounds=max_rounds, **cfg_kwargs)
+        OT.event(
+            "chaos.elastic_resume", OT.CAT_CHAOS, scenario=sc.name,
+            resume_ranks=ctx.num_ranks, resume_capacity=rcap,
+            elastic=(ctx.num_ranks != sc.num_ranks or rcap != capacity),
+        )
         spec = ctx._spec
         aux_like = tuple(np.zeros((ctx.num_ranks,), np.uint32) for _ in range(3))
         if credit:
@@ -460,6 +511,11 @@ def run_scenario_checkpointed(
     out["steps"] = steps
     out["preempted"] = preempted
     out["ckpt_dir"] = ckpt_dir
+    chaos_sp.set(
+        rounds=out["rounds"], done=out["done"], preempted=preempted,
+        boundaries=len(steps),
+    )
+    chaos_cm.__exit__(None, None, None)
     return out
 
 

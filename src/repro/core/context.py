@@ -232,12 +232,36 @@ class RafiContext:
         in_specs = (self._queue_out_specs(), aux_specs)
         if with_health:
             in_specs = in_specs + (P(),)
-            return self.shard(drive, in_specs=in_specs, out_specs=out_specs)
-        return self.shard(
-            lambda q0s, aux0: drive(q0s, aux0),
-            in_specs=in_specs,
-            out_specs=out_specs,
-        )
+            drive_p = self.shard(drive, in_specs=in_specs, out_specs=out_specs)
+        else:
+            drive_p = self.shard(
+                lambda q0s, aux0: drive(q0s, aux0),
+                in_specs=in_specs,
+                out_specs=out_specs,
+            )
+
+        # Observation hook (host-side only — the traced program is untouched,
+        # so the lowered HLO is bit-identical with tracing on or off): each
+        # burst invocation becomes one span carrying the drive's outcome.
+        def traced_drive(*args):
+            from repro.obs import trace as OT
+
+            if not OT.enabled():
+                return drive_p(*args)
+            with OT.span(
+                "drive.run_until_done", OT.CAT_DRIVE,
+                exchange=cfg.exchange, flow=cfg.flow, overflow=cfg.overflow,
+                max_rounds=max_rounds, num_ranks=self.num_ranks,
+            ) as sp:
+                out = drive_p(*args)
+                sp.set(rounds=out[2], done=out[3])
+            return out
+
+        # keep the jit inspection surface (tests lower the drive to audit
+        # its collective inventory; the host-side span wrapper must not
+        # hide it)
+        traced_drive.lower = drive_p.lower
+        return traced_drive
 
     # -- segmented (checkpointable) drive ------------------------------------
     def carry_specs(self, aux_specs: Any, *, accounting: bool = True):

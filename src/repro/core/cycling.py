@@ -162,6 +162,15 @@ def deliver_by_cycling(q: WorkQueue, cfg: ForwardConfig):
     genuinely full (the same receiver-admission bound as the forwarding
     path), and then it is counted in ``drops``, never silent."""
     from repro.core.termination import _vary
+    from repro.obs import trace as OT
+
+    if OT.enabled():
+        # trace-time record: the ring's hop count is static (R-1 permutes)
+        OT.event(
+            "route.deliver_by_cycling", OT.CAT_ROUTE,
+            num_ranks=cfg.num_ranks, hops=cfg.num_ranks,
+            overflow=cfg.overflow, telemetry=cfg.telemetry,
+        )
 
     absorbed = make_queue(jax.tree.map(lambda a: a[0], q.items), cfg.capacity)
 

@@ -542,10 +542,23 @@ def exchange_hierarchical(
                 st = ST.compose(*chain)(st)
             total_drops = st.drops + st.recv_drops
             if telemetry:
+                # wasted wire = every row discarded AFTER crossing a wire:
+                # the receiver-admission cut plus any stage clamp past the
+                # first hop (tiers[0] clamps pre-wire rows — not waste; a
+                # tiers[i>0] clamp cuts rows that already spent the earlier
+                # tiers' fabric).  Under retain the late stages hold instead
+                # of dropping, so their recorded stage_drops are zero and
+                # the term collapses to the receiver cut.
+                late_drops = jnp.zeros((), jnp.int32)
+                for j in tiers[1:]:
+                    late_drops = late_drops + rec.stage_drops[j]
                 rec = dataclasses.replace(
                     rec,
                     recv_total=jnp.sum(st.recv_counts).astype(jnp.int32),
                     recv_drops=st.recv_drops.astype(jnp.int32),
+                    wasted_wire_rows=(
+                        st.recv_drops.astype(jnp.int32) + late_drops
+                    ),
                 )
                 if credit:
                     return (st.out, st.recv_counts, st.new_count,

@@ -219,6 +219,16 @@ def rebalance(
     is intact — it is draining, not dead), so the lowered inventory is
     unchanged.
     """
+    from repro.obs import trace as OT
+
+    if OT.enabled():
+        # trace-time record (this runs under shard_map tracing): static
+        # routing facts only — no device values are materialisable here
+        OT.event(
+            "route.rebalance", OT.CAT_ROUTE,
+            scope=scope, exchange=cfg.exchange,
+            num_ranks=cfg.num_ranks, health_aware=health is not None,
+        )
     resident, idx, n_res = _resident_positions(q)
     if health is not None and scope != "global":
         raise ValueError(

@@ -184,11 +184,17 @@ def _drive_loop(
     (maybe simulated preemption) → next segment.  Returns the result dict,
     or ``None`` if the drive halted at a boundary (state is on disk; call
     :func:`resume_run` to continue)."""
+    from repro.obs import trace as OT
+
     R = ctx.num_ranks
     last_step = None
+    prev_health = None
     while True:
         rnd = int(np.asarray(carry["rnd"]))
         total = int(np.asarray(carry["total"]))
+        OT.event(
+            "recovery.boundary", OT.CAT_RECOVERY, round=rnd, total=total
+        )
         host_carry = jax.device_get(carry)
         conservation_check(host_carry, where=f"round {rnd}")
         if ckpt_dir is not None:
@@ -196,14 +202,36 @@ def _drive_loop(
                 ckpt_dir, rnd, host_carry, keep=keep, meta=_meta_of(ctx, rnd)
             )
             last_step = rnd
+            if OT.enabled():
+                man = ckpt.load_manifest(ckpt_dir, rnd)
+                leaves = man.get("leaves", [])
+                OT.event(
+                    "recovery.save", OT.CAT_RECOVERY, step=rnd,
+                    leaves=len(leaves),
+                    bytes=sum(
+                        int(np.prod(e["shape"]) * np.dtype(e["dtype"]).itemsize)
+                        for e in leaves
+                    ),
+                    digest=leaves[0]["sha256"][:16] if leaves else "",
+                )
         if total == 0 or rnd >= max_rounds:
             return _finalize(ctx, carry, step=last_step)
         seg_end = min(rnd + checkpoint_every, max_rounds)
         if halt_after_round is not None and seg_end > halt_after_round:
+            OT.event(
+                "recovery.preempt", OT.CAT_RECOVERY, round=rnd, step=last_step
+            )
             return None  # preempted: the boundary just saved is the restart point
-        carry = segment_p(
-            carry, np.int32(seg_end), _health_at(health, R, rnd)
-        )
+        mask = _health_at(health, R, rnd)
+        if OT.enabled() and mask is not None:
+            cur = np.asarray(mask).astype(bool).tolist()
+            if prev_health is not None and cur != prev_health:
+                OT.event(
+                    "health.transition", OT.CAT_HEALTH, round=rnd,
+                    before=prev_health, after=cur,
+                )
+            prev_health = cur
+        carry = segment_p(carry, np.int32(seg_end), mask)
 
 
 def run_checkpointed(
@@ -238,18 +266,28 @@ def run_checkpointed(
     [, "ring"], "emitted", "delivered", "step", "preempted"}`` or ``None``
     when halted.
     """
+    from repro.obs import trace as OT
+
     start_p, segment_p = ctx.checkpoint_drive_programs(
         round_fn, aux_specs=aux_specs, accounting=True
     )
     carry = start_p(
         q0_stacked, aux0, _health_at(health, ctx.num_ranks, 0)
     )
-    return _drive_loop(
-        ctx, segment_p, carry,
-        ckpt_dir=ckpt_dir, checkpoint_every=checkpoint_every,
-        max_rounds=max_rounds, health=health, keep=keep,
-        halt_after_round=halt_after_round,
-    )
+    with OT.span(
+        "recovery.run_checkpointed", OT.CAT_RECOVERY,
+        checkpoint_every=checkpoint_every, max_rounds=max_rounds,
+        num_ranks=ctx.num_ranks,
+    ) as sp:
+        res = _drive_loop(
+            ctx, segment_p, carry,
+            ckpt_dir=ckpt_dir, checkpoint_every=checkpoint_every,
+            max_rounds=max_rounds, health=health, keep=keep,
+            halt_after_round=halt_after_round,
+        )
+        sp.set(preempted=res is None,
+               rounds=None if res is None else res["rounds"])
+    return res
 
 
 def resume_run(
@@ -325,15 +363,25 @@ def resume_run(
         carry = _elastic_restore(
             old_carry, ctx, R_old=R_old, C_old=C_old, aux_restore=aux_restore
         )
+    from repro.obs import trace as OT
+
     _, segment_p = ctx.checkpoint_drive_programs(
         round_fn, aux_specs=aux_specs, accounting=True
     )
-    return _drive_loop(
-        ctx, segment_p, carry,
-        ckpt_dir=ckpt_dir, checkpoint_every=checkpoint_every,
-        max_rounds=max_rounds, health=health, keep=keep,
-        halt_after_round=halt_after_round,
-    )
+    with OT.span(
+        "recovery.resume_run", OT.CAT_RECOVERY, step=step,
+        elastic=R_old != ctx.num_ranks or C_old != cfg.capacity,
+        num_ranks=ctx.num_ranks,
+    ) as sp:
+        res = _drive_loop(
+            ctx, segment_p, carry,
+            ckpt_dir=ckpt_dir, checkpoint_every=checkpoint_every,
+            max_rounds=max_rounds, health=health, keep=keep,
+            halt_after_round=halt_after_round,
+        )
+        sp.set(preempted=res is None,
+               rounds=None if res is None else res["rounds"])
+    return res
 
 
 # ------------------------------------------------------------ elastic restore

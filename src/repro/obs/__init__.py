@@ -1,0 +1,32 @@
+"""The observation law (ISSUE 10): every law's behavior is observable from
+one artifact, at zero collective cost.
+
+Four pieces:
+
+* :mod:`repro.obs.trace` — host-side span tracer over every drive entry
+  point; Chrome/Perfetto ``trace_event`` export; ``RAFI_TRACE`` env toggle.
+* :mod:`repro.obs.metrics` — typed counter/gauge snapshots per burst from
+  already-surfaced telemetry; Prometheus text + JSON exporters.
+* :mod:`repro.obs.phases` — per-phase device timing of one forwarding round
+  for any backend (promoted from ``benchmarks/run.py --profile``).
+* :mod:`repro.obs.report` — the flight-data analyzer
+  (``python -m repro.obs.report capture.json``).
+
+``trace`` and ``metrics`` import eagerly (stdlib + telemetry only — core
+modules hook the tracer without cycles); ``phases`` and ``report`` pull in
+``repro.core`` / ``repro.roofline`` and load lazily on first attribute
+access.
+"""
+from repro.obs import metrics, trace
+
+__all__ = ["metrics", "phases", "report", "trace"]
+
+
+def __getattr__(name):
+    if name in ("phases", "report"):
+        import importlib
+
+        mod = importlib.import_module(f"repro.obs.{name}")
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

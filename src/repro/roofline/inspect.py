@@ -21,8 +21,12 @@ import re
 
 
 def top_collectives(hlo: str, k: int = 12):
+    # result shapes come in two spellings: a bare shape list (StableHLO /
+    # unoptimized HLO) or a parenthesized tuple (the optimized CPU/TPU HLO
+    # tuple-form collectives, one component per participant) — bytes are
+    # summed over every component either way
     pat = re.compile(
-        r"=\s*((?:[a-z0-9]+\[[0-9,]*\][^\s]*\s*,?\s*)+)\s*"
+        r"=\s*(\([^()]*\)|(?:[a-z0-9]+\[[0-9,]*\][^\s]*\s*,?\s*)+)\s*"
         r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|ragged-all-to-all)"
         r"(?:-start)?\("
     )

@@ -28,6 +28,16 @@ The recorded quantities, per round, per rank:
   (the PR-4 count-each-drop-exactly-once accounting, per stage).
 * ``recv_total`` / ``recv_drops`` — rows arriving at the receiver pre-clamp,
   and what the receiver-capacity compaction cut.
+* ``wasted_wire_rows`` — rows that CROSSED a wire and were then discarded:
+  the receiver-clamp cut plus, hierarchically, any stage clamp past the
+  first wire crossing (a row clamped at stage ``l > 0`` of the route already
+  spent stage-``0..l-1`` wire).  This is the PR-9 goodput ledger's waste
+  term as a first-class per-round field — the open-flow identity
+  ``drops == emit_overflow + wasted_wire_rows`` is checkable from the
+  recorder alone (previously reconstructed ad-hoc by the chaos driver and
+  bench gates from ``recv_drops``, which undercounts multi-hop routes).
+  For flat backends it equals ``recv_drops``; the ragged backend's sender
+  clamps cut rows BEFORE the wire, so its waste stays the receiver cut.
 * ``retained_rows`` / ``age_max`` — spill-and-retry observability (ISSUE 6,
   ``ForwardConfig(overflow="retain")``): rows the round RETAINED locally
   instead of dropping, and the oldest retained lane's rounds-waiting counter
@@ -105,6 +115,7 @@ class RoundStats:
     stage_drops: jax.Array   # (L,) rows the tier's §3.3 send clamp cut
     recv_total: jax.Array    # () rows arriving pre receiver clamp
     recv_drops: jax.Array    # () rows the receiver compaction cut
+    wasted_wire_rows: jax.Array  # () post-wire discards (recv + late stages)
     retained_rows: jax.Array  # () rows retained locally (overflow="retain")
     age_max: jax.Array       # () oldest retained lane's rounds waiting
     credits_granted: jax.Array  # (L,) credit allowance granted (flow="credit")
@@ -190,6 +201,7 @@ def make_stats(tiers: int, buckets: int) -> RoundStats:
         stage_drops=jnp.zeros((tiers,), jnp.int32),
         recv_total=z,
         recv_drops=z,
+        wasted_wire_rows=z,
         retained_rows=z,
         age_max=z,
         credits_granted=jnp.zeros((tiers,), jnp.int32),
@@ -209,6 +221,9 @@ def single_tier_stats(
     recv_drops: jax.Array,  # () receiver compaction drops
     credits_granted: jax.Array = None,  # () credit allowance granted
     rows_held: jax.Array = None,  # () rows the send clamp held locally
+    wasted_wire_rows: jax.Array = None,  # () post-wire discards (≠ recv_drops
+    # only where a backend discards shipped rows somewhere other than the
+    # receiver compaction — every current flat backend defaults)
 ) -> RoundStats:
     """The flat-backend capture: one tier, filled in one call.  The retain
     fields start zero — ``forward_work`` stamps them after the merge (the
@@ -222,6 +237,9 @@ def single_tier_stats(
         stage_drops=stage_drops.astype(jnp.int32)[None],
         recv_total=recv_total.astype(jnp.int32),
         recv_drops=recv_drops.astype(jnp.int32),
+        wasted_wire_rows=(
+            recv_drops if wasted_wire_rows is None else wasted_wire_rows
+        ).astype(jnp.int32),
         retained_rows=z,
         age_max=z,
         credits_granted=(
@@ -322,6 +340,10 @@ def summarize(ring: StatsRing, *, tier_capacities: Tuple[int, ...]) -> Dict:
         "stage_drops": stage_drops,
         "recv_total_max": int(np.asarray(ring.stats.recv_total).max()),
         "recv_drops": recv_drops,
+        # the goodput ledger's waste term (rows shipped then discarded) —
+        # first-class so `drops == emit_overflow + wasted_wire_rows` is
+        # checkable from the recorder alone on open-flow overload runs
+        "wasted_wire_rows": int(np.asarray(ring.stats.wasted_wire_rows).sum()),
         "drops": int(stage_drops.sum()) + recv_drops,
         # spill-and-retry pressure (zero under overflow="drop"): total
         # retained row-rounds in the window, and the oldest wait observed —
@@ -383,6 +405,7 @@ def ring_trace(ring: StatsRing) -> Dict:
         "age_max": per_round(ring.stats.age_max, np.max),
         "recv_total": per_round(ring.stats.recv_total, np.sum),
         "recv_drops": per_round(ring.stats.recv_drops, np.sum),
+        "wasted_wire_rows": per_round(ring.stats.wasted_wire_rows, np.sum),
         "emit_overflow": per_round(ring.stats.emit_overflow, np.sum),
     }
 

@@ -232,29 +232,43 @@ def autotune_forward(
             "autotune needs ForwardConfig(telemetry=True) — the controller "
             "plans from the recorded StatsRing"
         )
+    from repro.obs import trace as OT
+
     steps: List[TuneStep] = []
     converged = False
-    for burst in range(max_bursts):
-        burst_drops, ring = run_burst(cfg)
-        summary = TS.summarize(ring, tier_capacities=TS.tier_capacities(cfg))
-        drops = int(summary["drops"] if burst_drops is None else burst_drops)
-        retained = int(summary.get("retained_rows", 0))
-        planned = plan_capacities(summary, cfg, policy=policy, bounds=bounds)
-        cur_caps = TS.tier_capacities(cfg)
-        new_caps = TS.tier_capacities(planned)
-        steps.append(
-            TuneStep(
-                burst=burst,
-                capacities=cur_caps,
-                planned=new_caps,
-                drops=drops,
-                demand_max=tuple(int(d) for d in summary["demand_max"]),
-                rounds=int(summary["rounds"]),
-                retained=retained,
+    with OT.span(
+        "tune.autotune_forward", OT.CAT_TUNE,
+        max_bursts=max_bursts, exchange=cfg.exchange,
+    ) as sp:
+        for burst in range(max_bursts):
+            burst_drops, ring = run_burst(cfg)
+            summary = TS.summarize(ring, tier_capacities=TS.tier_capacities(cfg))
+            drops = int(summary["drops"] if burst_drops is None else burst_drops)
+            retained = int(summary.get("retained_rows", 0))
+            planned = plan_capacities(summary, cfg, policy=policy, bounds=bounds)
+            cur_caps = TS.tier_capacities(cfg)
+            new_caps = TS.tier_capacities(planned)
+            if new_caps != cur_caps:
+                # the observation law's re-plan record: old → new capacities
+                OT.event(
+                    "tune.replan", OT.CAT_TUNE, burst=burst,
+                    old=list(cur_caps), new=list(new_caps),
+                    drops=drops, retained=retained,
+                )
+            steps.append(
+                TuneStep(
+                    burst=burst,
+                    capacities=cur_caps,
+                    planned=new_caps,
+                    drops=drops,
+                    demand_max=tuple(int(d) for d in summary["demand_max"]),
+                    rounds=int(summary["rounds"]),
+                    retained=retained,
+                )
             )
-        )
-        if drops == 0 and retained == 0 and new_caps == cur_caps:
-            converged = True
-            break
-        cfg = planned
+            if drops == 0 and retained == 0 and new_caps == cur_caps:
+                converged = True
+                break
+            cfg = planned
+        sp.set(bursts=len(steps), converged=converged)
     return cfg, TuneReport(steps=steps, converged=converged)

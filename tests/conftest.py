@@ -66,6 +66,21 @@ def pytest_configure(config):
     )
     config.addinivalue_line(
         "markers",
+        "obs: exercises the ISSUE-10 observation law (repro.obs) — host-side "
+        "span tracing, metrics export, and the flight-data analyzer.  The "
+        "marker also turns the ambient tracer ON via RAFI_TRACE=1 (the env "
+        "toggle mirroring RAFI_PALLAS_INTERPRET), so marked tests run every "
+        "drive entry point with its trace hooks live.  Part of tier-1; CI "
+        "can select with `-m obs`.",
+    )
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-minute end-to-end runs (the quickstart subprocess "
+        "smoke test).  Part of tier-1; deselect locally with `-m 'not slow'` "
+        "when iterating.",
+    )
+    config.addinivalue_line(
+        "markers",
         "pipeline: exercises the ISSUE-8 overlap law — micro-shard pipelined "
         "forwarding (``ForwardConfig.pipeline_shards``) built on the stage-"
         "graph exchange layer (repro.core.stages).  Placement must stay "
@@ -81,6 +96,23 @@ def _pallas_interpret_toggle(request, monkeypatch):
     ``repro.kernels.default_interpret`` consults (the CI toggle)."""
     if request.node.get_closest_marker("pallas_interpret"):
         monkeypatch.setenv("RAFI_PALLAS_INTERPRET", "1")
+
+
+@pytest.fixture(autouse=True)
+def _rafi_trace_toggle(request, monkeypatch):
+    """Honour the ``obs`` marker via the ``RAFI_TRACE`` env toggle that
+    ``repro.obs.trace`` consults lazily (mirrors ``RAFI_PALLAS_INTERPRET``):
+    marked tests run with the ambient tracer installed; teardown uninstalls
+    it and restores the lazy env check so other tests stay untraced."""
+    if not request.node.get_closest_marker("obs"):
+        yield
+        return
+    from repro.obs import trace as OT
+
+    monkeypatch.setenv(OT.ENV_VAR, "1")
+    monkeypatch.setattr(OT, "_ENV_CHECKED", False)
+    yield
+    OT.uninstall()
 
 
 @pytest.fixture(scope="session")

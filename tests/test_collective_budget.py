@@ -644,6 +644,100 @@ def test_credit_adds_only_the_widened_count_column(request, fixture, axes, kw):
     assert widened == len(sizes)  # one widened count collective per tier
 
 
+# ----------------------------------------------- obs budget (ISSUE 10)
+_OBS_CASES = {
+    "padded": ("mesh8", dict(exchange="padded")),
+    "onehot": ("mesh8", dict(exchange="onehot")),
+    "hier3": (
+        "mesh_pods222", dict(exchange="hierarchical", level_sizes=(2, 2, 2),
+                             level_capacities=(8, 8, 8)),
+    ),
+    "ragged": ("mesh8", dict(exchange="ragged")),
+}
+
+
+@pytest.mark.obs
+@pytest.mark.parametrize("case", sorted(_OBS_CASES))
+def test_tracing_leaves_lowering_bit_identical(request, case):
+    """ISSUE 10 acceptance: the observation law is HOST-only — with the
+    ambient tracer installed (the ``obs`` marker turns it on through the
+    ``RAFI_TRACE`` env toggle, so this exercises the real activation path),
+    the lowered program of a forwarding round is BYTE-identical to the
+    untraced one on every backend, and in particular the full collective
+    inventory (kind, bytes, replica groups) is bit-identical.  Tracing can
+    never change what the fabric ships — zero collective cost by proof, not
+    by promise."""
+    from repro.obs import trace as OT
+
+    fixture, kw = _OBS_CASES[case]
+    if case == "ragged" and not compat.HAS_RAGGED_ALL_TO_ALL:
+        pytest.skip("installed JAX has no lax.ragged_all_to_all")
+    mesh = request.getfixturevalue(fixture)
+    axes = "data" if fixture == "mesh8" else ("pod", "node", "device")
+    cfg = ForwardConfig(axes, R, CAP, **kw)
+    lower = _lower_one_round if fixture == "mesh8" else _lower_hier_round
+    assert OT.enabled(), "RAFI_TRACE toggle did not install the tracer"
+    on = lower(mesh, cfg)
+    OT.uninstall()
+    off = lower(mesh, cfg)
+    assert on == off, f"{case}: tracing changed the lowered StableHLO"
+    assert collective_ops(on, with_groups=True) == collective_ops(
+        off, with_groups=True
+    )
+
+
+@pytest.mark.obs
+def test_traced_metered_drive_leaves_lowering_bit_identical(mesh8):
+    """The full-stack version of the guard: the complete ``run_until_done``
+    drive (telemetry on, so the metrics source rides the carry) lowers
+    byte-identically with the tracer installed vs not — the span hooks live
+    in the host wrapper, never inside the jitted program, and the metrics
+    snapshot is derived post-hoc from host-surfaced values."""
+    import numpy as np
+
+    from repro.core import DISCARD, WorkQueue
+    from repro.core.context import RafiContext
+    from repro.obs import trace as OT
+
+    def lower_drive():
+        ctx = RafiContext(
+            mesh8, ray_proto(), capacity=CAP, peer_capacity=8,
+            exchange="padded", telemetry=True, telemetry_window=8,
+        )
+
+        def round_fn(q_in, acc, rnd):
+            me = jax.lax.axis_index("data")
+            out = make_queue(ray_proto(), CAP)
+            out = enqueue(
+                out, make_rays(4), ((me + rnd) % R) * jnp.ones(4, jnp.int32),
+                (jnp.arange(4) >= 0) & (rnd < 2),
+            )
+            return out, acc + q_in.count
+
+        q0 = WorkQueue(
+            items=jax.tree.map(
+                lambda a: np.zeros((R * CAP,) + a.shape, a.dtype), ray_proto()
+            ),
+            dest=np.full((R * CAP,), DISCARD, np.int32),
+            count=np.zeros((R,), np.int32),
+            drops=np.zeros((R,), np.int32),
+        )
+        aux0 = np.zeros((R,), np.int32)
+        drive = ctx.run_until_done(
+            round_fn, aux_specs=P("data"), max_rounds=16
+        )
+        return drive.lower(q0, aux0).as_text()
+
+    assert OT.enabled()
+    on = lower_drive()
+    OT.uninstall()
+    off = lower_drive()
+    assert on == off, "tracing changed the lowered drive program"
+    assert collective_ops(on, with_groups=True) == collective_ops(
+        off, with_groups=True
+    )
+
+
 # The pre-refactor (PR 7) lowered HLO of one forward round, snapshotted with
 # THIS harness's kernel before exchange.py was rebuilt on the stage graph.
 # ``pipeline_shards=1`` must reproduce it byte for byte — the stage-graph

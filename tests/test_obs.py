@@ -1,0 +1,475 @@
+"""ISSUE 10 — the observation law (``repro.obs``).
+
+Host-side span tracing, typed metrics export, and the cross-law flight-data
+analyzer.  The load-bearing claims, each checked against independent
+evidence:
+
+* **Tracing is host-only and opt-in** — the module-level hooks are no-ops
+  until a tracer is installed (explicitly via ``trace.capture()`` or
+  ambiently via ``RAFI_TRACE``, exercised through the ``obs`` marker), and
+  the HLO bit-identity half of the law lives in
+  ``test_collective_budget.py``.
+* **Every drive entry point records its span** — a chaos burst, a
+  checkpointed+preempted recovery drive, and the route layers all leave
+  their typed events in one capture, and the merged Perfetto export is
+  structurally valid ``trace_event`` JSON.
+* **The recorder's per-round drop chronology is complete** (satellite 2):
+  on both PR-9 overload scenarios the queue's own drop counter — an
+  accounting system independent of the telemetry ring — equals
+  ``Σ (emit_trace + wasted_trace)``, i.e. per round every dropped row is
+  either an emission clip or a receiver wire cut; credit flow zeroes the
+  waste column elementwise.
+* **The analyzer reproduces the PR-9 ledger from the capture alone** — the
+  incast-collapse open/credit pair round-trips through
+  ``save_capture``/``load_capture``; ``analyze`` re-derives the exact
+  goodput and wasted-wire numbers and flags the open run (and only it) as
+  degraded; the CLI exit code counts degraded runs.
+"""
+import json
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.chaos import incast_collapse, run_scenario, sustained_overload
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
+
+R = 8
+
+# The PR-9 overload gauntlet points (see test_backpressure.OVERLOAD).
+OVERLOAD = [
+    (sustained_overload, 16, 4),
+    (incast_collapse, 32, 8),
+]
+_IDS = ["sustained", "incast"]
+
+
+# ------------------------------------------------------------- tracer core
+def test_module_hooks_are_noops_when_disabled(monkeypatch):
+    monkeypatch.delenv(OT.ENV_VAR, raising=False)
+    monkeypatch.setattr(OT, "_ENV_CHECKED", True)
+    OT.uninstall()
+    assert not OT.enabled() and OT.current() is None
+    OT.event("never.recorded", OT.CAT_DRIVE, x=1)  # must not raise
+    with OT.span("never.recorded") as sp:
+        assert sp.set(y=2) is sp  # the no-op span chains like a real one
+
+
+@pytest.mark.obs
+def test_env_toggle_installs_ambient_tracer():
+    """The ``obs`` marker sets RAFI_TRACE=1 through the conftest fixture —
+    the lazy env check must install a live tracer, and module-level hooks
+    must record into it."""
+    assert OT.enabled()
+    tr = OT.current()
+    n0 = len(tr.events)
+    OT.event("toggle.probe", OT.CAT_DRIVE, via="env")
+    assert len(tr.events) == n0 + 1
+    assert tr.select(name="toggle.probe")[0]["args"]["via"] == "env"
+
+
+def test_capture_span_event_select_and_restore():
+    with OT.capture() as outer:
+        OT.event("a", OT.CAT_CHAOS, k=1)
+        with OT.capture() as inner:  # nested capture shadows, then restores
+            OT.event("b", OT.CAT_TUNE)
+            assert OT.current() is inner
+        assert OT.current() is outer
+        with OT.span("s", OT.CAT_DRIVE, cfg="x") as sp:
+            sp.set(result=7)
+    assert not OT.enabled()
+    assert [e["name"] for e in outer.events] == ["a", "s"]
+    (ev,) = outer.select(cat=OT.CAT_CHAOS)
+    assert ev["ph"] == "i" and ev["args"] == {"k": 1}
+    (sp_ev,) = outer.select(name="s")
+    assert sp_ev["ph"] == "X" and sp_ev["dur"] >= 0
+    assert sp_ev["args"] == {"cfg": "x", "result": 7}
+    assert [e["name"] for e in inner.events] == ["b"]
+
+
+def test_tracer_ring_is_bounded():
+    tr = OT.Tracer(max_events=4)
+    for i in range(10):
+        tr.event(f"e{i}")
+    assert [e["name"] for e in tr.events] == ["e6", "e7", "e8", "e9"]
+
+
+def test_perfetto_export_structure(tmp_path):
+    with OT.capture() as tr:
+        with OT.span("burst", OT.CAT_DRIVE, rounds=3):
+            OT.event("fault", OT.CAT_CHAOS, mask=[0, 1])
+        tr.phase_event("marshal", ts_us=1.0, dur_us=5.0, rank=2, tier=1)
+    doc = tr.to_perfetto()
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    rows = doc["traceEvents"]
+    by_ph = {}
+    for r in rows:
+        by_ph.setdefault(r["ph"], []).append(r)
+    assert {r["name"] for r in by_ph["X"]} == {"burst", "marshal"}
+    (inst,) = by_ph["i"]
+    assert inst["s"] == "t" and inst["args"]["mask"] == [0, 1]
+    # track metadata: one process row per rank, one thread row per tier
+    meta = {(r["name"], r["pid"], r["tid"]) for r in by_ph["M"]}
+    assert ("process_name", 2, 0) in meta and ("thread_name", 2, 1) in meta
+    # the whole document is JSON-serializable and save() round-trips it
+    path = tr.save(str(tmp_path / "trace.json"))
+    assert json.loads(open(path).read()) == json.loads(json.dumps(doc))
+
+
+# ------------------------------------------------------- drive entry spans
+@pytest.mark.obs
+@pytest.mark.chaos
+def test_chaos_burst_records_span_and_health_mask(mesh8):
+    sc = sustained_overload(R)
+    tr = OT.current()
+    health = np.ones((R,), bool)
+    health[3] = False
+    run_scenario(
+        mesh8, sc, capacity=64, max_rounds=64, overflow="retain",
+        health=health,
+    )
+    (sp,) = tr.select(name="chaos.run_scenario")
+    assert sp["cat"] == OT.CAT_CHAOS and sp["ph"] == "X"
+    a = sp["args"]
+    assert a["scenario"] == sc.name and a["flow"] == "open"
+    assert a["done"] is True and a["rounds"] >= 1
+    assert a["delivered_total"] > 0
+    (hm,) = tr.select(name="chaos.health_mask")
+    assert hm["args"]["unhealthy"] == [3]
+
+
+@pytest.mark.obs
+def test_route_layers_record_trace_time_events(mesh8):
+    """``rebalance`` and ``deliver_by_cycling`` run INSIDE shard_map, where
+    host wall-clock spans are meaningless — they record one trace-time
+    event each (static routing facts only), captured while the program is
+    being traced."""
+    import dataclasses as DC
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import compat
+    from repro.core import (
+        DISCARD, ForwardConfig, WorkQueue, deliver_by_cycling, rebalance,
+        work_item,
+    )
+
+    @work_item
+    @DC.dataclass
+    class Item:
+        val: jax.Array
+
+    CAP = 16
+    cfg = ForwardConfig("data", R, CAP, exchange="padded")
+
+    def kern(_x):
+        me = jax.lax.axis_index("data")
+        lane = jnp.arange(CAP, dtype=jnp.int32)
+        q = WorkQueue(
+            items=Item(val=lane.astype(jnp.float32)),
+            dest=jnp.where(lane < 4, (me + 1) % R, DISCARD).astype(jnp.int32),
+            count=jnp.int32(4), drops=jnp.zeros((), jnp.int32),
+        )
+        nq, _total = rebalance(q, cfg)
+        absorbed, total = deliver_by_cycling(nq, cfg)
+        return absorbed.count[None], total
+
+    with OT.capture() as tr:
+        jax.jit(compat.shard_map(
+            kern, mesh=mesh8, in_specs=P("data"), out_specs=(P("data"), P()),
+        )).lower(jnp.arange(8.0))
+    (rb,) = tr.select(name="route.rebalance")
+    assert rb["cat"] == OT.CAT_ROUTE and rb["args"]["num_ranks"] == R
+    (cy,) = tr.select(name="route.deliver_by_cycling")
+    assert cy["args"]["hops"] == R
+
+
+@pytest.mark.obs
+@pytest.mark.recovery
+def test_checkpointed_drive_records_recovery_events(mesh8, tmp_path):
+    from repro.chaos import run_scenario_checkpointed
+    from repro.chaos.scenarios import rotating_hotspot
+
+    sc = rotating_hotspot(num_ranks=R, rounds=8, emits_per_round=2, seed=0)
+    tr = OT.current()
+    res = run_scenario_checkpointed(
+        mesh8, sc, capacity=64, ckpt_dir=tmp_path, checkpoint_every=2,
+        preempt_at=4, max_rounds=64,
+    )
+    assert res["done"]
+    names = {e["name"] for e in tr.events}
+    assert {
+        "chaos.run_scenario_checkpointed", "chaos.preempt_scheduled",
+        "chaos.elastic_resume", "recovery.run_checkpointed",
+        "recovery.boundary", "recovery.save", "recovery.preempt",
+        "recovery.resume_run",
+    } <= names
+    saves = tr.select(name="recovery.save")
+    assert all(s["args"]["bytes"] > 0 for s in saves)
+    assert all(len(s["args"]["digest"]) == 16 for s in saves)
+    (top,) = tr.select(name="chaos.run_scenario_checkpointed")
+    assert top["args"]["preempted"] is True
+
+
+# ------------------------------------------------------------ metrics side
+def _toy_summary():
+    """A minimal-but-complete ``telemetry.summarize`` dict (flat route)."""
+    return {
+        "tier_capacities": (4,), "buckets": 8, "rounds": 3,
+        "window_filled": 3,
+        "demand_hist": np.zeros((1, 8), np.int64),
+        "demand_max": np.array([5]), "demand_total": np.array([12]),
+        "sent_rows": np.array([10]), "stage_drops": np.array([1]),
+        "recv_total_max": 6, "recv_drops": 2, "wasted_wire_rows": 2,
+        "drops": 3, "retained_rows": 4, "age_max": 2,
+        "credits_granted": np.array([7]), "rows_held": np.array([1]),
+        "emit_overflow": 5, "goodput": 0.75,
+    }
+
+
+def test_metrics_from_summary_and_exports():
+    ms = OM.from_summary(_toy_summary())
+    d = OM.metrics_dict(ms)
+    assert d["rafi_wasted_wire_rows_total"] == 2
+    assert d["rafi_goodput_ratio"] == 0.75
+    assert d["rafi_demand_max_rows{tier=0}"] == 5
+    assert d["rafi_tier_capacity_rows{tier=0}"] == 4
+    text = OM.to_prometheus(ms)
+    assert "# TYPE rafi_goodput_ratio gauge" in text
+    assert "# TYPE rafi_wasted_wire_rows_total counter" in text
+    assert 'rafi_demand_max_rows{tier="0"} 5' in text
+    # deterministic: same metrics render byte-identically (golden property)
+    assert text == OM.to_prometheus(OM.from_summary(_toy_summary()))
+    back = json.loads(OM.to_json(ms))
+    assert {m["name"] for m in back} == {m.name for m in ms}
+
+
+def test_checkpoint_metrics_derive_bytes_from_shapes():
+    manifest = {
+        "step": 6,
+        "leaves": [
+            {"file": "a.npy", "shape": [4, 2], "dtype": "int32"},
+            {"file": "b.npy", "shape": [3], "dtype": "float64"},
+        ],
+    }
+    d = OM.metrics_dict(OM.checkpoint_metrics(manifest))
+    assert d['rafi_checkpoint_bytes{step=6}'] == 4 * 2 * 4 + 3 * 8
+    assert d['rafi_checkpoint_leaves{step=6}'] == 2
+
+
+def test_round_stats_wasted_wire_defaults_to_recv_drops():
+    """Satellite 2, unit level: the flat single-tier recorder stamps
+    ``wasted_wire_rows == recv_drops`` unless a route provides the wider
+    (hierarchical) accounting."""
+    import jax.numpy as jnp
+
+    from repro.telemetry import stats as TS
+
+    st = TS.single_tier_stats(
+        jnp.array([3]), 4, 8, sent_rows=jnp.array(3),
+        stage_drops=jnp.zeros((), jnp.int32), recv_total=jnp.array(6),
+        recv_drops=jnp.array(2),
+    )
+    assert int(st.wasted_wire_rows) == 2
+    st2 = TS.single_tier_stats(
+        jnp.array([3]), 4, 8, sent_rows=jnp.array(3),
+        stage_drops=jnp.zeros((), jnp.int32), recv_total=jnp.array(6),
+        recv_drops=jnp.array(2), wasted_wire_rows=jnp.array(5),
+    )
+    assert int(st2.wasted_wire_rows) == 5
+
+
+# ------------------------------------- satellite 2: per-round drop ledger
+@pytest.mark.obs
+@pytest.mark.chaos
+@pytest.mark.parametrize("factory,cap,S", OVERLOAD, ids=_IDS)
+@pytest.mark.parametrize("flow", ["open", "credit"])
+def test_per_round_drop_chronology_is_complete(mesh8, factory, cap, S, flow):
+    """``drops == Σ (emit_trace + wasted_trace)``: the queue's drop counter
+    (maintained by the enqueue path, independent of the telemetry ring)
+    must be fully attributed, round by round, by the recorder's two
+    per-round columns — emission clips and receiver wire cuts.  Credit flow
+    never wastes wire, so its waste column is zero ELEMENTWISE, not just in
+    total."""
+    sc = factory(R)
+    res = run_scenario(
+        mesh8, sc, capacity=cap, peer_capacity=S, overflow="retain",
+        flow=flow, max_rounds=256,
+    )
+    emit_t = np.asarray(res["emit_trace"], np.int64)
+    waste_t = np.asarray(res["wasted_trace"], np.int64)
+    # one chronology slot per recorded round (the recorder may hold a few
+    # trailing all-zero slots past the final round)
+    assert emit_t.shape == waste_t.shape and emit_t.size >= res["rounds"]
+    assert not emit_t[res["rounds"]:].any()
+    assert not waste_t[res["rounds"]:].any()
+    # burst ledger closes against the independent queue counter
+    assert res["drops"] == int(emit_t.sum() + waste_t.sum())
+    # the recorder's own totals are the column sums
+    assert res["emit_overflow"] == int(emit_t.sum())
+    assert res["wasted_wire_rows"] == int(waste_t.sum())
+    if flow == "credit":
+        assert not waste_t.any(), waste_t  # zero waste per round
+        assert res["goodput"] == 1.0
+    else:
+        assert waste_t.sum() > 0  # both overload points waste wire openly
+        assert (waste_t >= 0).all() and (emit_t >= 0).all()
+
+
+@pytest.mark.obs
+@pytest.mark.chaos
+def test_hierarchical_wasted_wire_counts_late_stage_cuts(mesh_nodes24):
+    """On a tiered drop-mode route the first-class ``wasted_wire_rows`` is
+    WIDER than the receiver cut: a row clamped at any post-first-hop stage
+    already crossed a fabric, so the recorder attributes it to wasted wire
+    on top of ``recv_drops``.  The flat-route identity loosens to an
+    inequality here — the queue's drop counter additionally includes the
+    tier-0 pre-wire clamp, which is NOT waste (those rows never shipped)."""
+    sc = sustained_overload(R)
+    res = run_scenario(
+        mesh_nodes24, sc, capacity=16, max_rounds=256,
+        axis_name=("node", "device"), exchange="hierarchical",
+        level_capacities=(4, 4), overflow="drop",
+    )
+    emit_t = np.asarray(res["emit_trace"], np.int64)
+    waste_t = np.asarray(res["wasted_trace"], np.int64)
+    assert res["wasted_wire_rows"] == int(waste_t.sum()) > 0
+    # late-stage cuts are attributed: waste strictly exceeds the recv cut
+    assert res["wasted_wire_rows"] > res["recv_drops"] >= 0
+    # every dropped row is an emission clip, counted waste, or a tier-0
+    # pre-wire clamp — so the queue counter bounds the chronology from above
+    assert res["drops"] >= int(emit_t.sum() + waste_t.sum())
+    assert res["emit_overflow"] == int(emit_t.sum())
+
+
+# ------------------------------------------------- flight-data analyzer
+def _incast_captures(mesh8):
+    from repro.obs import report as OR
+
+    sc = incast_collapse(R)
+    runs, results = [], {}
+    for flow in ("open", "credit"):
+        with OT.capture():
+            res = run_scenario(
+                mesh8, sc, capacity=32, peer_capacity=8, overflow="retain",
+                flow=flow, max_rounds=256,
+            )
+        results[flow] = res
+        runs.append(OR.chaos_capture(
+            f"{sc.name}_{flow}", res, flow=flow, tier_capacities=(8,),
+            capacity=32,
+        ))
+    return sc, runs, results
+
+
+@pytest.mark.obs
+@pytest.mark.chaos
+@pytest.mark.backpressure
+def test_flight_report_reproduces_pr9_ledger(mesh8, tmp_path, capsys):
+    """ISSUE 10 acceptance: the analyzer, reading ONLY the round-tripped
+    capture file, re-derives the PR-9 goodput/wasted-wire numbers and flags
+    the open-flow incast run — and only it — as degraded; the CLI exits
+    with the degraded-run count."""
+    from repro.obs import report as OR
+
+    sc, runs, results = _incast_captures(mesh8)
+    path = str(tmp_path / "capture.json")
+    OR.save_capture(path, runs, meta={"source": "test_obs"})
+    report = OR.analyze(OR.load_capture(path))
+    assert report["degraded_runs"] == [f"{sc.name}_open"]
+    by_name = {r["name"]: r for r in report["runs"]}
+    for flow in ("open", "credit"):
+        r = by_name[f"{sc.name}_{flow}"]
+        assert abs(r["goodput"] - results[flow]["goodput"]) < 1e-9
+        assert r["wasted_wire_rows"] == results[flow]["wasted_wire_rows"]
+        assert all(c["ok"] for c in r["checks"]), [
+            c for c in r["checks"] if not c["ok"]
+        ]
+    open_run = by_name[f"{sc.name}_open"]
+    assert "degraded_goodput" in open_run["flags"]
+    # starvation is NOT flagged: incast is a single-sink shape by design
+    assert "starvation" not in open_run["flags"]
+    text = OR.render(report)
+    assert "DEGRADED" in text and "healthy" in text
+    # the CLI is the same analysis: exit code == number of degraded runs
+    rc = OR.main([path])
+    assert rc == 1
+    assert "flight-data report" in capsys.readouterr().out
+
+
+@pytest.mark.obs
+def test_analyzer_flags_ledger_violation(mesh8, tmp_path):
+    """Tampering with the conservation ledger must trip the watchdog — the
+    analyzer re-adds the books instead of trusting the recorded verdict."""
+    from repro.obs import report as OR
+
+    _sc, runs, _results = _incast_captures(mesh8)
+    bad = json.loads(json.dumps(runs[1]))  # the healthy credit run
+    bad["name"] = "tampered"
+    bad["ledger"]["emitted"] += 5
+    report = OR.analyze({"runs": [bad]})
+    (r,) = report["runs"]
+    assert "ledger_violation" in r["flags"] and r["degraded"]
+    assert "tampered" in report["degraded_runs"]
+
+
+# ----------------------------------------------------------- obs.phases
+@pytest.mark.obs
+@pytest.mark.parametrize(
+    "kw,want",
+    [
+        (
+            dict(exchange="padded", peer_capacity=8),
+            {"marshal", "count_collective", "payload_collective",
+             "unmarshal"},
+        ),
+        (
+            dict(exchange="padded", peer_capacity=8, pipeline_shards=2),
+            {"marshal", "count_collective", "payload_collective",
+             "unmarshal"}
+            | {f"shard{k}_{p}" for k in range(2)
+               for p in ("marshal", "payload_collective", "unmarshal")},
+        ),
+    ],
+    ids=["padded", "pipelined"],
+)
+def test_profile_phases_key_vocabulary(mesh8, kw, want):
+    from repro.core import ForwardConfig
+    from repro.obs.phases import profile_phases, tier_of_phase
+
+    from helpers import ray_proto
+
+    cfg = ForwardConfig("data", R, 64, **kw)
+    calls = []
+
+    def timeit(f, x):
+        calls.append(f)
+        return 1.0, f(x)
+
+    phase_us = profile_phases(
+        cfg, mesh8, n_emit=8, cap=64, proto=ray_proto(), timeit=timeit
+    )
+    assert set(phase_us) == want
+    assert len(calls) == len(want)  # one timed program per phase
+    assert all(tier_of_phase(k) == 0 for k in phase_us)
+
+
+@pytest.mark.obs
+def test_phases_to_perfetto_tracks():
+    from repro.obs import phases as OP
+
+    doc = OP.to_perfetto(
+        {"marshal": 10.0, "tier1_payload_collective": 20.0},
+        num_ranks=2, tag="t", t0_us=0.0,
+    )
+    rows = [r for r in doc["traceEvents"] if r["ph"] == "X"]
+    # every rank gets its own copy of the measured phase timeline
+    assert {r["pid"] for r in rows} == {0, 1}
+    # span names carry the tag prefix; tid is the phase's tier
+    tiers = {r["name"]: r["tid"] for r in rows if r["pid"] == 0}
+    assert tiers["t:marshal"] == 0 and tiers["t:tier1_payload_collective"] == 1
+    # phases are laid end to end per rank
+    starts = sorted(r["ts"] for r in rows if r["pid"] == 0)
+    assert starts == [0.0, 10.0]

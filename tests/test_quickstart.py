@@ -1,0 +1,47 @@
+"""Tier-1 smoke test for ``examples/quickstart.py`` (ISSUE 10, satellite 4).
+
+The quickstart is the repo's front door — every law gets one numbered
+section, and the script asserts its own numbers (termination sum, bit-exact
+pipelining, the backpressure goodput split, the flight report's verdict).
+Here we only have to prove it RUNS: exit 0 and every section header printed,
+in order, in a clean subprocess with the suite's own device settings (the
+parent process may carry mutated XLA_FLAGS — e.g. the roofline inspector's
+512-device CLI default — so the env is pinned explicitly)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+SECTIONS = [
+    "== 1. work-item type",
+    "== 2. per-rank round kernel",
+    "== 3. drive to distributed termination",
+    "== 4. telemetry summary",
+    "== 5. pipelined overlap, bit-exact",
+    "== 6. backpressure under sustained overload",
+    "== 7. observation law: trace export + flight-data report",
+]
+
+
+@pytest.mark.slow
+def test_quickstart_runs_clean():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "examples" / "quickstart.py")],
+        cwd=str(REPO), env=env, capture_output=True, text=True, timeout=540,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    out = proc.stdout
+    positions = [out.find(h) for h in SECTIONS]
+    assert all(p >= 0 for p in positions), f"missing headers in:\n{out}"
+    assert positions == sorted(positions), "sections out of order"
+    # the script's own final verdict line
+    assert out.rstrip().endswith("OK")
+    # the analyzer flagged exactly the open-flow run
+    assert "verdict: 1 degraded run(s) — sustained_overload_open" in out
